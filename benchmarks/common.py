@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timed emulated BFS runs + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bfs as B
+from repro.core.oracle import bfs_levels, traversed_edges
+from repro.core.partition import partition_graph
+from repro.core.types import INF_LEVEL
+from repro.graphs.rmat import pick_sources, rmat_graph
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_bfs_timed(g, pg, sources, cfg: B.BFSConfig, repeats: int = 1):
+    """Emulated multi-partition BFS; returns per-run dicts with wall time,
+    TEPS (on m/2 per Graph500), work and traffic counters."""
+    pgv = B.device_view(pg)
+    results = []
+    for src in sources:
+        st = B.init_state(pg, int(src), cfg)
+        out = B.run_bfs_emulated(pgv, st, cfg)          # compile on first call
+        jax.block_until_ready(out.level_n)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = B.run_bfs_emulated(pgv, B.init_state(pg, int(src), cfg), cfg)
+            jax.block_until_ready(out.level_n)
+        dt = (time.perf_counter() - t0) / repeats
+        levels = B.gather_levels(pg, out)
+        edges = int((levels[g.src] != INF_LEVEL).sum()) // 2
+        if int(np.asarray(out.it)[0]) <= 1:
+            continue   # Graph500 rule: skip <=1-iteration runs
+        results.append({
+            "time_s": dt,
+            "teps": edges / dt,
+            "iters": int(np.asarray(out.it)[0]),
+            "work_fwd": int(np.asarray(out.work_fwd).sum()),
+            "work_bwd": int(np.asarray(out.work_bwd).sum()),
+            "nn_sent": int(np.asarray(out.nn_sent).sum()),
+            "overflow": int(np.asarray(out.nn_overflow).sum()),
+            "delegate_rounds": int(np.asarray(out.delegate_round)[0].sum()),
+            "levels": levels,
+        })
+    return results
+
+
+def gmean(xs):
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else 0.0

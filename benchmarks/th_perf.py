@@ -1,0 +1,29 @@
+"""Paper Fig. 6 / Fig. 13: traversal rate vs degree threshold TH."""
+from __future__ import annotations
+
+from repro.core.bfs import BFSConfig
+from repro.core.partition import partition_graph
+from repro.graphs.rmat import pick_sources, rmat_graph
+
+from .common import emit, gmean, run_bfs_timed
+
+
+def run(scale: int = 12, ths=(8, 32, 64, 128, 512), p_rank: int = 2, p_gpu: int = 2,
+        n_sources: int = 2):
+    g = rmat_graph(scale, seed=2)
+    sources = pick_sources(g, n_sources, seed=3)
+    rows = []
+    for th in ths:
+        pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+        res = run_bfs_timed(g, pg, sources, BFSConfig(max_iters=48, enable_do=True))
+        teps = gmean([r["teps"] for r in res])
+        us = 1e6 * sum(r["time_s"] for r in res) / max(len(res), 1)
+        emit(f"th_perf/scale{scale}/th{th}", us,
+             f"MTEPS={teps/1e6:.2f} d={pg.d} "
+             f"work={sum(r['work_fwd']+r['work_bwd'] for r in res)}")
+        rows.append((th, teps))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

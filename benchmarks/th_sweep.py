@@ -1,0 +1,31 @@
+"""Paper Fig. 5 / Fig. 12: distribution of edge kinds and delegates vs TH."""
+from __future__ import annotations
+
+import time
+
+from repro.core.partition import edge_kind_stats
+from repro.graphs.rmat import rmat_graph
+
+from .common import emit
+
+
+def run(scale: int = 16, ths=(4, 8, 16, 32, 64, 128, 256, 512, 1024)):
+    g = rmat_graph(scale, seed=0)
+    rows = []
+    for th in ths:
+        t0 = time.perf_counter()
+        s = edge_kind_stats(g, th)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"th_sweep/scale{scale}/th{th}", dt,
+            f"delegates={s['frac_delegates']:.4f} nn={s['frac_nn']:.4f} "
+            f"nd={s['frac_nd']:.4f} dd={s['frac_dd']:.4f}")
+        rows.append(s)
+    # paper invariants: delegates and dd shrink with TH, nn grows with TH
+    assert rows[0]["frac_delegates"] > rows[-1]["frac_delegates"]
+    assert rows[0]["frac_nn"] < rows[-1]["frac_nn"]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig. 9: weak scaling -- fixed graph size per partition, growing p.
+
+Emulated partitions on CPU measure the *work/communication scaling*, which
+is what the paper's argument rests on: per-partition traversal work should
+stay ~flat and total comm volume should grow ~log(p) for delegates +
+proportionally for nn cut edges."""
+from __future__ import annotations
+
+import math
+
+from repro.core.bfs import BFSConfig
+from repro.core.partition import partition_graph
+from repro.graphs.rmat import pick_sources, rmat_graph
+
+from .common import emit, gmean, run_bfs_timed
+
+
+def run(scale_per_part: int = 9, ps=(1, 2, 4, 8), th: int = 32):
+    rows = []
+    for p in ps:
+        scale = scale_per_part + int(math.log2(p))
+        g = rmat_graph(scale, seed=6)
+        pg = partition_graph(g, th=th, p_rank=p, p_gpu=1)
+        res = run_bfs_timed(g, pg, pick_sources(g, 2, seed=7),
+                            BFSConfig(max_iters=48, enable_do=True))
+        work_pp = sum(r["work_fwd"] + r["work_bwd"] for r in res) / max(len(res), 1) / p
+        teps = gmean([r["teps"] for r in res])
+        us = 1e6 * sum(r["time_s"] for r in res) / max(len(res), 1)
+        # modeled comm (paper Section V): delegate rounds * d bytes + nn sent * 4
+        comm = sum(r["delegate_rounds"] for r in res) / max(len(res), 1) * pg.d / 4 \
+            + sum(r["nn_sent"] for r in res) / max(len(res), 1) * 4
+        emit(f"weak_scaling/p{p}/scale{scale}", us,
+             f"MTEPS={teps/1e6:.2f} work_per_part={work_pp:.0f} comm_bytes={comm:.0f}")
+        rows.append((p, work_pp, comm))
+    # weak-scaling: per-partition work stays within ~2.5x over 8x more parts
+    assert rows[-1][1] < 2.5 * rows[0][1], rows
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""LM serving: prefill a batch of prompts, then decode with the KV cache
+(ring buffers on sliding-window layers -- the gemma3-style hybrid pattern).
+
+    PYTHONPATH=src python examples/lm_serving.py [--tokens 32]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro.configs import get_arch
+    from repro.models import lm as L
+    from repro.models.common import materialize
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch("gemma3-1b").smoke   # reduced hybrid local/global config
+    params = materialize(L.lm_param_specs(cfg), 0)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    max_seq = args.prompt_len + args.tokens
+
+    prefill = jax.jit(lambda p, t: L.prefill(cfg, p, t, max_seq=max_seq))
+    decode = jax.jit(lambda p, c, t, q: L.decode_step(cfg, p, c, t, q))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: batch={args.batch} len={args.prompt_len} "
+          f"{t_prefill*1e3:.1f} ms ({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        logits_d, cache = decode(params, cache, tok, jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits_d, -1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    out = np.stack([np.asarray(t) for t in generated], 1)
+    print(f"decode: {args.tokens} steps x batch {args.batch}: {dt*1e3:.1f} ms "
+          f"({args.batch*args.tokens/dt:.0f} tok/s)")
+    print("sample continuations (token ids):")
+    for b in range(args.batch):
+        print(f"  [{b}] {out[b, :12].tolist()} ...")
+    # greedy decode is deterministic: re-running prefill+1 step matches
+    logits2, cache2 = prefill(params, prompts)
+    assert bool(jnp.all(jnp.argmax(logits2[:, -1], -1).astype(jnp.int32) == generated[0]))
+    print("determinism check: OK")
+
+
+if __name__ == "__main__":
+    main()

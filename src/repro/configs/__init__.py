@@ -1,0 +1,1 @@
+from .base import ArchSpec, all_archs, get_arch  # noqa: F401

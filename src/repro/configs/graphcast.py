@@ -1,0 +1,21 @@
+"""graphcast: encoder-processor-decoder mesh GNN, 16L d_hidden=512,
+mesh_refinement=6, n_vars=227. [arXiv:2212.12794; unverified]"""
+from repro.configs.base import ArchSpec, GNN_SHAPES, register
+from repro.models.gnn import GraphCastConfig
+
+
+def model_for_shape(shape: dict) -> GraphCastConfig:
+    return GraphCastConfig(name="graphcast", n_layers=16, d_hidden=512,
+                           n_vars=shape.get("d_feat", 227), mesh_refinement=6)
+
+
+SMOKE = GraphCastConfig(name="graphcast-smoke", n_layers=2, d_hidden=16, n_vars=5,
+                        mesh_refinement=2)
+
+CONFIG = register(ArchSpec(
+    name="graphcast", family="gnn", model=model_for_shape, smoke=SMOKE,
+    shapes=GNN_SHAPES, optimizer="adamw",
+    grad_accum={},
+    notes="multimesh coarse-level hubs are high-degree -> delegates engage "
+          "there; n_vars plays the d_feat role on the generic graph shapes",
+))

@@ -1,0 +1,109 @@
+"""Communication model (paper Section V), in JAX collectives.
+
+Two classes of traffic, exactly as the paper prescribes:
+
+* **delegates** -- visited status / levels combined with a *global reduction*
+  (``lax.pmin`` over the partition axes ≙ the paper's hierarchical
+  MPI_(I)AllReduce of bitmasks; element-wise min over levels is the OR of
+  "visited" plus depth information).
+* **normal vertices** -- newly visited vertices of cutting nn edges exchanged
+  *point-to-point* (binned fixed-capacity ``lax.all_to_all`` ≙ MPI_Isend /
+  Irecv; the fixed per-peer capacity is the static-shape adaptation, with
+  overflow surfaced as a counter instead of silently dropped).
+
+The same functions run under ``jax.vmap(axis_name=...)`` for single-device
+emulation and under ``jax.shard_map`` on a real mesh.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisNames = Sequence[str] | str
+
+
+def delegate_allreduce_min(cand: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global min-reduction of delegate level candidates (bitmask-OR analog)."""
+    return lax.pmin(cand, axis_names)
+
+
+def any_reduce(flag: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global OR of a scalar boolean."""
+    return lax.pmax(flag.astype(jnp.int32), axis_names) > 0
+
+
+def bin_by_owner(
+    owner: jnp.ndarray,
+    local: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    p: int,
+    cap: int,
+    uniquify: bool = False,
+):
+    """Group active destination ids into per-owner-partition bins.
+
+    ``owner``/``local`` are the pre-split int32 destination coordinates
+    (Algorithm 1's layout, computed host-side at partition time -- TPUs have
+    no 64-bit lanes, DESIGN.md Section 3). Returns (buffer [p, cap] int32 of
+    local ids, -1 padded; overflow count; sent count)."""
+    local = local.astype(jnp.int32)
+    key = jnp.where(active, owner.astype(jnp.int32), jnp.int32(p))
+
+    order = jnp.lexsort((local, key))
+    sk = key[order]
+    sl = local[order]
+
+    if uniquify:
+        # drop duplicate (owner, local) pairs after the sort
+        dup = (sk[1:] == sk[:-1]) & (sl[1:] == sl[:-1])
+        keep = jnp.concatenate([jnp.ones((1,), bool), ~dup])
+        sk = jnp.where(keep, sk, jnp.int32(p))
+        # re-sort the dropped entries to the end, preserving run order
+        order2 = jnp.lexsort((sl, sk))
+        sk = sk[order2]
+        sl = sl[order2]
+
+    # position of each element within its owner run
+    run_start = jnp.searchsorted(sk, sk, side="left")
+    pos = jnp.arange(sk.shape[0], dtype=jnp.int32) - run_start.astype(jnp.int32)
+    is_real = sk < p
+    in_cap = is_real & (pos < cap)
+    sent = jnp.sum(in_cap.astype(jnp.int32))
+    overflow = jnp.sum(is_real.astype(jnp.int32)) - sent
+
+    buf = jnp.full((p, cap), -1, dtype=jnp.int32)
+    rows = jnp.where(in_cap, sk, 0)
+    cols = jnp.where(in_cap, pos, 0)
+    vals = jnp.where(in_cap, sl, -1)
+    buf = buf.at[rows, cols].max(vals, mode="drop")
+    return buf, overflow, sent
+
+
+def exchange_normal(
+    buf: jnp.ndarray, axis_names: AxisNames
+) -> jnp.ndarray:
+    """All-to-all of the binned buffers: [p, cap] -> [p, cap] received."""
+    return lax.all_to_all(buf, axis_names, split_axis=0, concat_axis=0, tiled=True)
+
+
+def exchange_payload(
+    buf_ids: jnp.ndarray, buf_vals: jnp.ndarray, axis_names: AxisNames
+):
+    """All-to-all of (ids, payload) pairs, for the generalized engine
+    (feature vectors instead of 1-bit visited status, paper Section VI-D)."""
+    ids = lax.all_to_all(buf_ids, axis_names, split_axis=0, concat_axis=0, tiled=True)
+    vals = lax.all_to_all(buf_vals, axis_names, split_axis=0, concat_axis=0, tiled=True)
+    return ids, vals
+
+
+def axis_size(axis_names: AxisNames) -> int:
+    if isinstance(axis_names, str):
+        return lax.axis_size(axis_names)
+    total = 1
+    for name in axis_names:
+        total *= lax.axis_size(name)
+    return total

@@ -1,0 +1,47 @@
+"""Pure-numpy BFS oracle used to validate the distributed implementation."""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import COOGraph, INF_LEVEL
+
+
+def csr_from_coo(g: COOGraph):
+    order = np.argsort(g.src, kind="stable")
+    dst = g.dst[order]
+    offsets = np.zeros(g.n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(g.src, minlength=g.n), out=offsets[1:])
+    return offsets, dst
+
+
+def bfs_levels(g: COOGraph, source: int) -> np.ndarray:
+    """Frontier BFS over CSR; returns hop distances (INF_LEVEL = unreached)."""
+    offsets, dst = csr_from_coo(g)
+    levels = np.full(g.n, INF_LEVEL, dtype=np.int32)
+    levels[source] = 0
+    frontier = np.array([source], dtype=np.int64)
+    depth = 0
+    while frontier.size:
+        # gather all neighbors of the frontier
+        counts = offsets[frontier + 1] - offsets[frontier]
+        total = int(counts.sum())
+        if total == 0:
+            break
+        out = np.empty(total, dtype=np.int64)
+        pos = 0
+        for v, c in zip(frontier, counts):
+            out[pos : pos + c] = dst[offsets[v] : offsets[v] + c]
+            pos += c
+        cand = np.unique(out)
+        new = cand[levels[cand] == INF_LEVEL]
+        depth += 1
+        levels[new] = depth
+        frontier = new
+    return levels
+
+
+def traversed_edges(g: COOGraph, levels: np.ndarray) -> int:
+    """Edges in the connected component of the source (for TEPS, counted on
+    the undirected graph as m_component / 2)."""
+    reached = levels[g.src] != INF_LEVEL
+    return int(reached.sum()) // 2

@@ -1,0 +1,193 @@
+"""Degree separation and edge distribution (paper Sections III-A, III-B).
+
+Host-side (numpy) construction of the four-subgraph partitioned
+representation. This runs once per graph, like the paper's distributed graph
+construction phase; the output pytree is then placed on devices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import COOGraph, CSR, PartitionedGraph, PartitionLayout
+
+
+def select_delegates(degrees: np.ndarray, th: int) -> np.ndarray:
+    """Vertices with out-degree > TH become delegates (sorted by vertex id)."""
+    return np.nonzero(degrees > th)[0].astype(np.int64)
+
+
+def distribute_edges(
+    g: COOGraph, layout: PartitionLayout, degrees: np.ndarray, delegate_vids: np.ndarray
+):
+    """Algorithm 1: returns (owner_partition [m], kind [m]) per edge.
+
+    kind: 0=nn, 1=nd, 2=dn, 3=dd.
+    """
+    is_del = np.zeros(g.n, dtype=bool)
+    is_del[delegate_vids] = True
+    u, v = g.src, g.dst
+    u_del, v_del = is_del[u], is_del[v]
+
+    kind = (u_del.astype(np.int8) * 2 + v_del.astype(np.int8))  # 0 nn, 1 nd, 2 dn, 3 dd
+
+    owner = np.empty(g.m, dtype=np.int64)
+    # u normal -> owner(u)                 (nn, nd)
+    mu = ~u_del
+    owner[mu] = layout.part_of(u[mu])
+    # u delegate, v normal -> owner(v)     (dn)
+    mv = u_del & ~v_del
+    owner[mv] = layout.part_of(v[mv])
+    # both delegates: lower-degree endpoint's owner; ties -> min(u, v)
+    md = u_del & v_del
+    du, dv = degrees[u[md]], degrees[v[md]]
+    um, vm = u[md], v[md]
+    pick_u = (du < dv) | ((du == dv) & (um <= vm))
+    owner[md] = layout.part_of(np.where(pick_u, um, vm))
+    return owner, kind
+
+
+def _build_csr_stack(
+    p: int, n_rows: int, rows_per_edge: np.ndarray, cols_per_edge: np.ndarray,
+    owner: np.ndarray, col_dtype, edge_index: np.ndarray | None = None,
+) -> CSR:
+    """Build the stacked padded CSR for one subgraph type across partitions."""
+    counts = np.bincount(owner, minlength=p)
+    e_max = int(counts.max()) if counts.size else 0
+    e_max = max(e_max, 1)
+    offsets = np.zeros((p, n_rows + 1), dtype=np.int32)
+    cols = np.zeros((p, e_max), dtype=col_dtype)
+    rowids = np.full((p, e_max), n_rows, dtype=np.int32)
+    eidx = np.full((p, e_max), -1, dtype=np.int64)
+    m = counts.astype(np.int32)
+
+    # sort edges by (owner, row) for CSR layout
+    order = np.lexsort((rows_per_edge, owner))
+    ro, rr, rc = owner[order], rows_per_edge[order], cols_per_edge[order]
+    re = edge_index[order] if edge_index is not None else None
+    starts = np.searchsorted(ro, np.arange(p))
+    ends = np.searchsorted(ro, np.arange(p), side="right")
+    for k in range(p):
+        s, e = starts[k], ends[k]
+        rk, ck = rr[s:e], rc[s:e]
+        offsets[k] = np.concatenate([[0], np.cumsum(np.bincount(rk, minlength=n_rows))]).astype(np.int32)
+        cols[k, : e - s] = ck
+        rowids[k, : e - s] = rk
+        if re is not None:
+            eidx[k, : e - s] = re[s:e]
+    return CSR(offsets=offsets, cols=cols, rowids=rowids, m=m, eidx=eidx,
+               n_rows=n_rows, e_max=e_max)
+
+
+def partition_graph(
+    g: COOGraph, th: int, p_rank: int = 1, p_gpu: int = 1
+) -> PartitionedGraph:
+    """Full pipeline: degree separation + Algorithm 1 + four CSR subgraphs.
+
+    ``g`` must already be symmetric (see ``COOGraph.symmetrized``) for DOBFS
+    correctness, as the paper assumes.
+    """
+    layout = PartitionLayout(g.n, p_rank, p_gpu)
+    p, n_local = layout.p, layout.n_local
+    degrees = g.out_degrees()
+    delegate_vids = select_delegates(degrees, th)
+    d = int(delegate_vids.shape[0])
+    dslots = max(d, 1)
+
+    # global vid -> delegate id (dense search on sorted delegate vids)
+    def to_del_id(v):
+        return np.searchsorted(delegate_vids, v).astype(np.int64)
+
+    owner, kind = distribute_edges(g, layout, degrees, delegate_vids)
+    u, v = g.src, g.dst
+    all_eidx = np.arange(g.m, dtype=np.int64)
+
+    sub = {}
+    # nn: rows local(u), cols pre-split (owner, local) int32 pairs -- the
+    # paper stores 64-bit global ids here; TPUs have no 64-bit lanes, and
+    # owner/local are all any kernel ever derives from them (DESIGN.md S3)
+    m = kind == 0
+    sub["nn"] = _build_csr_stack(p, n_local, layout.local_of(u[m]), layout.local_of(v[m]),
+                                 owner[m], np.int32, all_eidx[m])
+    nn_owner_edge = layout.part_of(v[m]).astype(np.int32)
+    # nd: rows local(u), cols delegate id
+    m = kind == 1
+    sub["nd"] = _build_csr_stack(p, n_local, layout.local_of(u[m]), to_del_id(v[m]), owner[m], np.int32, all_eidx[m])
+    # dn: rows delegate id, cols local(v)
+    m = kind == 2
+    sub["dn"] = _build_csr_stack(p, dslots, to_del_id(u[m]), layout.local_of(v[m]), owner[m], np.int32, all_eidx[m])
+    # dd: rows delegate id, cols delegate id
+    m = kind == 3
+    sub["dd"] = _build_csr_stack(p, dslots, to_del_id(u[m]), to_del_id(v[m]), owner[m], np.int32, all_eidx[m])
+
+    # validity and DO source masks
+    vids = np.arange(g.n, dtype=np.int64)
+    normal_valid = np.zeros((p, n_local), dtype=bool)
+    nv = vids[degrees[vids] <= th] if th >= 0 else vids[:0]
+    # every vertex slot exists; only non-delegate slots are "normal"
+    parts, locs = layout.part_of(vids), layout.local_of(vids)
+    is_del = np.zeros(g.n, dtype=bool)
+    is_del[delegate_vids] = True
+    normal_valid[parts[~is_del], locs[~is_del]] = True
+
+    def row_mask(csr: CSR, n_rows: int) -> np.ndarray:
+        deg = csr.offsets[:, 1:] - csr.offsets[:, :-1]
+        return deg > 0
+
+    nd_src_mask = row_mask(sub["nd"], n_local)
+    dn_src_mask = row_mask(sub["dn"], dslots)
+    dd_src_mask = row_mask(sub["dd"], dslots)
+
+    # per-nn-edge owner partition, aligned with the nn CSR edge order
+    nn_owner = np.full((p, sub["nn"].e_max), p, dtype=np.int32)
+    eidx_nn = np.asarray(sub["nn"].eidx)
+    # invert: position of each original nn edge in the owner[m]-subset
+    nn_orig_idx = all_eidx[kind == 0]
+    pos_of = {int(e): i for i, e in enumerate(nn_orig_idx)}
+    for k in range(p):
+        mk = int(np.asarray(sub["nn"].m)[k])
+        src_rows = eidx_nn[k, :mk]
+        nn_owner[k, :mk] = nn_owner_edge[[pos_of[int(e)] for e in src_rows]]
+
+    return PartitionedGraph(
+        n=g.n, p=p, p_rank=p_rank, p_gpu=p_gpu, d=d, n_local=n_local, th=th,
+        nn=sub["nn"], nd=sub["nd"], dn=sub["dn"], dd=sub["dd"], nn_owner=nn_owner,
+        delegate_vids=delegate_vids if d else np.zeros(1, np.int64),
+        normal_valid=normal_valid,
+        nd_src_mask=nd_src_mask, dn_src_mask=dn_src_mask, dd_src_mask=dd_src_mask,
+    )
+
+
+def partition_edge_values(pg: PartitionedGraph, values: np.ndarray) -> dict:
+    """Distribute per-edge payloads [m, Fe] (edge features, weights) into the
+    four subgraphs' padded edge order. Padding slots get zeros."""
+    out = {}
+    for kind in ("nn", "nd", "dn", "dd"):
+        csr = pg.subgraph(kind)
+        eidx = np.asarray(csr.eidx)
+        safe = np.maximum(eidx, 0)
+        vals = values[safe]
+        vals[eidx < 0] = 0
+        out[kind] = vals.astype(values.dtype)
+    return out
+
+
+def edge_kind_stats(g: COOGraph, th: int) -> dict:
+    """Fractions of nn/nd/dn/dd edges and delegates for a threshold TH.
+
+    Reproduces the quantities of paper Fig. 5 / Fig. 12 without building the
+    partitioned structure.
+    """
+    degrees = g.out_degrees()
+    is_del = degrees > th
+    u_del = is_del[g.src]
+    v_del = is_del[g.dst]
+    m = g.m
+    return {
+        "th": th,
+        "frac_delegates": float(is_del.sum()) / g.n,
+        "frac_nn": float((~u_del & ~v_del).sum()) / m,
+        "frac_nd": float((~u_del & v_del).sum()) / m,
+        "frac_dn": float((u_del & ~v_del).sum()) / m,
+        "frac_dd": float((u_del & v_del).sum()) / m,
+        "n_delegates": int(is_del.sum()),
+    }

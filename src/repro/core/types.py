@@ -1,0 +1,188 @@
+"""Core datatypes for the degree-separated distributed graph engine.
+
+Terminology follows the paper (Pan, Pearce, Owens 2018):
+
+* ``delegates``       -- vertices with out-degree > TH, replicated on every
+                         partition, identified by a dense delegate id in
+                         ``[0, d)``.
+* ``normal vertices`` -- vertices with out-degree <= TH, owned by exactly one
+                         partition (``owner(v) = v mod p``), identified
+                         locally by ``v // p``.
+* four subgraphs per partition: ``nn``, ``nd``, ``dn``, ``dd`` by the
+  (source, destination) vertex classes, each in CSR.
+
+All per-partition arrays are stacked along a leading ``p`` axis and padded to
+the per-type maximum so the whole structure is a single static-shape pytree:
+it can be sharded over the mesh partition axis with ``shard_map`` or iterated
+under ``vmap(axis_name=...)`` for single-device emulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+INF_LEVEL = np.int32(2**30)  # "unvisited" marker for BFS levels
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+    return cls
+
+
+@dataclass(frozen=True)
+class COOGraph:
+    """Host-side edge list. Directed edge pairs; symmetrize for undirected."""
+
+    n: int
+    src: np.ndarray  # int64 [m]
+    dst: np.ndarray  # int64 [m]
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    def symmetrized(self) -> "COOGraph":
+        """Undirected graph via edge doubling (paper Section VI-A3)."""
+        src = np.concatenate([self.src, self.dst])
+        dst = np.concatenate([self.dst, self.src])
+        return COOGraph(self.n, src, dst)
+
+    def deduped(self) -> "COOGraph":
+        key = self.src.astype(np.uint64) * np.uint64(self.n) + self.dst.astype(np.uint64)
+        _, idx = np.unique(key, return_index=True)
+        return COOGraph(self.n, self.src[idx], self.dst[idx])
+
+    def without_self_loops(self) -> "COOGraph":
+        keep = self.src != self.dst
+        return COOGraph(self.n, self.src[keep], self.dst[keep])
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n).astype(np.int64)
+
+
+@dataclass(frozen=True)
+class PartitionLayout:
+    """Mapping between global vertex ids and (partition, local id).
+
+    Follows Algorithm 1: ``P(v) = v mod p_rank``, ``G(v) = (v / p_rank) mod
+    p_gpu``; flat partition = ``P(v) * p_gpu + G(v)``; local id = ``v // p``.
+    """
+
+    n: int
+    p_rank: int
+    p_gpu: int
+
+    @property
+    def p(self) -> int:
+        return self.p_rank * self.p_gpu
+
+    @property
+    def n_local(self) -> int:
+        """Max normal-vertex slots per partition."""
+        return -(-self.n // self.p)
+
+    def part_of(self, v: np.ndarray) -> np.ndarray:
+        r = v % self.p_rank
+        g = (v // self.p_rank) % self.p_gpu
+        return (r * self.p_gpu + g).astype(np.int64)
+
+    def local_of(self, v: np.ndarray) -> np.ndarray:
+        return (v // self.p).astype(np.int64)
+
+    def global_of(self, part: np.ndarray, local: np.ndarray) -> np.ndarray:
+        r = part // self.p_gpu
+        g = part % self.p_gpu
+        return (np.asarray(r) + self.p_rank * np.asarray(g) + self.p * np.asarray(local)).astype(np.int64)
+
+
+@dataclass
+class CSR:
+    """Stacked padded CSR: one subgraph type across all partitions.
+
+    offsets[k, r] .. offsets[k, r+1] index ``cols``/``rowids`` of partition k.
+    ``rowids`` repeats the row index per edge (edge-parallel sweeps);
+    padding edges (index >= m_k) carry rowid = n_rows and col = 0 and are
+    masked by ``edge < m[k]``.
+    """
+
+    offsets: Any  # [p, n_rows+1] int32
+    cols: Any     # [p, E_max]   int32 / int64 (nn)
+    rowids: Any   # [p, E_max]   int32
+    m: Any        # [p]          int32 -- valid edge count per partition
+    eidx: Any = None  # [p, E_max] int64 -- index into the source COO arrays
+    n_rows: int = 0
+    e_max: int = 0
+
+
+_register(CSR, data_fields=("offsets", "cols", "rowids", "m", "eidx"), meta_fields=("n_rows", "e_max"))
+
+
+@dataclass
+class PartitionedGraph:
+    """The paper's four-subgraph representation, stacked over partitions."""
+
+    # -- static metadata ---------------------------------------------------
+    n: int            # global vertex count
+    p: int            # number of partitions
+    p_rank: int
+    p_gpu: int
+    d: int            # number of delegates
+    n_local: int      # normal-vertex slots per partition
+    th: int           # degree threshold TH
+
+    # -- per-partition subgraphs ------------------------------------------
+    nn: CSR           # rows: local normal ids, cols: LOCAL dst ids at the owner
+    nn_owner: Any     # [p, E_nn_max] int32: owner partition per nn edge
+    nd: CSR           # rows: local normal ids, cols: delegate ids
+    dn: CSR           # rows: delegate ids,     cols: local normal ids
+    dd: CSR           # rows: delegate ids,     cols: delegate ids
+
+    # -- replicated delegate data ------------------------------------------
+    delegate_vids: Any   # [d] int64, sorted -- delegate id -> global vertex id
+
+    # -- per-partition masks / degrees --------------------------------------
+    normal_valid: Any    # [p, n_local] bool: slot holds a real normal vertex
+    nd_src_mask: Any     # [p, n_local] bool: normal vertex has nd edges (DO source list)
+    dn_src_mask: Any     # [p, d] bool: delegate has dn edges on this partition
+    dd_src_mask: Any     # [p, d] bool: delegate has dd edges on this partition
+
+    def subgraph(self, kind: str) -> CSR:
+        return {"nn": self.nn, "nd": self.nd, "dn": self.dn, "dd": self.dd}[kind]
+
+    # Table I memory accounting (bytes), paper Section III-C.
+    def memory_bytes(self) -> dict:
+        p, nl, d = self.p, self.n_local, self.d
+        enn = int(np.sum(np.asarray(self.nn.m)))
+        end = int(np.sum(np.asarray(self.nd.m)))
+        edn = int(np.sum(np.asarray(self.dn.m)))
+        edd = int(np.sum(np.asarray(self.dd.m)))
+        usage = {
+            "nn": (p * (nl + 1) * 4, enn * 8),
+            "nd": (p * (nl + 1) * 4, end * 4),
+            "dn": (p * (d + 1) * 4, edn * 4),
+            "dd": (p * (d + 1) * 4, edd * 4),
+        }
+        total = sum(a + b for a, b in usage.values())
+        m = enn + end + edn + edd
+        return {
+            "per_subgraph": usage,
+            "total": total,
+            "edge_list_16m": 16 * m,
+            "csr_8n_8m": 8 * self.n + 8 * m,
+            "m": m,
+            "e_nn": enn,
+        }
+
+
+_register(
+    PartitionedGraph,
+    data_fields=(
+        "nn", "nd", "dn", "dd", "nn_owner", "delegate_vids",
+        "normal_valid", "nd_src_mask", "dn_src_mask", "dd_src_mask",
+    ),
+    meta_fields=("n", "p", "p_rank", "p_gpu", "d", "n_local", "th"),
+)

@@ -1,0 +1,80 @@
+"""Neighbor sampler for sampled-minibatch GNN training (GraphSAGE-style).
+
+Host-side numpy: k-hop uniform sampling with per-hop fanouts over a CSR
+graph, renumbering the union into a static-capacity ``GraphBatch``. The
+fanout caps play the same role the degree threshold TH plays in the paper:
+they bound the per-vertex work and communication of the hot (high-degree)
+vertices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.oracle import csr_from_coo
+from repro.core.types import COOGraph
+from repro.models.gnn import GraphBatch
+
+
+class NeighborSampler:
+    def __init__(self, g: COOGraph, fanouts=(15, 10), seed: int = 0):
+        self.g = g
+        self.offsets, self.cols = csr_from_coo(g)
+        self.fanouts = tuple(fanouts)
+        self.rng = np.random.default_rng(seed)
+        # static capacities for jit-stable batch shapes
+        self.node_cap = 1
+        self.edge_cap = 1
+
+    def capacities(self, batch_nodes: int):
+        n_cap, e_cap = batch_nodes, 0
+        layer = batch_nodes
+        for f in self.fanouts:
+            e_cap += layer * f
+            layer = layer * f
+            n_cap += layer
+        return n_cap, e_cap
+
+    def sample(self, seeds: np.ndarray, features: np.ndarray | None = None) -> GraphBatch:
+        node_cap, edge_cap = self.capacities(len(seeds))
+        frontier = np.asarray(seeds, np.int64)
+        nodes = list(frontier)
+        node_pos = {int(v): i for i, v in enumerate(frontier)}
+        s_out, r_out = [], []
+        for f in self.fanouts:
+            nxt = []
+            for v in frontier:
+                deg = self.offsets[v + 1] - self.offsets[v]
+                if deg == 0:
+                    continue
+                take = min(f, int(deg))
+                sel = self.rng.choice(int(deg), take, replace=False)
+                nbrs = self.cols[self.offsets[v] + sel]
+                for u in nbrs:
+                    ui = int(u)
+                    if ui not in node_pos:
+                        node_pos[ui] = len(nodes)
+                        nodes.append(ui)
+                        nxt.append(ui)
+                    # message edge u -> v (aggregating into the seed side)
+                    s_out.append(node_pos[ui])
+                    r_out.append(node_pos[int(v)])
+            frontier = np.array(nxt, np.int64) if nxt else np.array([], np.int64)
+        n = len(nodes)
+        e = len(s_out)
+        assert n <= node_cap and e <= edge_cap, (n, node_cap, e, edge_cap)
+        senders = np.full(edge_cap, node_cap, np.int32)
+        receivers = np.full(edge_cap, node_cap, np.int32)
+        senders[:e] = s_out
+        receivers[:e] = r_out
+        node_ids = np.array(nodes, np.int64)
+        if features is not None:
+            feats = np.zeros((node_cap, features.shape[1]), features.dtype)
+            feats[:n] = features[node_ids]
+        else:
+            feats = np.zeros((node_cap, 1), np.float32)
+        node_mask = np.zeros(node_cap, bool)
+        node_mask[:n] = True
+        return GraphBatch(
+            nodes=feats, senders=senders, receivers=receivers,
+            node_mask=node_mask, edge_mask=senders < node_cap,
+        ), node_ids

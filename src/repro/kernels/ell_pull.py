@@ -1,0 +1,66 @@
+"""Bottom-up (pull) visit kernel over ELL-padded parent lists.
+
+The paper's backward-pull visit is its perf-critical local kernel: each
+unvisited vertex scans its parent list against the frontier bitmask. The GPU
+version uses per-thread early exit; the TPU adaptation (DESIGN.md Section 3)
+processes **degree-bucketed rectangular tiles**: rows padded to the bucket
+width W, a tile of TR rows resident in VMEM, the frontier as a bit-packed
+``uint32`` mask also in VMEM (d <= 4n/p keeps it tens of KBs).
+
+Grid: one program per row tile. For each row, gather the mask words of its
+parents and OR-reduce across the row. Early exit happens at tile granularity
+on TPU (the op wrapper splits wide buckets into column chunks and skips
+chunks whose rows are all satisfied -- see ops.ell_pull_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_ROWS = 256
+
+
+def _kernel(parents_ref, mask_ref, active_ref, found_ref):
+    cols = parents_ref[...]                      # [TR, W] int32, -1 padded
+    words = mask_ref[...]                        # [NW] uint32 frontier bitmask
+    active = active_ref[...]                     # [TR] int32 (1 = row active)
+    valid = cols >= 0
+    safe = jnp.where(valid, cols, 0)
+    w = jnp.take(words, safe >> 5, axis=0)       # gather mask words
+    bit = (w >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    hit = valid & (bit == 1)
+    found = jnp.any(hit, axis=1) & (active == 1)
+    found_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def ell_pull(
+    parents: jnp.ndarray,      # [R, W] int32, -1 padded
+    frontier_mask: jnp.ndarray,  # [NW] uint32, bit v = vertex v in frontier
+    active: jnp.ndarray,       # [R] int32: 1 = row still unvisited/active
+    *,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r, w = parents.shape
+    r_pad = -(-r // tile_rows) * tile_rows
+    parents = jnp.pad(parents, ((0, r_pad - r), (0, 0)), constant_values=-1)
+    active = jnp.pad(active, (0, r_pad - r))
+    grid = (r_pad // tile_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec(frontier_mask.shape, lambda i: (0,)),
+            pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r_pad,), jnp.int32),
+        interpret=interpret,
+    )(parents, frontier_mask, active)
+    return out[:r]

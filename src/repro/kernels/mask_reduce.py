@@ -1,0 +1,66 @@
+"""Delegate bitmask combine kernel: word-wise OR of K partial masks +
+per-word popcount of the delta vs the previous mask.
+
+This is the local phase of the paper's delegate reduction (Section V-A):
+GPU_0 ORs the partial masks of its peer GPUs before the global all-reduce,
+and the popcount of newly set bits feeds the direction-decision workload
+estimates. VPU-only kernel; tiles of words per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(parts_ref, prev_ref, or_ref, newcnt_ref):
+    parts = parts_ref[...]          # [K, TW] uint32
+    prev = prev_ref[...]            # [TW] uint32
+    combined = prev
+    for k in range(parts.shape[0]):
+        combined = combined | parts[k]
+    or_ref[...] = combined
+    newcnt_ref[...] = _popcount32(combined & ~prev)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_words", "interpret"))
+def mask_reduce(
+    partials: jnp.ndarray,   # [K, NW] uint32 -- per-peer partial masks
+    prev: jnp.ndarray,       # [NW] uint32 -- mask from the previous iteration
+    *,
+    tile_words: int = 512,
+    interpret: bool = True,
+):
+    """Returns (or_mask [NW] uint32, new_bits_per_word [NW] int32)."""
+    k, nw = partials.shape
+    nw_pad = -(-nw // tile_words) * tile_words
+    partials = jnp.pad(partials, ((0, 0), (0, nw_pad - nw)))
+    prev = jnp.pad(prev, (0, nw_pad - nw))
+    grid = (nw_pad // tile_words,)
+    or_mask, newcnt = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, tile_words), lambda i: (0, i)),
+            pl.BlockSpec((tile_words,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_words,), lambda i: (i,)),
+            pl.BlockSpec((tile_words,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nw_pad,), jnp.uint32),
+            jax.ShapeDtypeStruct((nw_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(partials, prev)
+    return or_mask[:nw], newcnt[:nw]

@@ -1,0 +1,50 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (tests, dry-run,
+benchmarks) we fall back to the pure-jnp references, since the Pallas CPU
+path is interpret-only (Python callback, not lowerable into the dry-run
+artifact). Tests pin ``force`` to compare both paths.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .cin_fused import cin_fused as _cin_pallas
+from .ell_pull import ell_pull as _ell_pallas
+from .mask_reduce import mask_reduce as _mask_pallas
+from .segment_bag import segment_bag as _bag_pallas
+
+
+def _use_pallas(force: str | None) -> bool:
+    if force == "pallas":
+        return True
+    if force == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def ell_pull(parents, frontier_mask, active, *, force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _ell_pallas(parents, frontier_mask, active,
+                           interpret=jax.default_backend() != "tpu", **kw)
+    return ref.ell_pull_ref(parents, frontier_mask, active)
+
+
+def segment_bag(table, indices, weights=None, *, force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _bag_pallas(table, indices, weights,
+                           interpret=jax.default_backend() != "tpu", **kw)
+    return ref.segment_bag_ref(table, indices, weights)
+
+
+def cin_fused(x0, xk, w, *, force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _cin_pallas(x0, xk, w, interpret=jax.default_backend() != "tpu", **kw)
+    return ref.cin_fused_ref(x0, xk, w)
+
+
+def mask_reduce(partials, prev, *, force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _mask_pallas(partials, prev, interpret=jax.default_backend() != "tpu", **kw)
+    return ref.mask_reduce_ref(partials, prev)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ell_pull_ref(parents, frontier_mask, active):
+    valid = parents >= 0
+    safe = jnp.where(valid, parents, 0)
+    words = frontier_mask[safe >> 5]
+    bit = (words >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    hit = valid & (bit == 1)
+    return (jnp.any(hit, axis=1) & (active == 1)).astype(jnp.int32)
+
+
+def segment_bag_ref(table, indices, weights=None):
+    b, l = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, l), table.dtype)
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = table[safe]                                 # [B, L, D]
+    w = jnp.where(valid, weights, 0.0)[..., None]
+    return jnp.sum(rows * w, axis=1)
+
+
+def cin_fused_ref(x0, xk, w):
+    # out[b,h,d] = sum_ij W[h, i*Fk+j] x0[b,i,d] xk[b,j,d]
+    outer = jnp.einsum("bid,bjd->bijd", x0, xk)
+    b, f0, fk, d = outer.shape
+    return jnp.einsum("hf,bfd->bhd", w, outer.reshape(b, f0 * fk, d))
+
+
+def mask_reduce_ref(partials, prev):
+    combined = prev
+    for k in range(partials.shape[0]):
+        combined = combined | partials[k]
+    new = np.asarray(combined & ~prev)
+    cnt = np.zeros(new.shape, np.int32)
+    for i in range(32):
+        cnt += ((new >> np.uint32(i)) & np.uint32(1)).astype(np.int32)
+    return combined, jnp.asarray(cnt)
+
+
+def pack_bitmask(flags: np.ndarray) -> np.ndarray:
+    """bool [n] -> uint32 [ceil(n/32)] with bit v = flags[v]."""
+    n = flags.shape[0]
+    nw = -(-n // 32)
+    padded = np.zeros(nw * 32, dtype=bool)
+    padded[:n] = flags
+    bits = padded.reshape(nw, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)).sum(axis=1).astype(np.uint32)

@@ -1,0 +1,67 @@
+"""EmbeddingBag kernel: ragged gather + per-bag weighted sum.
+
+JAX has no native ``nn.EmbeddingBag``; this is the recsys hot path (one bag
+per sparse field per sample) and the GNN neighbor-aggregate primitive. Bags
+are padded to a fixed width L (index -1 = padding), the table tile lives in
+VMEM for the embedding-dim block being processed, and a tile of TB bags is
+reduced per program.
+
+Grid: (bags / TB, D / TD). BlockSpec keeps the full vocab rows resident per
+D-block -- the op wrapper is responsible for sharding huge vocabularies
+*before* the kernel (hot/cold delegate split, DESIGN.md Section 5), so V here
+is the per-device cold-shard or hot-replica size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, wgt_ref, table_ref, out_ref):
+    idx = idx_ref[...]                       # [TB, L] int32, -1 padded
+    wgt = wgt_ref[...]                       # [TB, L] f32
+    table = table_ref[...]                   # [V, TD]
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    rows = jnp.take(table, safe.reshape(-1), axis=0)          # [TB*L, TD]
+    rows = rows.reshape(idx.shape + (table.shape[1],))        # [TB, L, TD]
+    w = jnp.where(valid, wgt, 0.0)[..., None]
+    out_ref[...] = jnp.sum(rows * w, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_bags", "tile_dim", "interpret"))
+def segment_bag(
+    table: jnp.ndarray,     # [V, D] f32
+    indices: jnp.ndarray,   # [B, L] int32, -1 padded
+    weights: jnp.ndarray | None = None,  # [B, L] f32 (None = sum)
+    *,
+    tile_bags: int = 128,
+    tile_dim: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, l = indices.shape
+    v, d = table.shape
+    if weights is None:
+        weights = jnp.ones((b, l), table.dtype)
+    b_pad = -(-b // tile_bags) * tile_bags
+    d_pad = -(-d // tile_dim) * tile_dim
+    indices = jnp.pad(indices, ((0, b_pad - b), (0, 0)), constant_values=-1)
+    weights = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
+    table_p = jnp.pad(table, ((0, 0), (0, d_pad - d)))
+    grid = (b_pad // tile_bags, d_pad // tile_dim)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_bags, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_bags, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((v, tile_dim), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_bags, tile_dim), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d_pad), table.dtype),
+        interpret=interpret,
+    )(indices, weights, table_p)
+    return out[:b, :d]

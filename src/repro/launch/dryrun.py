@@ -1,0 +1,235 @@
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input shape) cell against the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) and records
+memory_analysis, cost_analysis, and the collective traffic parsed from the
+partitioned HLO -- the inputs to the roofline analysis (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out runs/dryrun]
+"""
+# The first two statements MUST precede any jax import: jax locks the device
+# count on first initialization.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+)$")
+_OPND_RE = re.compile(r"%[\w.\-]+")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective operand bytes from the partitioned HLO (per-device).
+
+    Two passes: map op name -> result type(s), then resolve each collective's
+    operand names to their byte sizes (the HLO printer does not inline
+    operand types)."""
+    result_bytes: dict = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        tb = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(body.split(")")[0] if "(" in body else body))
+        # result type is everything before the op name; just take all shapes
+        # up to the opening paren of the operand list
+        pre = body.split("(")[0]
+        rb = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(pre))
+        result_bytes[name] = rb
+
+    coll_re = re.compile(
+        r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start|-done)?\(")
+    out = {k: {"count": 0, "operand_bytes": 0, "result_bytes": 0} for k in COLLECTIVES}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, body = m.groups()
+        cm = coll_re.search(body)
+        if not cm:
+            continue
+        kind, suffix = cm.group(1), cm.group(2)
+        if suffix == "-done":
+            continue  # the matching *-start already carries the operands
+        paren = body[cm.end():]  # just past the opening '('
+        depth, end = 1, len(paren)
+        for i, ch in enumerate(paren):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                end = i
+                break
+        operands = paren[:end]
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands))
+        if nbytes == 0:  # operands printed as bare names: resolve them
+            nbytes = sum(result_bytes.get(o, 0) for o in _OPND_RE.findall(operands))
+        rbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(body[:cm.start()]))
+        out[kind]["count"] += 1
+        out[kind]["operand_bytes"] += nbytes
+        out[kind]["result_bytes"] += rbytes
+    out["total_bytes"] = sum(v["operand_bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out and isinstance(ma, dict):
+        out = {k: int(v) for k, v in ma.items()}
+    return out
+
+
+def cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower() or k == "optimal_seconds")}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str, verbose: bool = True,
+             unroll_layers: int = 0, overrides: dict | None = None, tag_extra: str = "") -> dict:
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if unroll_layers:
+        mesh_tag += f"_L{unroll_layers}"
+    if tag_extra:
+        mesh_tag += f"_{tag_extra}"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag, "ok": False,
+           "unroll_layers": unroll_layers, "rule_overrides": overrides or {}}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args = build_cell(arch, shape, mesh, layers_override=unroll_layers,
+                              rules_extra=overrides)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        rec["memory"] = memory_dict(compiled)
+        rec["cost"] = cost_dict(compiled)
+        txt = compiled.as_text()
+        rec["collectives"] = collective_stats(txt)
+        rec["parser_version"] = 2
+        # keep just the collective op lines for later re-analysis
+        rec["hlo_collective_lines"] = [
+            ln.strip()[:4000] for ln in txt.splitlines()
+            if any(k + "(" in ln or k + "-start(" in ln for k in COLLECTIVES)
+        ][:500]
+        rec["ok"] = True
+        if verbose:
+            print(f"[{arch}/{shape}/{mesh_tag}] memory_analysis: {rec['memory']}")
+            print(f"[{arch}/{shape}/{mesh_tag}] cost_analysis: "
+                  f"flops={rec['cost'].get('flops')} bytes={rec['cost'].get('bytes accessed')}")
+            print(f"[{arch}/{shape}/{mesh_tag}] collectives: {rec['collectives']}")
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch}/{shape}/{mesh_tag}] FAILED: {rec['error']}")
+    rec["total_s"] = time.time() - t0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll-layers", type=int, default=0)
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical-axis rule override, e.g. moe_embed=None")
+    ap.add_argument("--tag", default="", help="extra tag for the output file")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = None if v == "None" else (tuple(v.split("+")) if "+" in v else v)
+
+    from repro.launch.cells import all_cells
+
+    if args.all:
+        cells = [(a, s) for a, s, skip in all_cells() if skip is None]
+    else:
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = ("2x16x16" if mp else "16x16") + (
+                f"_L{args.unroll_layers}" if args.unroll_layers else "")
+            path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+            if args.skip_existing and os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("ok"):
+                    print(f"[{arch}/{shape}/{tag}] cached ok")
+                    continue
+            rec = run_cell(arch, shape, mp, args.out, unroll_layers=args.unroll_layers,
+                           overrides=overrides or None, tag_extra=args.tag)
+            failures += not rec["ok"]
+    print(f"dry-run complete; failures: {failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Assemble EXPERIMENTS.md §3 (roofline table) and §4.5 (before/after) from
+the dry-run records. Usage:
+  PYTHONPATH=src python -m repro.launch.report [--dir runs/dryrun] > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .roofline import (LINK_BW, _scan_corrected, analyze, fmt_s, load_records,
+                       markdown_table, what_moves_it)
+
+
+def perf_pairs(records: list, baselines_dir: str) -> str:
+    """§4.5 before/after rows for the hillclimbed cells."""
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in records if r.get("ok")}
+    # baseline prefill records were archived before the last_only change
+    for f in sorted(os.listdir(baselines_dir)):
+        r = json.load(open(os.path.join(baselines_dir, f)))
+        if r.get("ok"):
+            by[(r["arch"] + "@base", r["shape"], r["mesh"])] = r
+
+    pairs = [
+        ("bfs-rmat rmat_weak: baseline -> opt (iter 1+2)",
+         ("bfs-rmat", "rmat_weak", "16x16"), ("bfs-rmat-opt", "rmat_weak", "16x16")),
+        ("bfs-rmat rmat_weak: opt -> opt2 (iter 3, static slots)",
+         ("bfs-rmat-opt", "rmat_weak", "16x16"), ("bfs-rmat-opt2", "rmat_weak", "16x16")),
+        ("kimi train_4k: EP-only -> EPxFSDP",
+         ("kimi-k2-1t-a32b", "train_4k", "16x16_epONLY"), ("kimi-k2-1t-a32b", "train_4k", "16x16")),
+        ("qwen2-moe prefill_32k: full-logits -> last_only",
+         ("qwen2-moe-a2.7b@base", "prefill_32k", "16x16"), ("qwen2-moe-a2.7b", "prefill_32k", "16x16")),
+        ("qwen2-moe prefill_32k: last_only -> grouped dispatch",
+         ("qwen2-moe-a2.7b", "prefill_32k", "16x16"), ("qwen2-moe-a2.7b-opt", "prefill_32k", "16x16")),
+        ("qwen2-moe train_4k: global -> grouped dispatch",
+         ("qwen2-moe-a2.7b", "train_4k", "16x16"), ("qwen2-moe-a2.7b-opt", "train_4k", "16x16")),
+        ("mace ogb_products: baseline -> opt (pos-only fetch + bf16 msgs)",
+         ("mace", "ogb_products", "16x16"), ("mace-opt", "ogb_products", "16x16")),
+        ("gemma3 prefill_32k: full-logits -> last_only",
+         ("gemma3-1b@base", "prefill_32k", "16x16"), ("gemma3-1b", "prefill_32k", "16x16")),
+        ("qwen2.5 prefill_32k: full-logits -> last_only",
+         ("qwen2.5-14b@base", "prefill_32k", "16x16"), ("qwen2.5-14b", "prefill_32k", "16x16")),
+    ]
+    out = ["| transition | FLOPs/dev | HBM bytes/dev | collective bytes/dev | t_coll s | args+temp GB |",
+           "|---|---|---|---|---|---|"]
+
+    def row(r):
+        m = r.get("memory", {})
+        return (r["cost"].get("flops", 0), r["cost"].get("bytes accessed", 0),
+                r["collectives"]["total_bytes"],
+                r["collectives"]["total_bytes"] / LINK_BW,
+                (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 1e9)
+
+    for title, a_key, b_key in pairs:
+        a, b = by.get(a_key), by.get(b_key)
+        if not a or not b:
+            out.append(f"| {title} | (missing: {'A' if not a else 'B'}) | | | | |")
+            continue
+        ra, rb = row(a), row(b)
+
+        def cell(i, fmt="{:.3e}"):
+            va, vb = ra[i], rb[i]
+            imp = f" ({va/vb:.1f}x)" if vb and va and va / vb >= 1.05 else (
+                f" ({vb/va:.1f}x worse)" if va and vb / max(va, 1e-30) >= 1.05 else "")
+            return fmt.format(va) + " -> " + fmt.format(vb) + imp
+
+        out.append(f"| {title} | {cell(0)} | {cell(1)} | {cell(2)} | "
+                   f"{cell(3)} | {cell(4, '{:.1f}')} |")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--baselines", default="runs/perf_baselines")
+    args = ap.parse_args()
+    records = load_records(args.dir)
+    corrected = _scan_corrected(records)
+    rows = []
+    for rec in records:
+        mesh = rec.get("mesh", "")
+        if "_L" in mesh or "_ep" in mesh or mesh != "16x16":
+            continue
+        if "-opt" in rec["arch"]:
+            continue
+        r = analyze(rec, corrected)
+        if r:
+            rows.append(r)
+    print("### §3 Roofline — single-pod 16x16 baseline, per device, per step\n")
+    print(markdown_table(rows))
+    print("\nDominant-term guidance:\n")
+    for r in rows:
+        print(f"* `{r['arch']}/{r['shape']}`: **{r['dominant']}** — {what_moves_it(r)}"
+              + (f" _(flops via {r['method']})_" if r.get("method") != "direct" else ""))
+    print("\n### §4.5 before/after\n")
+    print(perf_pairs(records, args.baselines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Logical-axis -> mesh-axis rules per architecture family.
+
+Models annotate parameters/activations with logical names; these rules bind
+them to the production mesh (DP over pod+data, TP/EP over model). Per-arch
+overrides come from the ArchSpec (e.g. MQA archs replicate kv heads).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec, is_spec, tree_map_specs
+from .mesh import all_axes, data_axes
+
+
+def _canon(value, mesh):
+    """Expand the 'data' shorthand in rule tuples to (pod, data) when the
+    mesh is multi-pod."""
+    da = data_axes(mesh)
+    if value == "data":
+        return da if len(da) > 1 else "data"
+    if isinstance(value, tuple):
+        out = []
+        for v in value:
+            if v == "data":
+                out.extend(da)
+            else:
+                out.append(v)
+        return tuple(out)
+    return value
+
+
+def rules_for(mesh, overrides: dict | None = None) -> dict:
+    rules = {
+        "batch": data_axes(mesh),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "mlp_ff": "model",
+        "experts": "model",
+        "moe_embed": None,   # large MoEs override to 'data' (EP x FSDP)
+        "embed": None,
+        "layers": None,
+        "gnn_in": None,
+        "table_rows": all_axes(mesh),
+        "": None,
+    }
+    for k, v in (overrides or {}).items():
+        rules[k] = _canon(v, mesh)
+    return rules
+
+
+def spec_shardings(specs, mesh, rules) -> Any:
+    def one(s: ParamSpec):
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        mesh_axes = []
+        for i, a in enumerate(axes):
+            ax = rules.get(a, None)
+            # replicate instead of producing degenerate shardings on dims
+            # smaller than the axis divisor (GSPMD would pad; we only keep
+            # intentional raggedness like 40 heads / 16)
+            mesh_axes.append(ax)
+        return NamedSharding(mesh, P(*mesh_axes))
+    return tree_map_specs(one, specs)
+
+
+def spec_struct(specs, shardings) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings, is_leaf=is_spec,
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def sds(shape, dtype, mesh, *pspec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, P(*pspec)))
+
+
+def opt_state_struct(optimizer, param_specs, mesh, rules):
+    """ShapeDtypeStructs (with shardings) for optimizer.init(params) output,
+    derived from the param specs so optimizer state shards like its param."""
+    from repro.train.optim import AdamW, Adafactor, SGD
+
+    p_shard = spec_shardings(param_specs, mesh, rules)
+    p_sds = spec_struct(param_specs, p_shard)
+    rep = replicated(mesh)
+
+    def like_param(spec: ParamSpec, sh):
+        return jax.ShapeDtypeStruct(spec.shape, np.float32, sharding=sh)
+
+    if isinstance(optimizer, (AdamW, SGD)):
+        moments = jax.tree.map(like_param, param_specs, p_shard, is_leaf=is_spec)
+        out = {"step": jax.ShapeDtypeStruct((), np.int32, sharding=rep),
+               "m": moments}
+        if isinstance(optimizer, AdamW):
+            out["v"] = moments
+        return out, p_sds
+
+    if isinstance(optimizer, Adafactor):
+        def stats(spec: ParamSpec):
+            axes = spec.axes if spec.axes else (None,) * len(spec.shape)
+            if optimizer._factored(spec.shape):
+                vr_axes = tuple(rules.get(a) for a in axes[:-1])
+                vc_axes = tuple(rules.get(a) for a in axes[:-2] + axes[-1:])
+                return {
+                    "vr": jax.ShapeDtypeStruct(spec.shape[:-1], np.float32,
+                                               sharding=NamedSharding(mesh, P(*vr_axes))),
+                    "vc": jax.ShapeDtypeStruct(spec.shape[:-2] + spec.shape[-1:], np.float32,
+                                               sharding=NamedSharding(mesh, P(*vc_axes))),
+                }
+            return {"v": jax.ShapeDtypeStruct(spec.shape, np.float32, sharding=rep)}
+
+        return ({"step": jax.ShapeDtypeStruct((), np.int32, sharding=rep),
+                 "stats": tree_map_specs(stats, param_specs)}, p_sds)
+
+    raise TypeError(type(optimizer))

@@ -1,0 +1,181 @@
+"""Attention variants: chunked-causal (flash-style online softmax), banded
+sliding-window, and KV-cache decode (incl. sequence-sharded split-KV).
+
+All functions take q/k/v in [B, S, H, Dh] layout; GQA is handled by
+reshaping query heads into (kv_head, group) pairs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding; x [B, S, H, Dh], positions [B, S] or [S]."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs          # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _gqa_scores(q, k):
+    """q [B,S,Hq,D], k [B,T,Hkv,D] -> scores [B,Hkv,G,S,T] (f32)."""
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, s, hkv, g, dh)
+    return jnp.einsum("bskgd,btkd->bkgst", qr, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(probs, v):
+    """probs [B,Hkv,G,S,T] (dtype of v), v [B,T,Hkv,D] -> [B,S,Hq,D]."""
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    b, s, hkv, g, dh = out.shape
+    return out.reshape(b, s, hkv * g, dh)
+
+
+def full_causal_attention(q, k, v, *, window: int = 0) -> jnp.ndarray:
+    """Reference attention (small seq). window=0 -> plain causal."""
+    b, s, hq, dh = q.shape
+    scores = _gqa_scores(q, k) / np.sqrt(dh)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(k.shape[1])[None, :]
+    mask = j <= i
+    if window:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return _gqa_combine(probs, v)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, q_chunk: int = 1024, kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention: O(S * kv_chunk) live memory.
+
+    The TPU-native analog of FlashAttention: q-blocks scan over kv-blocks
+    carrying (m, l, acc); XLA keeps blocks in VMEM-sized tiles.
+    """
+    b, s, hq, dh = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / np.sqrt(dh)
+
+    qb = q.reshape(b, nq, q_chunk, hq, dh).transpose(1, 0, 2, 3, 4)       # [nq, B, qc, Hq, D]
+    kb = k.reshape(b, nk, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    def per_q_block(qi, q_blk):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            qr = q_blk.reshape(b, q_chunk, hkv, g, dh)
+            sc = jnp.einsum("bskgd,btkd->bkgst", qr, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+            mask = (k_pos[None, :] <= q_pos[:, None])
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(v_blk.dtype), v_blk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (ks, kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, dh)
+
+    outs = lax.map(lambda args: per_q_block(*args), (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, dh).astype(q.dtype)
+
+
+def banded_window_attention(q, k, v, *, window: int) -> jnp.ndarray:
+    """Exact sliding-window causal attention with O(S * 2w) memory.
+
+    Queries are blocked at the window size; block i attends to blocks
+    {i-1, i}, which covers every position within `window` of the query.
+    Requires S % window == 0.
+    """
+    b, s0, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    w = window
+    s = -(-s0 // w) * w
+    if s != s0:
+        pad = ((0, 0), (0, s - s0), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    nb = s // w
+    scale = 1.0 / np.sqrt(dh)
+
+    qb = q.reshape(b, nb, w, hq, dh)
+    kb = k.reshape(b, nb, w, hkv, dh)
+    vb = v.reshape(b, nb, w, hkv, dh)
+    # previous block (block -1 = zeros, masked out)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)      # [B, nb, 2w, Hkv, D]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    qr = qb.reshape(b, nb, w, hkv, g, dh)
+    sc = jnp.einsum("bnskgd,bntkd->bnkgst", qr, k2,
+                    preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(w)[:, None]                   # position within block
+    kpos = jnp.arange(2 * w)[None, :] - w           # relative block offset
+    dist = qpos - kpos                              # query_pos - key_pos
+    mask = (dist >= 0) & (dist < w)                 # causal, within window
+    first_block = jnp.arange(nb) == 0
+    kv_is_prev = (jnp.arange(2 * w) < w)[None, :]
+    mask_nb = mask[None, :, :] & ~(first_block[:, None, None] & kv_is_prev)
+    sc = jnp.where(mask_nb[None, :, None, None], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnkgst,bntkd->bnskgd", probs, v2)
+    return out.reshape(b, s, hq, dh)[:, :s0]
+
+
+def decode_attention(
+    q: jnp.ndarray,        # [B, 1, Hq, Dh] current-token queries
+    cache_k: jnp.ndarray,  # [B, T, Hkv, Dh]
+    cache_v: jnp.ndarray,  # [B, T, Hkv, Dh]
+    valid: jnp.ndarray,    # [B, T] bool -- cache entries to attend to
+) -> jnp.ndarray:
+    """Single-token attention over a (possibly ring-buffer) KV cache.
+
+    If the cache's T axis is sharded over a mesh axis, XLA's SPMD partitioner
+    turns the max/sum reductions into all-reduces (split-KV decode /
+    flash-decoding analog): each shard computes partial (m, l, acc).
+    """
+    b, _, hq, dh = q.shape
+    hkv = cache_k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qr, cache_k,
+                    preferred_element_type=jnp.float32) / np.sqrt(dh)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, cache_v)
+    return out.reshape(b, 1, hq, dh)

@@ -1,0 +1,134 @@
+"""Parameter-spec system and shared layers (functional, no framework deps).
+
+Every model declares its parameters as a nested dict of ``ParamSpec``s with
+*logical* axis names. The launch layer maps logical axes to mesh axes
+(DP/TP/EP/SP rules per arch family), producing either ``NamedSharding``
+trees for the dry-run / real run, or materialized arrays for smoke tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    dtype: Any = jnp.bfloat16
+    axes: tuple = ()          # logical axis name per dim ("" = replicated)
+    init: str = "normal"      # normal | zeros | ones | scaled(fan_in)
+    scale: float = 0.02
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f: Callable[[ParamSpec], Any], specs):
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def shape_tree(specs):
+    """ShapeDtypeStructs for .lower() without allocation."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def materialize(specs, seed: int = 0):
+    """Small-scale param init for smoke tests and examples."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    rngs = jax.random.split(jax.random.PRNGKey(seed), max(len(leaves), 1))
+    out = []
+    for spec, rng in zip(leaves, rngs):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        elif spec.init == "scaled":
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            out.append(
+                (jax.random.normal(rng, spec.shape, jnp.float32) / np.sqrt(fan_in)).astype(spec.dtype)
+            )
+        else:
+            out.append((jax.random.normal(rng, spec.shape, jnp.float32) * spec.scale).astype(spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sharding_tree(specs, mesh, rules: dict):
+    """Logical axes -> NamedSharding per param."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(s: ParamSpec):
+        mesh_axes = tuple(rules.get(a, None) for a in s.axes) if s.axes else (None,) * len(s.shape)
+        return NamedSharding(mesh, P(*mesh_axes))
+
+    return tree_map_specs(one, specs)
+
+
+ShardFn = Callable[[jnp.ndarray, tuple], jnp.ndarray]
+
+
+def no_shard(x: jnp.ndarray, axes: tuple) -> jnp.ndarray:
+    return x
+
+
+def make_shard_fn(mesh, rules: dict) -> ShardFn:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x, axes):
+        mesh_axes = tuple(rules.get(a, None) for a in axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*mesh_axes)))
+
+    return f
+
+
+# ----------------------------------------------------------------- layers
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + w.astype(x.dtype))
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu_mlp_specs(d_in: int, d_hidden: int, layers: int, prefix_axes=("",)) -> dict:
+    """Plain MLP spec helper used by GNN/recsys models."""
+    specs = {}
+    dims = [d_in] + [d_hidden] * layers
+    for i in range(layers):
+        specs[f"w{i}"] = ParamSpec((dims[i], dims[i + 1]), jnp.float32, ("", ""), "scaled")
+        specs[f"b{i}"] = ParamSpec((dims[i + 1],), jnp.float32, ("",), "zeros")
+    return specs
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, layers: int, act=jax.nn.gelu, final_act: bool = True):
+    for i in range(layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < layers - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Token-mean CE; logits upcast to f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,223 @@
+"""E(3)-equivariant message passing (MACE, l_max=2, correlation order 3).
+
+Irrep features are dicts {l: [N, C, 2l+1]} over real spherical harmonics.
+The Clebsch-Gordan/Gaunt coefficients for the real basis are computed
+*exactly* at import time with a Gauss-Legendre x uniform-phi spherical
+quadrature (products of three l<=2 harmonics have polynomial degree <= 6, so
+K=8 GL nodes x M=16 phi nodes integrate them exactly).
+
+The O(L^6) CG contraction at l_max=2 is small; the eSCN O(L^3) rotation trick
+(DESIGN.md) only pays off at L >= 4, so the direct contraction is the right
+TPU choice here: it is a dense einsum the MXU handles natively.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec
+
+L_MAX = 2
+IRREP_DIMS = {0: 1, 1: 3, 2: 5}
+
+
+# ------------------------------------------------- real spherical harmonics
+def real_sph_harm(xyz: np.ndarray | jnp.ndarray, lib=jnp) -> dict:
+    """Orthonormal real SH for unit vectors xyz [..., 3], l = 0, 1, 2."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    c0 = 0.28209479177387814          # 1 / (2 sqrt(pi))
+    c1 = 0.4886025119029199           # sqrt(3 / 4pi)
+    c2a = 1.0925484305920792          # sqrt(15 / 4pi)
+    c2b = 0.31539156525252005         # sqrt(5 / 16pi)
+    c2c = 0.5462742152960396          # sqrt(15 / 16pi)
+    one = lib.ones_like(x)
+    y0 = lib.stack([c0 * one], axis=-1)
+    y1 = lib.stack([c1 * y, c1 * z, c1 * x], axis=-1)
+    y2 = lib.stack([
+        c2a * x * y,
+        c2a * y * z,
+        c2b * (3 * z * z - 1.0),
+        c2a * x * z,
+        c2c * (x * x - y * y),
+    ], axis=-1)
+    return {0: y0, 1: y1, 2: y2}
+
+
+@functools.lru_cache(maxsize=1)
+def gaunt_tables() -> dict:
+    """G[(l1,l2,l3)] [2l1+1, 2l2+1, 2l3+1]: exact triple-product integrals."""
+    k, m = 8, 16
+    xg, wg = np.polynomial.legendre.leggauss(k)      # cos(theta) nodes
+    phi = 2 * np.pi * np.arange(m) / m
+    ct = np.repeat(xg, m)
+    st = np.sqrt(1 - ct**2)
+    ph = np.tile(phi, k)
+    pts = np.stack([st * np.cos(ph), st * np.sin(ph), ct], axis=-1)
+    w = np.repeat(wg, m) * (2 * np.pi / m)
+    ys = real_sph_harm(pts, lib=np)
+    tables = {}
+    for l1 in range(L_MAX + 1):
+        for l2 in range(L_MAX + 1):
+            for l3 in range(L_MAX + 1):
+                g = np.einsum("p,pi,pj,pk->ijk", w, ys[l1], ys[l2], ys[l3])
+                g[np.abs(g) < 1e-12] = 0.0
+                if np.abs(g).max() > 0:
+                    tables[(l1, l2, l3)] = jnp.asarray(g, jnp.float32)
+    return tables
+
+
+def tensor_product(a: dict, b: dict, path_weights: dict | None = None) -> dict:
+    """CG/Gaunt product of two irrep dicts -> irrep dict (l <= L_MAX).
+
+    path_weights optionally holds [C] per-path channel scales keyed
+    "l1_l2_l3" (the learnable mixing of the correlation expansion)."""
+    tables = gaunt_tables()
+    out: Dict[int, jnp.ndarray] = {}
+    for (l1, l2, l3), g in tables.items():
+        if l1 not in a or l2 not in b or l3 > L_MAX:
+            continue
+        term = jnp.einsum("nci,ncj,ijk->nck", a[l1], b[l2], g)
+        if path_weights is not None:
+            key = f"{l1}_{l2}_{l3}"
+            if key in path_weights:
+                term = term * path_weights[key][None, :, None]
+        out[l3] = out.get(l3, 0) + term
+    return out
+
+
+# ----------------------------------------------------------------- MACE arch
+@dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128        # channels per irrep
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    n_species: int = 10
+    r_cut: float = 5.0
+    dtype: Any = jnp.float32
+    # distributed-path knobs (EXPERIMENTS.md SPerf): fetch only the 3-dim
+    # positions for remote nn endpoints (messages need dst position only),
+    # and carry messages/partials in bf16
+    dist_fetch_pos_only: bool = False
+    dist_msg_dtype: Any = jnp.float32
+
+
+def _paths():
+    return [f"{l1}_{l2}_{l3}" for (l1, l2, l3) in gaunt_tables().keys()]
+
+
+def mace_param_specs(cfg: MACEConfig) -> dict:
+    c, dt = cfg.d_hidden, cfg.dtype
+    layers = {}
+    for i in range(cfg.n_layers):
+        lp = {
+            # radial MLP: rbf -> per-(edge-SH l, channel) weights
+            "rad_w0": ParamSpec((cfg.n_rbf, 64), dt, ("", ""), "scaled"),
+            "rad_b0": ParamSpec((64,), dt, ("",), "zeros"),
+            "rad_w1": ParamSpec((64, (L_MAX + 1) * c), dt, ("", ""), "scaled"),
+            # channel mixing per l for messages and update
+            **{f"w_msg{l}": ParamSpec((c, c), dt, ("", ""), "scaled") for l in IRREP_DIMS},
+            **{f"w_self{l}": ParamSpec((c, c), dt, ("", ""), "scaled") for l in IRREP_DIMS},
+            **{f"w_b2_{l}": ParamSpec((c, c), dt, ("", ""), "scaled") for l in IRREP_DIMS},
+            **{f"w_b3_{l}": ParamSpec((c, c), dt, ("", ""), "scaled") for l in IRREP_DIMS},
+            # per-path weights of the correlation products
+            "pw2": {k: ParamSpec((c,), dt, ("",), "ones") for k in _paths()},
+            "pw3": {k: ParamSpec((c,), dt, ("",), "ones") for k in _paths()},
+            # invariant readout
+            "ro_w0": ParamSpec((c, 16), dt, ("", ""), "scaled"),
+            "ro_b0": ParamSpec((16,), dt, ("",), "zeros"),
+            "ro_w1": ParamSpec((16, 1), dt, ("", ""), "scaled"),
+        }
+        layers[f"layer{i}"] = lp
+    return {
+        "species_embed": ParamSpec((cfg.n_species, c), dt, ("", ""), "normal"),
+        "layers": layers,
+    }
+
+
+def bessel_rbf(r: jnp.ndarray, n: int, r_cut: float) -> jnp.ndarray:
+    """sin(k pi r / rc) / r radial basis with smooth cutoff envelope."""
+    r = jnp.maximum(r, 1e-6)
+    k = jnp.arange(1, n + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(k[None, :] * np.pi * r[:, None] / r_cut) / r[:, None]
+    u = jnp.clip(r / r_cut, 0, 1)
+    envelope = 1 - 10 * u**3 + 15 * u**4 - 6 * u**5     # polynomial cutoff
+    return basis * envelope[:, None]
+
+
+def mace_forward(cfg: MACEConfig, params: dict, positions, species, senders, receivers):
+    """Returns per-node invariant energies [N]."""
+    n = positions.shape[0]
+    c = cfg.d_hidden
+    h = {0: jnp.take(params["species_embed"], species, axis=0, mode="clip")[:, :, None]}
+    for l in range(1, L_MAX + 1):
+        h[l] = jnp.zeros((n, c, IRREP_DIMS[l]), cfg.dtype)
+
+    valid = senders < n
+    s = jnp.minimum(senders, n - 1)
+    r = jnp.minimum(receivers, n - 1)
+    vec = positions[s] - positions[r]
+    dist = jnp.sqrt(jnp.sum(vec * vec, -1) + 1e-12)
+    unit = vec / dist[:, None]
+    ys = real_sph_harm(unit)                            # {l: [E, 2l+1]}
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.r_cut) * valid[:, None]
+
+    energy = jnp.zeros((n,), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = params["layers"][f"layer{i}"]
+        rad = jax.nn.silu(rbf @ lp["rad_w0"] + lp["rad_b0"]) @ lp["rad_w1"]
+        rad = rad.reshape(-1, L_MAX + 1, c)             # [E, L+1, C]
+
+        # A-basis: aggregate radial x Y_l x (mixed sender scalars + features)
+        a: Dict[int, jnp.ndarray] = {}
+        for l in range(L_MAX + 1):
+            # messages from sender features of matching l plus scalar channel
+            h_s = h[0][s, :, 0] @ lp[f"w_msg{l}"]                    # [E, C]
+            m_scalar = rad[:, l, :][..., None] * h_s[..., None] * ys[l][:, None, :]
+            contrib = m_scalar
+            if l in h and i > 0:
+                m_feat = rad[:, l, :][..., None] * (h[l][s].transpose(0, 2, 1) @ lp[f"w_msg{l}"]).transpose(0, 2, 1)
+                contrib = contrib + m_feat
+            a[l] = jax.ops.segment_sum(contrib * valid[:, None, None], r, num_segments=n)
+
+        # correlation order 2 and 3 (B-basis) via iterated Gaunt products
+        b2 = tensor_product(a, a, {k: params["layers"][f"layer{i}"]["pw2"][k] for k in lp["pw2"]})
+        b3 = tensor_product(b2, a, {k: params["layers"][f"layer{i}"]["pw3"][k] for k in lp["pw3"]})
+
+        new_h = {}
+        for l in range(L_MAX + 1):
+            upd = (h[l].transpose(0, 2, 1) @ lp[f"w_self{l}"]).transpose(0, 2, 1)
+            upd = upd + a[l]
+            if l in b2:
+                upd = upd + (b2[l].transpose(0, 2, 1) @ lp[f"w_b2_{l}"]).transpose(0, 2, 1)
+            if l in b3:
+                upd = upd + (b3[l].transpose(0, 2, 1) @ lp[f"w_b3_{l}"]).transpose(0, 2, 1)
+            new_h[l] = upd
+        h = new_h
+
+        inv = h[0][:, :, 0]
+        e_i = jax.nn.silu(inv @ lp["ro_w0"] + lp["ro_b0"]) @ lp["ro_w1"]
+        energy = energy + e_i[:, 0].astype(jnp.float32)
+    return energy
+
+
+def mace_energy(cfg: MACEConfig, params: dict, g) -> jnp.ndarray:
+    """Total energy per graph: [n_graphs]."""
+    e_node = mace_forward(cfg, params, g.positions, g.species, g.senders, g.receivers)
+    if g.node_mask is not None:
+        e_node = e_node * g.node_mask.astype(e_node.dtype)
+    if g.graph_ids is None:
+        return jnp.sum(e_node)[None]
+    return jax.ops.segment_sum(e_node, g.graph_ids, num_segments=g.n_graphs)
+
+
+def mace_loss(cfg: MACEConfig, params: dict, g, target_energy):
+    pred = mace_energy(cfg, params, g)
+    return jnp.mean((pred - target_energy) ** 2)

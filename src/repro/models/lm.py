@@ -1,0 +1,333 @@
+"""Transformer language model: GQA/MQA, optional QKV bias, sliding-window /
+global attention patterns (gemma3 5:1), dense or MoE FFN, scan-over-layers
+with remat, prefill + KV-cache decode (ring buffers for window layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import attention as A
+from .common import ParamSpec, cross_entropy_loss, no_shard, rms_norm, swiglu
+from .moe import moe_apply, moe_param_specs
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    window: int = 0            # sliding-window size for local layers (0 = all full)
+    global_period: int = 0     # every k-th layer is global (gemma3: 6)
+    rope_theta: float = 10000.0
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    n_experts_pad: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True
+    tie_embeddings: bool = True
+    mlp: str = "swiglu"        # swiglu (3 mats) | gelu (2 mats, gpt-bigcode style)
+    moe_groups: int = 0        # >0: shard-local grouped routing (set to the
+                               # data-axis size by the launch layer; SPerf)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_is_global(self, i: int) -> bool:
+        if self.window == 0:
+            return True
+        if self.global_period == 0:
+            return False
+        return (i % self.global_period) == self.global_period - 1
+
+    def num_params(self) -> int:
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_heads + 2 * self.n_kv) * dh + self.n_heads * dh * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+            ffn += self.n_shared_experts * 3 * d * self.d_ff_expert
+        else:
+            ffn = (3 if self.mlp == "swiglu" else 2) * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+    def num_active_params(self) -> int:
+        if not self.is_moe:
+            return self.num_params()
+        d = self.d_model
+        attn = d * (self.n_heads + 2 * self.n_kv) * self.d_head + self.n_heads * self.d_head * d
+        ffn = (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff_expert + d * self.n_experts
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + emb
+
+
+# --------------------------------------------------------------------- specs
+def lm_param_specs(cfg: LMConfig) -> dict:
+    l, d, dt = cfg.n_layers, cfg.d_model, cfg.dtype
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    layers = {
+        "ln_attn": ParamSpec((l, d), jnp.float32, ("layers", "embed"), "zeros"),
+        "ln_mlp": ParamSpec((l, d), jnp.float32, ("layers", "embed"), "zeros"),
+        "wq": ParamSpec((l, d, hq * dh), dt, ("layers", "embed", "heads"), "scaled"),
+        "wk": ParamSpec((l, d, hkv * dh), dt, ("layers", "embed", "kv_heads"), "scaled"),
+        "wv": ParamSpec((l, d, hkv * dh), dt, ("layers", "embed", "kv_heads"), "scaled"),
+        "wo": ParamSpec((l, hq * dh, d), dt, ("layers", "heads", "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = ParamSpec((l, hq * dh), dt, ("layers", "heads"), "zeros")
+        layers["bk"] = ParamSpec((l, hkv * dh), dt, ("layers", "kv_heads"), "zeros")
+        layers["bv"] = ParamSpec((l, hkv * dh), dt, ("layers", "kv_heads"), "zeros")
+    if cfg.is_moe:
+        layers.update(moe_param_specs(l, d, cfg))
+    elif cfg.mlp == "swiglu":
+        layers["wi_gate"] = ParamSpec((l, d, cfg.d_ff), dt, ("layers", "embed", "ff"), "scaled")
+        layers["wi_up"] = ParamSpec((l, d, cfg.d_ff), dt, ("layers", "embed", "ff"), "scaled")
+        layers["wo_mlp"] = ParamSpec((l, cfg.d_ff, d), dt, ("layers", "ff", "embed"), "scaled")
+    else:
+        layers["wi_up"] = ParamSpec((l, d, cfg.d_ff), dt, ("layers", "embed", "ff"), "scaled")
+        layers["wo_mlp"] = ParamSpec((l, cfg.d_ff, d), dt, ("layers", "ff", "embed"), "scaled")
+    specs = {
+        "embed": ParamSpec((cfg.vocab, d), dt, ("vocab", "embed"), "normal"),
+        "final_norm": ParamSpec((d,), jnp.float32, ("embed",), "zeros"),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, cfg.vocab), dt, ("embed", "vocab"), "scaled")
+    return specs
+
+
+# ------------------------------------------------------------------- forward
+def _attention_block(cfg: LMConfig, lp: dict, x, positions, window: int, shard):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["ln_attn"])
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv, cfg.d_head)
+    q = A.apply_rope(q, positions, cfg.rope_theta)
+    k = A.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "", "heads", ""))
+    if window and window < s:
+        o = A.banded_window_attention(q, k, v, window=window)
+    elif s <= max(cfg.q_chunk, 2048):
+        o = A.full_causal_attention(q, k, v)
+    else:
+        o = A.chunked_causal_attention(q, k, v, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return x + o.reshape(b, s, cfg.n_heads * cfg.d_head) @ lp["wo"]
+
+
+def _ffn_block(cfg: LMConfig, lp: dict, x, shard):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["ln_mlp"])
+    if cfg.is_moe:
+        out, aux = moe_apply(lp, h.reshape(b * s, d), cfg, shard)
+        return x + out.reshape(b, s, d), aux
+    if cfg.mlp == "swiglu":
+        h = swiglu(h @ lp["wi_gate"], h @ lp["wi_up"])
+    else:
+        h = jax.nn.gelu((h @ lp["wi_up"]).astype(jnp.float32)).astype(h.dtype)
+    h = shard(h, ("batch", "", "ff"))
+    return x + h @ lp["wo_mlp"], jnp.float32(0)
+
+
+def _layer(cfg: LMConfig, lp: dict, x, positions, window: int, shard):
+    x = _attention_block(cfg, lp, x, positions, window, shard)
+    x = shard(x, ("batch", "", "embed"))
+    x, aux = _ffn_block(cfg, lp, x, shard)
+    x = shard(x, ("batch", "", "embed"))
+    return x, aux
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jnp.ndarray, shard=no_shard):
+    """tokens [B, S] -> (logits [B, S, V] f32, aux_loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0, mode="clip").astype(cfg.dtype)
+    x = shard(x, ("batch", "", "embed"))
+    positions = jnp.arange(s)
+
+    layer = partial(_layer, cfg)
+    if cfg.remat:
+        layer = jax.checkpoint(layer, static_argnums=(3, 4))  # window, shard_fn
+
+    if cfg.scan_layers and cfg.global_period == 0:
+        window = 0 if cfg.window == 0 else cfg.window
+
+        def body(carry, lp):
+            x, aux = carry
+            x2, a = layer(lp, x, positions, window, shard)
+            return (x2, aux + a), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    else:
+        aux = jnp.float32(0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            window = 0 if cfg.layer_is_global(i) else cfg.window
+            x, a = layer(lp, x, positions, window, shard)
+            aux = aux + a
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = shard(logits, ("batch", "", "vocab"))
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict, shard=no_shard):
+    logits, aux = forward(cfg, params, batch["tokens"], shard)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce + cfg.aux_loss_weight * aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------------- decode
+def init_cache_specs(cfg: LMConfig, batch: int, max_seq: int) -> list:
+    """Per-layer KV cache ShapeDtypeStructs (ring buffer for window layers)."""
+    caches = []
+    for i in range(cfg.n_layers):
+        t = max_seq if cfg.layer_is_global(i) else min(cfg.window, max_seq)
+        shp = (batch, t, cfg.n_kv, cfg.d_head)
+        caches.append({
+            "k": jax.ShapeDtypeStruct(shp, cfg.dtype),
+            "v": jax.ShapeDtypeStruct(shp, cfg.dtype),
+        })
+    return caches
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> list:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), init_cache_specs(cfg, batch, max_seq))
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: list, token: jnp.ndarray,
+                pos: jnp.ndarray, shard=no_shard):
+    """One-token serve step. token [B] int32, pos scalar int32 (current
+    position). Returns (logits [B, V], new cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0, mode="clip").astype(cfg.dtype)   # [B,1,D]
+    new_cache = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        is_global = cfg.layer_is_global(i)
+        c = cache[i]
+        t = c["k"].shape[1]
+        h = rms_norm(x, lp["ln_attn"])
+        q = h @ lp["wq"]
+        k = h @ lp["wk"]
+        v = h @ lp["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, 1, cfg.n_kv, cfg.d_head)
+        v = v.reshape(b, 1, cfg.n_kv, cfg.d_head)
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = A.apply_rope(q, posv, cfg.rope_theta)
+        k = A.apply_rope(k, posv, cfg.rope_theta)
+        slot = pos if is_global else pos % t
+        ck = lax.dynamic_update_slice(c["k"], k, (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(c["v"], v, (0, slot, 0, 0))
+        idx = jnp.arange(t)
+        valid = (idx <= pos) if is_global else ((idx <= pos) | (pos >= t))
+        o = A.decode_attention(q, ck, cv, jnp.broadcast_to(valid[None], (b, t)))
+        x = x + o.reshape(b, 1, cfg.n_heads * cfg.d_head) @ lp["wo"]
+        hh = rms_norm(x, lp["ln_mlp"])
+        if cfg.is_moe:
+            out, _ = moe_apply(lp, hh.reshape(b, cfg.d_model), cfg, shard)
+            x = x + out.reshape(b, 1, cfg.d_model)
+        elif cfg.mlp == "swiglu":
+            x = x + swiglu(hh @ lp["wi_gate"], hh @ lp["wi_up"]) @ lp["wo_mlp"]
+        else:
+            x = x + jax.nn.gelu((hh @ lp["wi_up"]).astype(jnp.float32)).astype(hh.dtype) @ lp["wo_mlp"]
+        new_cache.append({"k": ck, "v": cv})
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x[:, 0, :] @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jnp.ndarray, max_seq: int, shard=no_shard,
+            last_only: bool = False):
+    """Forward over a prompt, producing logits + a filled KV cache.
+
+    ``last_only=True`` computes logits for the final position only -- what a
+    serving system actually needs, and it avoids materializing the
+    [B, S, vocab] tensor (SPerf: the prefill peak-memory driver)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0, mode="clip").astype(cfg.dtype)
+    x = shard(x, ("batch", "", "embed"))
+    positions = jnp.arange(s)
+    cache = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        is_global = cfg.layer_is_global(i)
+        window = 0 if is_global else cfg.window
+        h = rms_norm(x, lp["ln_attn"])
+        q = h @ lp["wq"]
+        k = h @ lp["wk"]
+        v = h @ lp["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, s, cfg.n_kv, cfg.d_head)
+        v = v.reshape(b, s, cfg.n_kv, cfg.d_head)
+        q = A.apply_rope(q, positions, cfg.rope_theta)
+        k = A.apply_rope(k, positions, cfg.rope_theta)
+        if window and window < s:
+            o = A.banded_window_attention(q, k, v, window=window)
+            t = min(window, max_seq)
+            # ring-buffer layout: position p lives at slot p % t, so slot j
+            # holds position s - t + ((j - s % t) % t)
+            sel = s - t + (jnp.arange(t) - s % t) % t
+            ck, cv = k[:, sel], v[:, sel]
+        else:
+            if s <= max(cfg.q_chunk, 2048):
+                o = A.full_causal_attention(q, k, v)
+            else:
+                o = A.chunked_causal_attention(q, k, v, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            pad = max_seq - s
+            ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = x + o.reshape(b, s, cfg.n_heads * cfg.d_head) @ lp["wo"]
+        x2 = rms_norm(x, lp["ln_mlp"])
+        if cfg.is_moe:
+            out, _ = moe_apply(lp, x2.reshape(b * s, cfg.d_model), cfg, shard)
+            x = x + out.reshape(b, s, cfg.d_model)
+        else:
+            if cfg.mlp == "swiglu":
+                hm = swiglu(x2 @ lp["wi_gate"], x2 @ lp["wi_up"])
+            else:
+                hm = jax.nn.gelu((x2 @ lp["wi_up"]).astype(jnp.float32)).astype(x2.dtype)
+            hm = shard(hm, ("batch", "", "ff"))
+            x = x + hm @ lp["wo_mlp"]
+        x = shard(x, ("batch", "", "embed"))
+        cache.append({"k": ck, "v": cv})
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

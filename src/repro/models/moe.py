@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+The degree-separation lens (DESIGN.md Section 5): *shared* experts are the
+delegates of the token->expert bipartite graph -- every token touches them,
+so they are computed as a dense (TP-sharded) branch with no routing traffic;
+*routed* experts are the normal class -- each token touches k of E, dispatched
+point-to-point (the [E, C, D] buffers are sharded over the expert/mesh axis,
+so XLA lowers the x -> xe gather as the token all-to-all).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec, swiglu
+
+
+def moe_param_specs(l: int, d: int, cfg) -> dict:
+    e = cfg.n_experts_pad
+    fe = cfg.d_ff_expert
+    dt = cfg.dtype
+    specs = {
+        "router": ParamSpec((l, d, cfg.n_experts), jnp.float32, ("layers", "embed", ""), "scaled"),
+        "we_gate": ParamSpec((l, e, d, fe), dt, ("layers", "experts", "moe_embed", ""), "scaled"),
+        "we_up": ParamSpec((l, e, d, fe), dt, ("layers", "experts", "moe_embed", ""), "scaled"),
+        "we_down": ParamSpec((l, e, fe, d), dt, ("layers", "experts", "", "moe_embed"), "scaled"),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        specs.update({
+            "ws_gate": ParamSpec((l, d, fs), dt, ("layers", "embed", "ff"), "scaled"),
+            "ws_up": ParamSpec((l, d, fs), dt, ("layers", "embed", "ff"), "scaled"),
+            "ws_down": ParamSpec((l, fs, d), dt, ("layers", "ff", "embed"), "scaled"),
+        })
+    return specs
+
+
+def moe_apply_grouped(p: dict, x: jnp.ndarray, cfg, shard=None) -> tuple:
+    """Shard-local (GShard-style grouped) routing: x [T, D] is reshaped to
+    [G, T/G, D] with G = cfg.moe_groups constrained to the data axes, and
+    routing/top-k/sort run *inside* each group. Only routed activations move
+    between shards (the [G, E, C_loc, D] -> expert-sharded reshard = the
+    token all-to-all); without this XLA all-gathers every token to every
+    device once per layer (SPerf: the qwen2-moe prefill bottleneck)."""
+    t, d = x.shape
+    g = cfg.moe_groups
+    xg = x.reshape(g, t // g, d)
+    if shard is not None:
+        xg = shard(xg, ("batch", "", ""))
+    # NOTE (refuted SPerf iteration): threading the expert-parallel
+    # constraint through the vmap (shard instead of None) makes XLA
+    # reshard pathologically (413 GB of all-gathers at qwen2-moe prefill);
+    # leaving the inner einsum unconstrained lets the partitioner pick the
+    # 2.5x-better plan. Measured 2026-07-15, see EXPERIMENTS.md 4.3.
+    outs, aux = jax.vmap(lambda xs: moe_apply(p, xs, cfg, None))(xg)
+    if shard is not None:
+        outs = shard(outs, ("batch", "", ""))
+    return outs.reshape(t, d), jnp.mean(aux)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg, shard=None) -> tuple:
+    """x [T, D] -> ([T, D], aux_loss). ``p`` holds one layer's weights."""
+    if getattr(cfg, "moe_groups", 0) and x.shape[0] % cfg.moe_groups == 0 and shard is not None:
+        return moe_apply_grouped(p, x, cfg, shard)
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_pad = cfg.n_experts_pad
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+
+    logits = x.astype(jnp.float32) @ p["router"]                    # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                           # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    f = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(f * probs.mean(0))
+
+    # capacity-bounded dispatch: sort (token, slot) pairs by expert
+    e_flat = top_i.reshape(-1)                                       # [T*k]
+    order = jnp.argsort(e_flat)
+    es = e_flat[order]
+    pos = jnp.arange(t * k, dtype=jnp.int32) - jnp.searchsorted(es, es, side="left").astype(jnp.int32)
+    tok_s = (order // k).astype(jnp.int32)
+    w_s = top_w.reshape(-1)[order]
+    keep = pos < cap
+
+    disp_tok = jnp.full((e_pad, cap), -1, jnp.int32).at[
+        jnp.where(keep, es, 0), jnp.where(keep, pos, 0)
+    ].max(jnp.where(keep, tok_s, -1), mode="drop")
+    disp_w = jnp.zeros((e_pad, cap), jnp.float32).at[
+        jnp.where(keep, es, 0), jnp.where(keep, pos, 0)
+    ].add(jnp.where(keep, w_s, 0.0), mode="drop")
+
+    gather_ok = disp_tok >= 0
+    xe = x[jnp.clip(disp_tok, 0)] * gather_ok[..., None].astype(x.dtype)   # [E_pad, C, D]
+    if shard is not None:
+        xe = shard(xe, ("experts", "", ""))
+    h = swiglu(
+        jnp.einsum("ecd,edf->ecf", xe, p["we_gate"]),
+        jnp.einsum("ecd,edf->ecf", xe, p["we_up"]),
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_down"])                 # [E_pad, C, D]
+    ye = ye * disp_w[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((t, d), ye.dtype).at[jnp.clip(disp_tok.reshape(-1), 0)].add(
+        ye.reshape(e_pad * cap, d) * gather_ok.reshape(-1, 1).astype(ye.dtype),
+        mode="drop",
+    )
+
+    if cfg.n_shared_experts:
+        hs = swiglu(x @ p["ws_gate"], x @ p["ws_up"])
+        out = out + hs @ p["ws_down"]
+    return out.astype(x.dtype), aux

@@ -1,0 +1,165 @@
+"""xDeepFM (CIN + deep MLP + linear) with degree-separated embedding tables.
+
+The paper's technique mapped onto recsys (DESIGN.md Section 5): embedding
+rows are the vertices of the access graph, access frequency is the degree.
+Rows hotter than a threshold become **delegates** -- replicated on every
+device, gradients combined by all-reduce (exactly the delegate mask
+reduction, generalized). Cold rows are **normal** -- row-sharded
+``mod p`` across the mesh, looked up point-to-point. The data pipeline
+splits each sample's indices into (hot_idx, cold_idx) pairs host-side, so
+the model is shape-static.
+
+JAX has no native EmbeddingBag: lookups are ``jnp.take`` + masked select,
+with the multi-hot path served by kernels/segment_bag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec
+
+
+@dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_layers: tuple = (400, 400)
+    n_hot: int = 1 << 14        # delegate rows (replicated)
+    n_cold: int = 1 << 22       # sharded rows
+    d_query: int = 64           # retrieval-tower output dim
+    dtype: Any = jnp.float32
+
+
+def xdeepfm_param_specs(cfg: XDeepFMConfig) -> dict:
+    dt = cfg.dtype
+    d = cfg.embed_dim
+    f = cfg.n_sparse
+    specs = {
+        # delegate (hot) rows: replicated; normal (cold) rows: row-sharded
+        "emb_hot": ParamSpec((cfg.n_hot, d), dt, ("", ""), "normal"),
+        "emb_cold": ParamSpec((cfg.n_cold, d), dt, ("table_rows", ""), "normal"),
+        "lin_hot": ParamSpec((cfg.n_hot, 1), dt, ("", ""), "normal"),
+        "lin_cold": ParamSpec((cfg.n_cold, 1), dt, ("table_rows", ""), "normal"),
+        "bias": ParamSpec((1,), dt, ("",), "zeros"),
+    }
+    fk = f
+    for i, h in enumerate(cfg.cin_layers):
+        specs[f"cin_w{i}"] = ParamSpec((h, f * fk), dt, ("", ""), "scaled")
+        fk = h
+    specs["cin_out"] = ParamSpec((sum(cfg.cin_layers), 1), dt, ("", ""), "scaled")
+    dims = [f * d] + list(cfg.mlp_layers) + [1]
+    for i in range(len(dims) - 1):
+        specs[f"mlp_w{i}"] = ParamSpec((dims[i], dims[i + 1]), dt, ("", "mlp_ff" if i == 0 else ""), "scaled")
+        specs[f"mlp_b{i}"] = ParamSpec((dims[i + 1],), dt, ("",), "zeros")
+    # retrieval tower: user fields -> query vector
+    specs["q_w0"] = ParamSpec((f * d, 256), dt, ("", ""), "scaled")
+    specs["q_b0"] = ParamSpec((256,), dt, ("",), "zeros")
+    specs["q_w1"] = ParamSpec((256, cfg.d_query), dt, ("", ""), "scaled")
+    return specs
+
+
+def embed_lookup(params: dict, hot_idx: jnp.ndarray, cold_idx: jnp.ndarray,
+                 table: str = "emb") -> jnp.ndarray:
+    """Two-class lookup: hot rows from the replica, cold rows from the
+    sharded table. hot_idx/cold_idx are [B, F] with -1 where the other class
+    owns the field value."""
+    hot_ok = (hot_idx >= 0)[..., None]
+    cold_ok = (cold_idx >= 0)[..., None]
+    h = jnp.take(params[f"{table}_hot"], jnp.maximum(hot_idx, 0), axis=0)
+    c = jnp.take(params[f"{table}_cold"], jnp.maximum(cold_idx, 0), axis=0)
+    return jnp.where(hot_ok, h, 0) + jnp.where(cold_ok, c, 0)
+
+
+def cin_apply(cfg: XDeepFMConfig, params: dict, x0: jnp.ndarray, cin_op=None) -> jnp.ndarray:
+    """Compressed Interaction Network: returns [B, 1] logit contribution."""
+    from repro.kernels import ops as kops
+
+    cin = cin_op or kops.cin_fused
+    pooled = []
+    xk = x0
+    for i, h in enumerate(cfg.cin_layers):
+        xk = cin(x0, xk, params[f"cin_w{i}"])       # [B, H, D]
+        pooled.append(jnp.sum(xk, axis=-1))         # sum-pool over embed dim
+    feat = jnp.concatenate(pooled, axis=-1)          # [B, sum(H)]
+    return feat @ params["cin_out"]
+
+
+def xdeepfm_logits(cfg: XDeepFMConfig, params: dict, batch: dict, shard=None) -> jnp.ndarray:
+    """batch: hot_idx [B, F], cold_idx [B, F] -> logits [B]."""
+    x0 = embed_lookup(params, batch["hot_idx"], batch["cold_idx"], "emb")   # [B, F, D]
+    if shard is not None:
+        x0 = shard(x0, ("batch", "", ""))
+    b = x0.shape[0]
+    lin = embed_lookup(params, batch["hot_idx"], batch["cold_idx"], "lin")
+    logit = jnp.sum(lin, axis=(1, 2)) + params["bias"][0]
+    logit = logit + cin_apply(cfg, params, x0)[:, 0]
+    h = x0.reshape(b, -1)
+    n_mlp = len(cfg.mlp_layers) + 1
+    for i in range(n_mlp):
+        h = h @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"]
+        if i < n_mlp - 1:
+            h = jax.nn.relu(h)
+    return logit + h[:, 0]
+
+
+def xdeepfm_loss(cfg: XDeepFMConfig, params: dict, batch: dict, shard=None):
+    logits = xdeepfm_logits(cfg, params, batch, shard)
+    y = batch["labels"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(loss)
+
+
+def retrieval_scores(cfg: XDeepFMConfig, params: dict, batch: dict,
+                     candidates: jnp.ndarray, top_k: int = 100):
+    """One query against a candidate matrix [n_cand, d_query]; returns
+    (scores top_k, indices top_k). Batched dot, not a loop."""
+    x0 = embed_lookup(params, batch["hot_idx"], batch["cold_idx"], "emb")
+    q = x0.reshape(x0.shape[0], -1)
+    q = jax.nn.relu(q @ params["q_w0"] + params["q_b0"]) @ params["q_w1"]   # [B, dq]
+    scores = q @ candidates.T                                               # [B, n_cand]
+    return jax.lax.top_k(scores, top_k)
+
+
+# ----------------------------------------------------------- data utilities
+def make_vocab_sizes(n_fields: int = 39, total: int = 4_000_000, seed: int = 0) -> np.ndarray:
+    """Deterministic Criteo-like per-field vocabulary sizes (power law)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.pareto(0.7, n_fields) + 1
+    sizes = np.maximum((raw / raw.sum() * total).astype(np.int64), 4)
+    return sizes
+
+
+@dataclass
+class HotColdMap:
+    """Host-side frequency-delegate split of the concatenated table space."""
+    field_offsets: np.ndarray   # [F+1]
+    hot_of: np.ndarray          # [V_total] -> hot row id or -1
+    cold_of: np.ndarray         # [V_total] -> cold row id or -1
+    n_hot: int
+    n_cold: int
+
+    @staticmethod
+    def build(vocab_sizes: np.ndarray, frequencies: np.ndarray, hot_threshold: float):
+        """rows with access frequency > threshold become delegates."""
+        offsets = np.concatenate([[0], np.cumsum(vocab_sizes)])
+        v = int(offsets[-1])
+        hot = frequencies > hot_threshold
+        hot_of = np.full(v, -1, np.int64)
+        cold_of = np.full(v, -1, np.int64)
+        hot_of[hot] = np.arange(hot.sum())
+        cold_of[~hot] = np.arange((~hot).sum())
+        return HotColdMap(offsets, hot_of, cold_of, int(hot.sum()), int((~hot).sum()))
+
+    def split(self, raw_idx: np.ndarray) -> tuple:
+        """raw per-field indices [B, F] -> (hot_idx, cold_idx), both [B, F]."""
+        flat = raw_idx + self.field_offsets[:-1][None, :]
+        return self.hot_of[flat].astype(np.int32), self.cold_of[flat].astype(np.int32)

@@ -1,0 +1,63 @@
+"""Host-side builders: global graph data -> partitioned per-shard batches."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine as E
+from repro.core.partition import partition_edge_values
+from repro.core.types import PartitionedGraph
+
+
+def _masks(pg: PartitionedGraph, global_mask: np.ndarray | None):
+    dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+    if global_mask is None:
+        mask_n = np.asarray(pg.normal_valid).copy()
+        mask_d = np.ones((dvids.shape[0],), bool) if pg.d else np.zeros((1,), bool)
+    else:
+        m2 = global_mask[:, None].astype(np.float32)
+        mn, md = E.scatter_features(pg, m2)
+        mask_n = (mn[..., 0] > 0) & np.asarray(pg.normal_valid)
+        mask_d = (md[..., 0] > 0) if pg.d else np.zeros((1,), bool)
+    if pg.d:
+        # delegate slots are rows of normal_valid == False; keep only real ones
+        mask_d = mask_d[: max(pg.d, 1)]
+    return mask_n, np.broadcast_to(mask_d, (pg.p,) + mask_d.shape).copy()
+
+
+def gcn_batch(pg: PartitionedGraph, feats, labels, train_mask):
+    x_n, x_d = E.scatter_features(pg, feats)
+    y_n, y_d = E.scatter_features(pg, labels[:, None].astype(np.int32))
+    mask_n, mask_d = _masks(pg, train_mask)
+    p = pg.p
+    return {
+        "x_n": x_n, "x_d": np.broadcast_to(x_d, (p,) + x_d.shape).copy(),
+        "y_n": y_n[..., 0], "y_d": np.broadcast_to(y_d[..., 0], (p,) + y_d[..., 0].shape).copy(),
+        "mask_n": mask_n, "mask_d": mask_d,
+    }
+
+
+def mgn_batch(pg: PartitionedGraph, node_feats, edge_feats, targets, residual=False):
+    x_n, x_d = E.scatter_features(pg, node_feats)
+    y_n, y_d = E.scatter_features(pg, targets)
+    ef = partition_edge_values(pg, edge_feats)
+    mask_n, mask_d = _masks(pg, None)
+    p = pg.p
+    return {
+        "x_n": x_n, "x_d": np.broadcast_to(x_d, (p,) + x_d.shape).copy(),
+        "y_n": y_n, "y_d": np.broadcast_to(y_d, (p,) + y_d.shape).copy(),
+        "ef": ef, "mask_n": mask_n, "mask_d": mask_d,
+    }
+
+
+def mace_batch(pg: PartitionedGraph, positions, species, target_energy: float):
+    pos_n, pos_d = E.scatter_features(pg, positions)
+    spec_n, spec_d = E.scatter_features(pg, species[:, None].astype(np.int32))
+    mask_n, mask_d = _masks(pg, None)
+    p = pg.p
+    return {
+        "pos_n": pos_n, "pos_d": np.broadcast_to(pos_d, (p,) + pos_d.shape).copy(),
+        "spec_n": spec_n[..., 0],
+        "spec_d": np.broadcast_to(spec_d[..., 0], (p,) + spec_d[..., 0].shape).copy(),
+        "mask_n": mask_n, "mask_d": mask_d,
+        "target_energy": np.full((p,), target_energy, np.float32),
+    }

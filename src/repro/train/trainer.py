@@ -1,0 +1,56 @@
+"""Generic train-step builder: grad accumulation, metric plumbing, and the
+optimizer-in-backward variant for memory-extreme configs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def make_train_step(loss_fn: Callable, optimizer, grad_accum: int = 1):
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars).
+
+    Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With grad_accum > 1, the leading batch axis of every batch
+    leaf must be divisible by grad_accum; microbatch gradients are averaged
+    in f32 before one optimizer step (bounds MoE dispatch buffers and
+    activation peaks -- DESIGN.md Section 4).
+    """
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = vg(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]), batch
+            )
+
+            def one(carry, mb):
+                acc, metr = carry
+                (l, m), g = vg(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / grad_accum, acc, g)
+                metr = jax.tree.map(lambda a, b: a + b / grad_accum, metr, {"loss": l, **m})
+                return (acc, metr), None
+
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            probe = jax.eval_shape(lambda mb: vg(params, mb)[0][1], jax.tree.map(lambda x: x[0], micro))
+            zeros_m = {"loss": jnp.float32(0), **jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), probe)}
+            (grads, metrics), _ = lax.scan(one, (zeros_g, zeros_m), micro)
+            loss = metrics.pop("loss")
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **{k: v for k, v in metrics.items() if k != "loss"}}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,148 @@
+"""Distributed BFS/DOBFS vs the numpy oracle (paper Sections IV-V)."""
+import numpy as np
+import pytest
+
+from repro.core import bfs as B
+from repro.core.oracle import bfs_levels
+from repro.core.partition import partition_graph
+from repro.core.types import COOGraph, INF_LEVEL
+from repro.graphs.rmat import pick_sources, rmat_graph
+
+
+def run(g, pg, src, **kw):
+    kw.setdefault("max_iters", 40)
+    cfg = B.BFSConfig(**kw)
+    pgv = B.device_view(pg)
+    out = B.run_bfs_emulated(pgv, B.init_state(pg, src, cfg), cfg)
+    return B.gather_levels(pg, out), out
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(10, seed=7)
+
+
+@pytest.mark.parametrize("p_rank,p_gpu", [(1, 1), (1, 4), (2, 2), (3, 2)])
+@pytest.mark.parametrize("th", [16, 64])
+def test_bfs_matches_oracle(graph, p_rank, p_gpu, th):
+    pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    for src in pick_sources(graph, 3, seed=1):
+        ref = bfs_levels(graph, int(src))
+        for do in (False, True):
+            levels, out = run(graph, pg, int(src), enable_do=do)
+            np.testing.assert_array_equal(levels, ref)
+            assert np.asarray(out.nn_overflow).sum() == 0
+
+
+def test_uniquify_and_capacity(graph):
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=3)[0])
+    ref = bfs_levels(graph, src)
+    lev_u, out_u = run(graph, pg, src, uniquify=True)
+    lev_p, out_p = run(graph, pg, src, uniquify=False)
+    np.testing.assert_array_equal(lev_u, ref)
+    np.testing.assert_array_equal(lev_p, ref)
+    # uniquification can only reduce sent volume
+    assert np.asarray(out_u.nn_sent).sum() <= np.asarray(out_p.nn_sent).sum()
+
+
+def test_delegate_source(graph):
+    """BFS starting from a delegate (replicated) vertex."""
+    pg = partition_graph(graph, th=16, p_rank=2, p_gpu=2)
+    dvid = int(np.asarray(pg.delegate_vids).reshape(-1)[0])
+    ref = bfs_levels(graph, dvid)
+    levels, _ = run(graph, pg, dvid)
+    np.testing.assert_array_equal(levels, ref)
+
+
+def test_isolated_source():
+    g = COOGraph(16, np.array([0, 1], dtype=np.int64), np.array([1, 0], dtype=np.int64))
+    pg = partition_graph(g, th=4, p_rank=2, p_gpu=1)
+    levels, out = run(g, pg, 5)
+    assert levels[5] == 0
+    assert (levels[np.arange(16) != 5] == INF_LEVEL).all()
+    assert int(np.asarray(out.it)[0]) <= 2
+
+
+def test_line_graph_levels():
+    """Deterministic structure: a path graph has level == distance."""
+    n = 33
+    src = np.arange(n - 1, dtype=np.int64)
+    g = COOGraph(n, src, src + 1).symmetrized()
+    pg = partition_graph(g, th=1000, p_rank=2, p_gpu=2)  # all normal
+    assert pg.d == 0
+    levels, _ = run(g, pg, 0, max_iters=40)
+    np.testing.assert_array_equal(levels, np.arange(n))
+
+
+def test_plain_bfs_work_equals_component_edges(graph):
+    """Forward-only BFS examines each edge of the reached component once."""
+    pg = partition_graph(graph, th=64, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=5)[0])
+    ref = bfs_levels(graph, src)
+    _, out = run(graph, pg, src, enable_do=False)
+    expected = int((ref[graph.src] != INF_LEVEL).sum())
+    got = int(np.asarray(out.work_fwd).sum())
+    assert got == expected
+
+
+def test_do_reduces_workload(graph):
+    """Paper Fig. 8: DO cuts traversal workload roughly 3x on RMAT."""
+    pg = partition_graph(graph, th=64, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=9)[0])
+    _, out_do = run(graph, pg, src, enable_do=True)
+    _, out_pl = run(graph, pg, src, enable_do=False)
+    w_do = np.asarray(out_do.work_fwd).sum() + np.asarray(out_do.work_bwd).sum()
+    w_pl = np.asarray(out_pl.work_fwd).sum()
+    assert w_do < 0.6 * w_pl, (w_do, w_pl)
+
+
+def test_delegate_rounds_less_than_iters(graph):
+    """Paper Section V-B: delegate updates finish before normal vertices
+    (S' < S) on core-concentrated graphs."""
+    pg = partition_graph(graph, th=16, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=2)[0])
+    _, out = run(graph, pg, src)
+    s = int(np.asarray(out.it)[0])
+    s_prime = int(np.asarray(out.delegate_round)[0].sum())
+    assert s_prime <= s
+
+
+def test_delegate_u8_parity(graph):
+    """Optimized 1-byte delegate OR-reduction == int32 level reduction."""
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=13)[0])
+    lev_a, out_a = run(graph, pg, src, delegate_u8=False)
+    lev_b, out_b = run(graph, pg, src, delegate_u8=True)
+    np.testing.assert_array_equal(lev_a, lev_b)
+    assert int(np.asarray(out_a.it)[0]) == int(np.asarray(out_b.it)[0])
+
+
+def test_fractional_capacity(graph):
+    """cap_nn < 0 (expectation-sized bins) still completes without overflow
+    on RMAT at the default TH."""
+    pg = partition_graph(graph, th=64, p_rank=2, p_gpu=2)
+    src = int(pick_sources(graph, 1, seed=17)[0])
+    ref = bfs_levels(graph, src)
+    levels, out = run(graph, pg, src, cap_nn=-4, delegate_u8=True)
+    assert np.asarray(out.nn_overflow).sum() == 0
+    np.testing.assert_array_equal(levels, ref)
+
+
+def test_static_exchange_parity(graph):
+    """Static-slot 1-bit nn exchange == dynamic binned exchange == oracle."""
+    from repro.core import engine as E
+    pg = partition_graph(graph, th=64, p_rank=2, p_gpu=2)
+    plan = E.build_exchange_plan(pg)
+    planv = plan  # already stacked [p, ...]
+    src = int(pick_sources(graph, 1, seed=19)[0])
+    ref = bfs_levels(graph, src)
+    cfg = B.BFSConfig(max_iters=40, enable_do=True, delegate_u8=True,
+                      static_exchange=True)
+    pgv = B.device_view(pg)
+    out = B.run_bfs_emulated(pgv, B.init_state(pg, src, cfg), cfg, plan=planv)
+    np.testing.assert_array_equal(B.gather_levels(pg, out), ref)
+    # unique-slot signalling can only shrink the sent count
+    cfg2 = B.BFSConfig(max_iters=40, enable_do=True)
+    out2 = B.run_bfs_emulated(pgv, B.init_state(pg, src, cfg2), cfg2)
+    assert np.asarray(out.nn_sent).sum() <= np.asarray(out2.nn_sent).sum()

@@ -1,0 +1,163 @@
+"""Partitioning invariants (paper Section III: Algorithm 1 properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import distribute_edges, edge_kind_stats, partition_graph, select_delegates
+from repro.core.types import COOGraph, PartitionLayout
+from repro.graphs.rmat import rmat_graph
+
+
+def random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    return COOGraph(n, src, dst).without_self_loops().symmetrized()
+
+
+@pytest.fixture(scope="module")
+def rmat10():
+    return rmat_graph(10, seed=42)
+
+
+def _edges_of(pg):
+    """Reassemble the global edge multiset from the four subgraphs."""
+    layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
+    dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+    out = []
+    nn_owner = np.asarray(pg.nn_owner)
+    for kind in ("nn", "nd", "dn", "dd"):
+        csr = pg.subgraph(kind)
+        rowids, cols, m = np.asarray(csr.rowids), np.asarray(csr.cols), np.asarray(csr.m)
+        for k in range(pg.p):
+            mk = int(m[k])
+            r, c = rowids[k, :mk], cols[k, :mk]
+            src = (layout.global_of(np.full(mk, k), r) if kind[0] == "n" else dvids[r])
+            if kind == "nn":
+                dst = layout.global_of(nn_owner[k, :mk], c)
+            elif kind[1] == "n":
+                dst = layout.global_of(np.full(mk, k), c)
+            else:
+                dst = dvids[c]
+            out.append(np.stack([src, dst], 1))
+    return np.concatenate(out) if out else np.zeros((0, 2), np.int64)
+
+
+@pytest.mark.parametrize("th,p_rank,p_gpu", [(16, 1, 1), (32, 2, 2), (64, 4, 2), (8, 3, 1)])
+def test_edge_multiset_preserved(rmat10, th, p_rank, p_gpu):
+    pg = partition_graph(rmat10, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    got = _edges_of(pg)
+    want = np.stack([rmat10.src, rmat10.dst], 1)
+    key = lambda e: np.lexsort((e[:, 1], e[:, 0]))
+    np.testing.assert_array_equal(got[key(got)], want[key(want)])
+
+
+@pytest.mark.parametrize("th", [8, 64])
+def test_non_nn_subgraphs_symmetric(rmat10, th):
+    """Paper Section III-B 'Symmetric': nd on k mirrors dn on k; dd is locally
+    symmetric (undirected edge pairs land on the same partition)."""
+    pg = partition_graph(rmat10, th=th, p_rank=2, p_gpu=2)
+    for k in range(pg.p):
+        def edge_set(kind):
+            csr = pg.subgraph(kind)
+            mk = int(np.asarray(csr.m)[k])
+            r = np.asarray(csr.rowids)[k, :mk]
+            c = np.asarray(csr.cols)[k, :mk]
+            return set(zip(r.tolist(), c.tolist()))
+        nd = edge_set("nd")
+        dn = {(c, r) for (r, c) in edge_set("dn")}
+        assert nd == dn
+        dd = edge_set("dd")
+        assert dd == {(c, r) for (r, c) in dd}
+
+
+def test_bounded_ids(rmat10):
+    """Paper Section III-B 'Bounded size': every device-side id fits 32 bits
+    (nn destinations are pre-split into (owner, local) pairs -- DESIGN.md S3,
+    TPUs have no 64-bit lanes)."""
+    pg = partition_graph(rmat10, th=32, p_rank=2, p_gpu=2)
+    assert np.asarray(pg.nd.cols).max() < max(pg.d, 1)
+    assert np.asarray(pg.dd.cols).max() < max(pg.d, 1)
+    assert np.asarray(pg.dn.cols).max() < pg.n_local
+    assert np.asarray(pg.nn.cols).max() < pg.n_local
+    assert np.asarray(pg.nn_owner)[np.asarray(pg.nn_owner) < pg.p].size == np.asarray(pg.nn.m).sum()
+    for csr in (pg.nn, pg.nd, pg.dn, pg.dd):
+        assert csr.cols.dtype == np.int32
+
+
+def test_memory_model_vs_paper(rmat10):
+    """Table I: with a suitable TH the representation is ~1/3 of the 16m
+    edge list and a little more than half of flat CSR (8n+8m)."""
+    pg = partition_graph(rmat10, th=64, p_rank=2, p_gpu=2)
+    mem = pg.memory_bytes()
+    assert mem["m"] == rmat10.m
+    ratio_el = mem["total"] / mem["edge_list_16m"]
+    assert ratio_el < 0.5, ratio_el
+    expected = 8 * pg.n + 8 * pg.d * pg.p + 4 * mem["m"] + 4 * mem["e_nn"]
+    # stacked padding adds the +1 offset rows; model matches within 5%
+    assert abs(mem["total"] - expected) / expected < 0.05
+
+
+def test_distributor_balanced(rmat10):
+    """Paper Section III-B 'Balanced': per-partition edge counts are close."""
+    pg = partition_graph(rmat10, th=64, p_rank=4, p_gpu=2)
+    per_part = sum(np.asarray(pg.subgraph(k).m, dtype=np.int64) for k in ("nn", "nd", "dn", "dd"))
+    assert per_part.max() / max(per_part.mean(), 1) < 1.35
+
+
+def test_delegate_selection():
+    deg = np.array([0, 1, 5, 100, 6])
+    np.testing.assert_array_equal(select_delegates(deg, 5), [3, 4])
+
+
+def test_edge_kind_stats_sum_to_one(rmat10):
+    s = edge_kind_stats(rmat10, 32)
+    total = s["frac_nn"] + s["frac_nd"] + s["frac_dn"] + s["frac_dd"]
+    assert abs(total - 1.0) < 1e-9
+    assert abs(s["frac_nd"] - s["frac_dn"]) < 1e-9  # symmetric graph
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(8, 64),
+    m=st.integers(10, 300),
+    th=st.integers(1, 20),
+    p_rank=st.integers(1, 3),
+    p_gpu=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_partition_roundtrip_property(n, m, th, p_rank, p_gpu, seed):
+    g = random_graph(n, m, seed)
+    if g.m == 0:
+        return
+    pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    got = _edges_of(pg)
+    assert got.shape[0] == g.m
+    want = np.stack([g.src, g.dst], 1)
+    key = lambda e: np.lexsort((e[:, 1], e[:, 0]))
+    np.testing.assert_array_equal(got[key(got)], want[key(want)])
+
+
+@settings(max_examples=10, deadline=None)
+@given(th=st.integers(0, 200), seed=st.integers(0, 100))
+def test_algorithm1_owner_rule(th, seed):
+    """Owners follow Algorithm 1 exactly."""
+    g = random_graph(50, 400, seed)
+    if g.m == 0:
+        return
+    layout = PartitionLayout(g.n, 2, 2)
+    deg = g.out_degrees()
+    dvids = select_delegates(deg, th)
+    owner, kind = distribute_edges(g, layout, deg, dvids)
+    is_del = np.zeros(g.n, bool)
+    is_del[dvids] = True
+    for e in range(min(g.m, 200)):
+        u, v = g.src[e], g.dst[e]
+        if not is_del[u]:
+            assert owner[e] == layout.part_of(u) and kind[e] in (0, 1)
+        elif not is_del[v]:
+            assert owner[e] == layout.part_of(v) and kind[e] == 2
+        else:
+            du, dv = deg[u], deg[v]
+            pick = u if (du < dv or (du == dv and u <= v)) else v
+            assert owner[e] == layout.part_of(pick) and kind[e] == 3

@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cin_fused import cin_fused
+from repro.kernels.ell_pull import ell_pull
+from repro.kernels.mask_reduce import mask_reduce
+from repro.kernels.segment_bag import segment_bag
+
+
+# ----------------------------------------------------------------- ell_pull
+@pytest.mark.parametrize("r,w,n", [(7, 4, 40), (256, 32, 1000), (300, 7, 333), (1, 1, 32)])
+def test_ell_pull_shapes(r, w, n):
+    rng = np.random.default_rng(r * 1000 + w)
+    parents = rng.integers(-1, n, (r, w)).astype(np.int32)
+    flags = rng.random(n) < 0.3
+    mask = jnp.asarray(ref.pack_bitmask(flags))
+    active = rng.integers(0, 2, r).astype(np.int32)
+    got = ell_pull(jnp.asarray(parents), mask, jnp.asarray(active), tile_rows=64, interpret=True)
+    want = ref.ell_pull_ref(jnp.asarray(parents), mask, jnp.asarray(active))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 80), w=st.integers(1, 16), n=st.integers(1, 200), seed=st.integers(0, 99))
+def test_ell_pull_property(r, w, n, seed):
+    rng = np.random.default_rng(seed)
+    parents = rng.integers(-1, n, (r, w)).astype(np.int32)
+    flags = rng.random(n) < 0.5
+    mask = jnp.asarray(ref.pack_bitmask(flags))
+    active = rng.integers(0, 2, r).astype(np.int32)
+    got = ell_pull(jnp.asarray(parents), mask, jnp.asarray(active), tile_rows=32, interpret=True)
+    # independent numpy oracle
+    want = np.zeros(r, np.int32)
+    for i in range(r):
+        if active[i]:
+            ps = parents[i][parents[i] >= 0]
+            want[i] = int(any(flags[p] for p in ps))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# -------------------------------------------------------------- segment_bag
+@pytest.mark.parametrize("b,l,v,d,dt", [
+    (5, 3, 50, 8, jnp.float32), (130, 7, 200, 130, jnp.float32),
+    (64, 1, 10, 16, jnp.float32), (3, 20, 1000, 10, jnp.bfloat16),
+])
+def test_segment_bag_shapes(b, l, v, d, dt):
+    rng = np.random.default_rng(b + l)
+    table = jnp.asarray(rng.normal(size=(v, d)), dt)
+    idx = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
+    wgt = jnp.asarray(rng.normal(size=(b, l)), dt)
+    got = segment_bag(table, idx, wgt, tile_bags=32, tile_dim=64, interpret=True)
+    want = ref.segment_bag_ref(table, idx, wgt)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dt == jnp.bfloat16 else 1e-5, atol=1e-2 if dt == jnp.bfloat16 else 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 40), l=st.integers(1, 9), v=st.integers(2, 99), d=st.integers(1, 33),
+       seed=st.integers(0, 99))
+def test_segment_bag_property(b, l, v, d, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
+    got = segment_bag(table, idx, None, tile_bags=16, tile_dim=16, interpret=True)
+    want = ref.segment_bag_ref(table, idx, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- cin_fused
+@pytest.mark.parametrize("b,f0,fk,h,d", [(4, 3, 3, 5, 8), (70, 39, 20, 200, 10), (1, 2, 7, 3, 16)])
+def test_cin_fused_shapes(b, f0, fk, h, d):
+    rng = np.random.default_rng(b)
+    x0 = jnp.asarray(rng.normal(size=(b, f0, d)), jnp.float32)
+    xk = jnp.asarray(rng.normal(size=(b, fk, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h, f0 * fk)), jnp.float32)
+    got = cin_fused(x0, xk, w, tile_b=32, interpret=True)
+    want = ref.cin_fused_ref(x0, xk, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------- mask_reduce
+@pytest.mark.parametrize("k,nw", [(1, 5), (4, 700), (8, 513)])
+def test_mask_reduce_shapes(k, nw):
+    rng = np.random.default_rng(k * nw)
+    parts = jnp.asarray(rng.integers(0, 2**32, (k, nw), dtype=np.uint64).astype(np.uint32))
+    prev = jnp.asarray(rng.integers(0, 2**32, nw, dtype=np.uint64).astype(np.uint32))
+    got_or, got_cnt = mask_reduce(parts, prev, tile_words=256, interpret=True)
+    want_or, want_cnt = ref.mask_reduce_ref(parts, prev)
+    np.testing.assert_array_equal(np.asarray(got_or), np.asarray(want_or))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(want_cnt))
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(10, 4)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 10, (3, 2)), jnp.int32)
+    a = ops.segment_bag(table, idx)                      # auto: ref on CPU
+    b = ops.segment_bag(table, idx, force="pallas")      # interpret kernel
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
