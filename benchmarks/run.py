@@ -12,8 +12,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (comm_model, memory_model, options_ablation,
-                            strong_scaling, th_perf, th_sweep, weak_scaling)
+    from benchmarks import (comm_model, memory_model, msbfs_throughput,
+                            options_ablation, strong_scaling, th_perf,
+                            th_sweep, weak_scaling)
 
     suites = [
         ("th_sweep (Fig 5)", th_sweep.run),
@@ -23,6 +24,7 @@ def main() -> None:
         ("weak_scaling (Fig 9)", weak_scaling.run),
         ("strong_scaling (Fig 11)", strong_scaling.run),
         ("comm_model (Sec V)", comm_model.run),
+        ("msbfs_throughput (serve)", msbfs_throughput.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

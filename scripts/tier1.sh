@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify (see ROADMAP.md): the full test suite minus the slow
+# multi-device integration tests (run those with: scripts/tier1.sh -m slow).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -1,0 +1,67 @@
+"""Version shims for the supported JAX range (pinned floor: 0.4.37).
+
+The repo targets current JAX APIs but must run on the pinned 0.4.37
+toolchain, where three symbols differ:
+
+* ``lax.axis_size``           -- absent; ``lax.psum(1, axis)`` is the
+                                 portable spelling (constant-folded, so it
+                                 stays a Python int outside tracing).
+* ``jax.sharding.AxisType``   -- absent; meshes are built without
+                                 ``axis_types`` there (explicit-sharding
+                                 mode did not exist yet, so Auto is implied).
+* ``jax.shard_map``           -- still ``jax.experimental.shard_map`` with
+                                 the ``check_rep`` keyword instead of
+                                 ``check_vma``.
+
+Every call site in the repo routes through this module instead of
+version-checking inline.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax import lax
+
+AxisNames = Sequence[str] | str
+
+
+def axis_size(axis_names: AxisNames):
+    """Size of one named axis or the product over a sequence of them.
+
+    Works inside ``vmap(axis_name=...)`` / ``shard_map`` bodies on every
+    supported JAX version.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    total = 1
+    for name in axis_names:
+        if hasattr(lax, "axis_size"):
+            total *= lax.axis_size(name)
+        else:
+            total *= lax.psum(1, name)
+    return total
+
+
+def make_mesh(devices, axis_names):
+    """``Mesh`` with Auto axis types where the concept exists."""
+    from jax.sharding import Mesh
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return Mesh(devices, axis_names)
+    return Mesh(devices, axis_names,
+                axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` where available, else the experimental spelling
+    (whose ``check_rep`` is the old name of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

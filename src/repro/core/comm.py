@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 AxisNames = Sequence[str] | str
 
 
@@ -101,9 +103,36 @@ def exchange_payload(
 
 
 def axis_size(axis_names: AxisNames) -> int:
-    if isinstance(axis_names, str):
-        return lax.axis_size(axis_names)
-    total = 1
-    for name in axis_names:
-        total *= lax.axis_size(name)
-    return total
+    return compat.axis_size(axis_names)
+
+
+# -----------------------------------------------------------------------------
+# Word-wise collectives (batched multi-source BFS: the 1-bit visited status
+# widened to a W-bit lane word, one bit per concurrent query)
+
+
+def delegate_allreduce_or(words: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global bitwise-OR reduction of packed lane words ``[d, n_words]``
+    uint32 (or any shape) -- the paper's visited-bitmask MPI_AllReduce with
+    BOR, carrying one bit per (delegate, query) in the operand.
+
+    JAX has no OR all-reduce primitive, so this all-gathers the
+    per-partition words and OR-folds locally: each device receives p copies
+    of the word array (p bits/query/delegate on the wire, vs the true BOR
+    ring's 1), but for 32 queries that still undercuts the u8 ``pmax``
+    trick of the single-source path (8 p bits/query/delegate) by 8x. A ring
+    OR via ``ppermute`` would restore the O(1)-in-p volume if p grows large.
+    """
+    gathered = lax.all_gather(words, axis_names)  # [p, *words.shape]
+    return lax.reduce(gathered, jnp.uint32(0), lax.bitwise_or, (0,))
+
+
+def exchange_words(words: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """All-to-all of packed lane words: [p, cap, n_words] -> received.
+
+    The static-slot analog of :func:`exchange_normal` for batched queries:
+    each (owner, local) slot of the ExchangePlan carries one uint32 word per
+    32 queries, so total a2a volume is ``cap_total * n_words * 4`` bytes --
+    ~1 bit per query per slot, independent of how many queries are active.
+    """
+    return lax.all_to_all(words, axis_names, split_axis=0, concat_axis=0, tiled=True)

@@ -1,0 +1,432 @@
+"""Batched multi-source BFS (msBFS) over the four-subgraph representation.
+
+The paper's communication model carries **1 bit of visited status per
+vertex** -- a global bitmask OR-reduction for delegates and point-to-point
+exchange of newly visited normal vertices.  That model generalizes for free
+to ``W`` concurrent, independent BFS queries by widening each bit to a
+W-bit **lane word**: lane ``q`` of vertex ``v``'s word is query ``q``'s
+visited/frontier bit (the compression insight of multi-GPU msBFS work,
+arXiv:1704.00513, applied to the bitmap frontier of arXiv:1104.4518).
+
+Every traversal sweep, every delegate all-reduce, and every nn all_to_all
+is then amortized over the whole batch:
+
+* **push** is a scatter-OR of lane words along edges (one gather + one
+  scatter for all W queries);
+* **pull** is the chunked parent scan with *word-OR early exit*: a row
+  drops out of the scan as soon as the accumulated parent word covers all
+  of its still-unvisited lanes;
+* **delegate reduction** packs the candidate lanes to ``[d, n_words]``
+  uint32 and runs one global bitwise-OR all-reduce
+  (:func:`repro.core.comm.delegate_allreduce_or`);
+* **nn exchange** reuses the static :class:`~repro.core.engine.ExchangePlan`
+  slot layout and ships one uint32 word per 32 queries per unique
+  (owner, local) slot -- ``cap_total * n_words * 4`` bytes of a2a volume,
+  ~1 bit/query/slot, with no runtime sort;
+* **direction optimization** is decided *per lane* from per-lane FV/BV
+  estimates (frontier out-degree sums and unvisited counts computed by
+  masked popcounts), so a query in its high-frontier middle iterations can
+  pull while a late straggler query in the same batch still pushes.
+
+On device the lane axis is kept as trailing bools (vectorized compute);
+packing to uint32 happens exactly at the two communication boundaries, so
+the wire format matches the paper's Section V accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import compat
+
+from . import comm
+from .bfs import _decide_direction, _row_degrees
+from .types import CSR, INF_LEVEL, PartitionedGraph, PartitionLayout
+
+# -----------------------------------------------------------------------------
+# Lane-word packing
+
+
+def pack_lanes(lanes: jnp.ndarray) -> jnp.ndarray:
+    """bool [..., W] -> uint32 [..., ceil(W/32)]; lane q -> bit q%32 of
+    word q//32."""
+    w = lanes.shape[-1]
+    nw = -(-w // 32)
+    pad = nw * 32 - w
+    if pad:
+        lanes = jnp.concatenate(
+            [lanes, jnp.zeros(lanes.shape[:-1] + (pad,), lanes.dtype)], axis=-1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    grouped = lanes.reshape(lanes.shape[:-1] + (nw, 32)).astype(jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_lanes(words: jnp.ndarray, w: int) -> jnp.ndarray:
+    """uint32 [..., nw] -> bool [..., w] (inverse of :func:`pack_lanes`)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[..., None] >> shifts) & jnp.uint32(1)) > 0
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :w]
+
+
+def n_words(w: int) -> int:
+    return -(-w // 32)
+
+
+# -----------------------------------------------------------------------------
+# Config / state
+
+
+@dataclass(frozen=True)
+class MSBFSConfig:
+    n_queries: int = 32     # W: concurrent BFS queries per batch
+    max_iters: int = 64
+    enable_do: bool = True
+    pull_chunk: int = 32
+    # per-lane direction-switch factors, order (dd, dn, nd) as in BFSConfig
+    factor0: tuple = (0.5, 0.05, 1e-7)
+    factor1: tuple = (1e-3, 1e-4, 1e-9)
+
+
+@dataclass
+class MSBFSState:
+    level_n: Any     # [p, n_local, W] int32
+    level_d: Any     # [p, d, W] int32 (replicated content)
+    backward: Any    # [p, 3, W] bool -- per-lane direction per (dd, dn, nd)
+    it: Any          # [p] int32
+    done: Any        # [p] bool
+    # per-iteration statistics [p, max_iters]:
+    work_fwd: Any    # edge-lane pairs examined by pushes
+    work_bwd: Any    # parent-word checks by pulls
+    nn_sent: Any     # active (slot, lane) pairs signalled in the nn exchange
+    delegate_round: Any  # 1 if the delegate reduction carried updates
+
+
+jax.tree_util.register_dataclass(
+    MSBFSState,
+    data_fields=("level_n", "level_d", "backward", "it", "done",
+                 "work_fwd", "work_bwd", "nn_sent", "delegate_round"),
+    meta_fields=(),
+)
+
+
+def init_multi_state(
+    pg: PartitionedGraph, sources: Sequence[int], cfg: MSBFSConfig
+) -> MSBFSState:
+    """Seed one lane per source. Fewer than ``n_queries`` sources leaves the
+    tail lanes unseeded (a partial batch): they stay at INF_LEVEL and never
+    contribute work."""
+    w = cfg.n_queries
+    sources = np.asarray(sources, dtype=np.int64)
+    if sources.size > w:
+        raise ValueError(f"{sources.size} sources > n_queries={w}")
+    if sources.size and ((sources < 0).any() or (sources >= pg.n).any()):
+        bad = sources[(sources < 0) | (sources >= pg.n)]
+        raise ValueError(f"source ids out of range [0, {pg.n}): {bad[:8].tolist()}")
+    layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
+    p, nl = pg.p, pg.n_local
+    d = max(pg.d, 1)
+    level_n = np.full((p, nl, w), INF_LEVEL, dtype=np.int32)
+    level_d = np.full((p, d, w), INF_LEVEL, dtype=np.int32)
+    dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+    for q, src in enumerate(sources):
+        pos = int(np.searchsorted(dvids, src))
+        if pg.d and pos < pg.d and dvids[pos] == src:
+            level_d[:, pos, q] = 0
+        else:
+            level_n[int(layout.part_of(np.int64(src))),
+                    int(layout.local_of(np.int64(src))), q] = 0
+    mi = cfg.max_iters
+    z = lambda: np.zeros((p, mi), dtype=np.int32)
+    return MSBFSState(
+        level_n=level_n, level_d=level_d,
+        backward=np.zeros((p, 3, w), dtype=bool),
+        it=np.zeros((p,), dtype=np.int32),
+        done=np.zeros((p,), dtype=bool),
+        work_fwd=z(), work_bwd=z(), nn_sent=z(), delegate_round=z(),
+    )
+
+
+# -----------------------------------------------------------------------------
+# Lane-word traversal primitives
+
+
+def _push_active_multi(csr: CSR, frontier_rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-edge active lane words: [E, W] bool (frontier gather)."""
+    w = frontier_rows.shape[-1]
+    f_ext = jnp.concatenate(
+        [frontier_rows, jnp.zeros((1, w), frontier_rows.dtype)])
+    return f_ext[csr.rowids]
+
+
+def _push_scatter_multi(csr: CSR, act: jnp.ndarray, n_dst: int) -> jnp.ndarray:
+    """Scatter-OR of active lane words onto the destination domain."""
+    out = jnp.zeros((n_dst, act.shape[-1]), dtype=jnp.bool_)
+    return out.at[csr.cols].max(act, mode="drop")
+
+
+def _pull_chunked_multi(
+    csr: CSR, rows_need: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int
+):
+    """Chunked bottom-up pull with word-OR early exit.
+
+    ``rows_need [R, W]``: lanes each row still wants (unvisited, in backward
+    mode). A row scans its parent list chunk by chunk, OR-accumulating the
+    parents' frontier words, and drops out as soon as the accumulated word
+    covers every needed lane -- the lane-word generalization of the paper's
+    single-bit early exit. Returns (found [R, W] bool, work scalar int32).
+    """
+    deg = _row_degrees(csr)
+    n_rows = csr.n_rows
+    starts = csr.offsets[:-1]
+    ends = csr.offsets[1:]
+    w = rows_need.shape[-1]
+    max_chunks = -(-csr.e_max // chunk)
+
+    def remaining(k, acc):
+        unsat = jnp.any(rows_need & ~acc, axis=1)
+        return unsat & (deg > k * chunk)
+
+    def cond(carry):
+        k, acc, work = carry
+        return (k < max_chunks) & jnp.any(remaining(k, acc))
+
+    def body(carry):
+        k, acc, work = carry
+        rem = remaining(k, acc)
+        base = starts + k * chunk
+        idx = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        valid = rem[:, None] & (idx < ends[:, None])
+        cols = csr.cols[jnp.clip(idx, 0, csr.e_max - 1)]
+        lanes = col_frontier[cols] & valid[..., None]       # [R, chunk, W]
+        acc = acc | jnp.any(lanes, axis=1)
+        work = work + jnp.sum(valid.astype(jnp.int32))
+        return k + 1, acc, work
+
+    acc0 = jnp.zeros((n_rows, w), dtype=jnp.bool_)
+    _, acc, work = lax.while_loop(cond, body, (jnp.int32(0), acc0, jnp.int32(0)))
+    return acc & rows_need, work
+
+
+def _lane_count(mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane popcount of a [rows, W] mask -> [W] int32."""
+    return jnp.sum(mask.astype(jnp.int32), axis=0)
+
+
+def _lane_degree_sum(mask: jnp.ndarray, deg: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane frontier out-degree sum (FV estimate) -> [W] int32."""
+    return jnp.sum(mask.astype(jnp.int32) * deg[:, None], axis=0)
+
+
+# per-lane direction switch: bfs._decide_direction is elementwise, so it
+# applies to [W] lane vectors unchanged (one hysteresis state per query)
+_decide_direction_lane = _decide_direction
+
+
+def _bv_estimate_lane(q, s, u):
+    qf = q.astype(jnp.float32)
+    sf = s.astype(jnp.float32)
+    return jnp.where(q > 0, u.astype(jnp.float32) * (qf + sf) / jnp.maximum(qf, 1.0),
+                     jnp.inf)
+
+
+# -----------------------------------------------------------------------------
+# One superstep (runs per-partition under an axis name)
+
+
+def msbfs_step(
+    pgv: PartitionedGraph, plan, state: MSBFSState, cfg: MSBFSConfig, axis_names
+) -> MSBFSState:
+    p, nl = pgv.p, pgv.n_local
+    w = cfg.n_queries
+    d = state.level_d.shape[-2]
+    it = state.it
+
+    nv = pgv.normal_valid[:, None]
+    unvis_n = (state.level_n == INF_LEVEL) & nv
+    unvis_d = state.level_d == INF_LEVEL
+    frontier_n = (state.level_n == it) & nv
+    frontier_d = state.level_d == it
+
+    deg_nd = _row_degrees(pgv.nd)
+    deg_dn = _row_degrees(pgv.dn)
+    deg_dd = _row_degrees(pgv.dd)
+
+    # ---- per-lane direction decisions (paper Section IV-B, widened) -------
+    fv_dd = _lane_degree_sum(frontier_d, deg_dd)
+    fv_dn = _lane_degree_sum(frontier_d, deg_dn)
+    fv_nd = _lane_degree_sum(frontier_n, deg_nd)
+    if cfg.enable_do:
+        bv_dd = _bv_estimate_lane(
+            _lane_count(frontier_d & pgv.dd_src_mask[:, None]),
+            _lane_count(unvis_d & pgv.dd_src_mask[:, None]),
+            _lane_count(unvis_d & pgv.dd_src_mask[:, None]))
+        bv_dn = _bv_estimate_lane(
+            _lane_count(frontier_d & pgv.dn_src_mask[:, None]),
+            _lane_count(unvis_d & pgv.dn_src_mask[:, None]),
+            _lane_count(unvis_n & pgv.nd_src_mask[:, None]))
+        bv_nd = _bv_estimate_lane(
+            _lane_count(frontier_n & pgv.nd_src_mask[:, None]),
+            _lane_count(unvis_n & pgv.nd_src_mask[:, None]),
+            _lane_count(unvis_d & pgv.dn_src_mask[:, None]))
+        backward = jnp.stack([
+            _decide_direction_lane(state.backward[0], fv_dd, bv_dd, cfg.factor0[0], cfg.factor1[0]),
+            _decide_direction_lane(state.backward[1], fv_dn, bv_dn, cfg.factor0[1], cfg.factor1[1]),
+            _decide_direction_lane(state.backward[2], fv_nd, bv_nd, cfg.factor0[2], cfg.factor1[2]),
+        ])
+    else:
+        backward = jnp.zeros((3, w), dtype=jnp.bool_)
+    bwd_dd, bwd_dn, bwd_nd = backward[0], backward[1], backward[2]
+
+    # Lanes in forward mode push their frontier word; lanes in backward mode
+    # pull into their unvisited word. Results are disjoint per lane, so the
+    # per-lane merge is a plain OR.
+    # ---- dd: delegate -> delegate ----------------------------------------
+    push_dd = _push_scatter_multi(
+        pgv.dd, _push_active_multi(pgv.dd, frontier_d & ~bwd_dd[None, :]), d)
+    pull_dd, work_dd_b = _pull_chunked_multi(
+        pgv.dd, unvis_d & pgv.dd_src_mask[:, None] & bwd_dd[None, :],
+        frontier_d, cfg.pull_chunk)
+    cand_dd = push_dd | pull_dd
+
+    # ---- nd: normal -> delegate (pull walks the dn subgraph) --------------
+    push_nd = _push_scatter_multi(
+        pgv.nd, _push_active_multi(pgv.nd, frontier_n & ~bwd_nd[None, :]), d)
+    pull_nd, work_nd_b = _pull_chunked_multi(
+        pgv.dn, unvis_d & pgv.dn_src_mask[:, None] & bwd_nd[None, :],
+        frontier_n, cfg.pull_chunk)
+    cand_nd = push_nd | pull_nd
+
+    # ---- dn: delegate -> normal (pull walks the nd subgraph) --------------
+    push_dn = _push_scatter_multi(
+        pgv.dn, _push_active_multi(pgv.dn, frontier_d & ~bwd_dn[None, :]), nl)
+    pull_dn, work_dn_b = _pull_chunked_multi(
+        pgv.nd, unvis_n & pgv.nd_src_mask[:, None] & bwd_dn[None, :],
+        frontier_d, cfg.pull_chunk)
+    cand_dn = push_dn | pull_dn
+
+    # ---- nn: normal -> normal, forward only, packed-word static exchange --
+    act_nn = _push_active_multi(pgv.nn, frontier_n)          # [E, W]
+    sa = jnp.zeros((plan.cap_total + 1, w), jnp.bool_).at[plan.seg_ids].max(
+        act_nn[plan.perm])[: plan.cap_total]                 # unique slots
+    rows = jnp.minimum(plan.seg_owner, p - 1)
+    ok = plan.seg_owner < p
+    dense = jnp.zeros((p, plan.cap_peer, w), jnp.bool_).at[rows, plan.seg_pos].max(
+        sa & ok[:, None], mode="drop")
+    words = pack_lanes(dense)                                # [p, cap_peer, nw]
+    rwords = comm.exchange_words(words, axis_names)
+    rlanes = unpack_lanes(rwords, w)                         # [p, cap_peer, W]
+    locs = plan.recv_local                                   # [p, cap_peer]
+    recv = jnp.zeros((nl, w), dtype=jnp.bool_).at[
+        jnp.clip(locs.reshape(-1), 0, nl - 1)
+    ].max((rlanes & (locs >= 0)[..., None]).reshape(-1, w), mode="drop")
+    sent = jnp.sum(sa.astype(jnp.int32))
+
+    # ---- delegate global reduction: packed-word bitwise-OR all-reduce -----
+    cand_d_words = pack_lanes(cand_dd | cand_nd)             # [d, nw]
+    reduced = comm.delegate_allreduce_or(cand_d_words, axis_names)
+    newly_d = unpack_lanes(reduced, w) & unvis_d
+    new_level_d = jnp.where(newly_d, it + 1, state.level_d)
+    new_d_any = jnp.any(newly_d)
+
+    # ---- normal level updates ---------------------------------------------
+    newly_n = (cand_dn | recv) & unvis_n
+    new_level_n = jnp.where(newly_n, it + 1, state.level_n)
+
+    updated = comm.any_reduce(jnp.any(newly_n) | new_d_any, axis_names)
+
+    # ---- statistics --------------------------------------------------------
+    w_fwd = (
+        jnp.sum(jnp.where(bwd_dd, 0, fv_dd)) + jnp.sum(jnp.where(bwd_nd, 0, fv_nd))
+        + jnp.sum(jnp.where(bwd_dn, 0, fv_dn)) + jnp.sum(act_nn.astype(jnp.int32))
+    )
+    w_bwd = work_dd_b + work_nd_b + work_dn_b
+    slot = jnp.clip(it, 0, cfg.max_iters - 1)
+    return MSBFSState(
+        level_n=new_level_n,
+        level_d=new_level_d,
+        backward=backward,
+        it=it + 1,
+        done=~updated,
+        work_fwd=state.work_fwd.at[slot].set(w_fwd),
+        work_bwd=state.work_bwd.at[slot].set(w_bwd),
+        nn_sent=state.nn_sent.at[slot].set(sent),
+        delegate_round=state.delegate_round.at[slot].set(new_d_any.astype(jnp.int32)),
+    )
+
+
+# -----------------------------------------------------------------------------
+# Drivers
+
+
+def _run_loop(args, state: MSBFSState, cfg: MSBFSConfig, step_fn):
+    def cond(s):
+        return (~jnp.all(s.done)) & jnp.all(s.it < cfg.max_iters)
+
+    def body(s):
+        return step_fn(args, s)
+
+    return lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run_msbfs_emulated(
+    pgv_stacked: PartitionedGraph, plan_stacked, state: MSBFSState, cfg: MSBFSConfig
+) -> MSBFSState:
+    """Single-device emulation: partitions are vmap lanes, collectives run
+    over the vmapped axis (same contract as ``bfs.run_bfs_emulated``)."""
+    step = jax.vmap(
+        lambda pg_l, pl_l, st_l: msbfs_step(pg_l, pl_l, st_l, cfg, "p"),
+        axis_name="p", in_axes=(0, 0, 0),
+    )
+    return _run_loop((pgv_stacked, plan_stacked), state, cfg,
+                     lambda args, st: step(args[0], args[1], st))
+
+
+def make_sharded_msbfs(mesh, partition_axes, cfg: MSBFSConfig):
+    """shard_map msBFS over a real device mesh (each partition a device)."""
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(partition_axes)
+    spec_leaf = lambda x: P(axes, *([None] * (x.ndim - 1)))
+    specs_for = lambda tree: jax.tree.map(spec_leaf, tree)
+
+    def sharded_step(args, st):
+        pgv, plan = args
+        in_specs = (specs_for(pgv), specs_for(plan), specs_for(st))
+        out_specs = specs_for(st)
+
+        def local(pg_l, pl_l, st_l):
+            squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+            unsq = lambda t: jax.tree.map(lambda x: x[None], t)
+            return unsq(msbfs_step(squeeze(pg_l), squeeze(pl_l), squeeze(st_l),
+                                   cfg, axes))
+
+        return compat.shard_map(
+            local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(pgv, plan, st)
+
+    @jax.jit
+    def run(pgv, plan, st):
+        return _run_loop((pgv, plan), st, cfg, sharded_step)
+
+    return run
+
+
+def gather_levels_multi(pg: PartitionedGraph, state: MSBFSState) -> np.ndarray:
+    """Assemble per-query global hop distances: [W, n] int32."""
+    layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
+    level_n = np.asarray(state.level_n)           # [p, nl, W]
+    level_d = np.asarray(state.level_d)[0]        # [d, W]
+    vids = np.arange(pg.n, dtype=np.int64)
+    out = level_n[layout.part_of(vids), layout.local_of(vids)]   # [n, W]
+    out = np.ascontiguousarray(out.T)                            # [W, n]
+    if pg.d:
+        dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
+        out[:, dvids] = level_d[: pg.d].T
+    return out

@@ -1,0 +1,72 @@
+"""Multi-query (lane-word) pull visit kernel over ELL-padded parent lists.
+
+The msBFS generalization of :mod:`repro.kernels.ell_pull`: the frontier is
+no longer one bit per vertex but one ``n_words``-wide uint32 lane word per
+vertex (bit q of word k = query 32k+q's frontier membership).  Each row
+gathers its parents' lane words, OR-reduces them across the row, and masks
+with the row's still-unvisited lane word:
+
+    out[r] = (OR_{u in parents(r)} frontier[u]) & active[r]
+
+Same tiling as ell_pull: one program per tile of TR rows, parents and the
+frontier word table resident in VMEM. The OR across the (static) row width
+is an unrolled word-OR chain on the VPU, so callers should degree-bucket
+rows and keep K modest (column chunking / tile-level early exit is future
+work on the TPU path -- the ops wrapper today only dispatches pallas/ref).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_ROWS = 256
+
+
+def _kernel(parents_ref, words_ref, active_ref, out_ref):
+    cols = parents_ref[...]                     # [TR, K] int32, -1 padded
+    words = words_ref[...]                      # [N, NW] uint32 lane words
+    active = active_ref[...]                    # [TR, NW] uint32 wanted lanes
+    valid = cols >= 0
+    safe = jnp.where(valid, cols, 0)
+    w = jnp.take(words, safe, axis=0)           # [TR, K, NW] gather
+    w = jnp.where(valid[..., None], w, jnp.uint32(0))
+    acc = jnp.zeros_like(active)
+    for k in range(w.shape[1]):                 # unrolled word-OR chain
+        acc = acc | w[:, k]
+    out_ref[...] = acc & active
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def ell_pull_multi(
+    parents: jnp.ndarray,        # [R, K] int32, -1 padded
+    frontier_words: jnp.ndarray,  # [N, NW] uint32: per-vertex lane word
+    active_words: jnp.ndarray,   # [R, NW] uint32: lanes each row still wants
+    *,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r, k = parents.shape
+    nw = frontier_words.shape[-1]
+    if k == 0:  # no parent columns: pallas rejects zero-width blocks
+        return jnp.zeros((r, nw), jnp.uint32)
+    r_pad = -(-r // tile_rows) * tile_rows
+    parents = jnp.pad(parents, ((0, r_pad - r), (0, 0)), constant_values=-1)
+    active_words = jnp.pad(active_words, ((0, r_pad - r), (0, 0)))
+    grid = (r_pad // tile_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec(frontier_words.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tile_rows, nw), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, nw), jnp.uint32),
+        interpret=interpret,
+    )(parents, frontier_words, active_words)
+    return out[:r]

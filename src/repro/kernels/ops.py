@@ -12,6 +12,7 @@ import jax
 from . import ref
 from .cin_fused import cin_fused as _cin_pallas
 from .ell_pull import ell_pull as _ell_pallas
+from .ell_pull_multi import ell_pull_multi as _ell_multi_pallas
 from .mask_reduce import mask_reduce as _mask_pallas
 from .segment_bag import segment_bag as _bag_pallas
 
@@ -29,6 +30,14 @@ def ell_pull(parents, frontier_mask, active, *, force: str | None = None, **kw):
         return _ell_pallas(parents, frontier_mask, active,
                            interpret=jax.default_backend() != "tpu", **kw)
     return ref.ell_pull_ref(parents, frontier_mask, active)
+
+
+def ell_pull_multi(parents, frontier_words, active_words, *,
+                   force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _ell_multi_pallas(parents, frontier_words, active_words,
+                                 interpret=jax.default_backend() != "tpu", **kw)
+    return ref.ell_pull_multi_ref(parents, frontier_words, active_words)
 
 
 def segment_bag(table, indices, weights=None, *, force: str | None = None, **kw):

@@ -14,6 +14,18 @@ def ell_pull_ref(parents, frontier_mask, active):
     return (jnp.any(hit, axis=1) & (active == 1)).astype(jnp.int32)
 
 
+def ell_pull_multi_ref(parents, frontier_words, active_words):
+    """Lane-word pull: OR of parents' frontier words, masked by active."""
+    valid = parents >= 0
+    safe = jnp.where(valid, parents, 0)
+    w = frontier_words[safe]                              # [R, K, NW]
+    w = jnp.where(valid[..., None], w, jnp.uint32(0))
+    acc = jnp.zeros_like(active_words)
+    for k in range(w.shape[1]):
+        acc = acc | w[:, k]
+    return acc & active_words
+
+
 def segment_bag_ref(table, indices, weights=None):
     b, l = indices.shape
     if weights is None:

@@ -20,18 +20,18 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry-run driver must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import")
     import numpy as np
-    from jax.sharding import AxisType, Mesh
-    return Mesh(np.asarray(devices).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+
+    from repro.compat import make_mesh
+    return make_mesh(np.asarray(devices).reshape(shape), axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many host devices tests forced."""
     import numpy as np
-    from jax.sharding import AxisType, Mesh
+
+    from repro.compat import make_mesh
     ndev = math.prod(shape)
-    return Mesh(np.asarray(jax.devices()[:ndev]).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(np.asarray(jax.devices()[:ndev]).reshape(shape), axes)
 
 
 def data_axes(mesh) -> tuple:

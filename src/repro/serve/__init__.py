@@ -1,0 +1,16 @@
+"""BFS query serving on top of the batched multi-source BFS subsystem.
+
+``repro.serve`` turns the one-shot traversal engine into a query service:
+independent BFS queries (one source vertex each) are queued, packed 32-per-
+uint32-lane-word (``batcher``), traversed together by one msBFS sweep
+(``engine``), and memoized (``cache``).  See README.md in this package for
+how the lane-word packing maps onto the paper's Section V communication
+classes.
+"""
+from .batcher import QueryBatcher, pack_sources
+from .cache import LRUCache
+from .engine import BFSServeEngine, ServeStats
+
+__all__ = [
+    "BFSServeEngine", "LRUCache", "QueryBatcher", "ServeStats", "pack_sources",
+]

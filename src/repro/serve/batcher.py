@@ -1,0 +1,65 @@
+"""Query batching: pack independent BFS sources into lane-word batches.
+
+A batch is up to ``width`` sources; query q of a batch rides lane q of the
+msBFS lane word.  Partial batches are legal -- unseeded lanes start with an
+all-INF level column and never generate work -- so the batcher never waits:
+``drain`` flushes whatever is queued, full batches first.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def pack_sources(sources, width: int):
+    """Split a flat source list into lane batches of at most ``width``.
+
+    Returns a list of int64 arrays; every array but possibly the last has
+    exactly ``width`` entries (the last may be a partial batch).
+    """
+    sources = np.asarray(sources, dtype=np.int64)
+    if sources.ndim != 1:
+        raise ValueError("sources must be a flat sequence of vertex ids")
+    return [sources[i : i + width] for i in range(0, sources.size, width)]
+
+
+@dataclass
+class QueryBatcher:
+    """FIFO source queue with ticketed retrieval.
+
+    ``submit`` returns a monotonically increasing ticket; ``next_batch``
+    pops up to ``width`` queued queries in submission order as
+    (tickets, sources).
+    """
+
+    width: int = 32
+    _queue: deque = field(default_factory=deque)
+    _next_ticket: int = 0
+
+    def submit(self, source: int) -> int:
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, int(source)))
+        return ticket
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def next_batch(self):
+        """Pop up to ``width`` queries: (tickets [k], sources [k] int64)."""
+        k = min(self.width, len(self._queue))
+        items = [self._queue.popleft() for _ in range(k)]
+        tickets = [t for t, _ in items]
+        sources = np.asarray([s for _, s in items], dtype=np.int64)
+        return tickets, sources
+
+    def drain(self):
+        """Yield (tickets, sources) batches until the queue is empty."""
+        while self._queue:
+            yield self.next_batch()

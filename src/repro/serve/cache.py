@@ -1,0 +1,49 @@
+"""LRU memoization of BFS results, keyed by (graph id, source vertex).
+
+Serving traffic is heavy-tailed in practice (popular landmark vertices are
+queried over and over), so a small exact-result cache in front of the
+msBFS engine absorbs the repeats. Values are per-query level arrays
+([n] int32); the graph id keys the cache across engine instances / graph
+reloads so a stale graph never answers.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+
+class LRUCache:
+    """Plain ordered-dict LRU: get refreshes recency, put evicts the oldest
+    entry beyond ``capacity``. ``capacity <= 0`` disables caching."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = int(capacity)
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def get(self, key):
+        """Value for key, refreshing recency; None on miss."""
+        if key not in self._data:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._data.move_to_end(key)
+        return self._data[key]
+
+    def put(self, key, value) -> None:
+        if self.capacity <= 0:
+            return
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()

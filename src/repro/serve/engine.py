@@ -1,0 +1,124 @@
+"""Jitted msBFS serving engine: queue -> lane batches -> level arrays.
+
+One ``BFSServeEngine`` owns a partitioned graph, the static exchange plan,
+and a compiled msBFS runner (compiled once; every batch reuses it because
+lane-word shapes are static in ``n_queries``).  ``query`` answers a list of
+sources: cache hits are returned immediately, misses are packed into full
+lane batches, traversed, unpacked into per-query level arrays, and cached.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import bfs as B, engine as E, msbfs as M
+from repro.core.partition import partition_graph
+from repro.core.types import COOGraph, PartitionedGraph
+
+from .batcher import pack_sources
+from .cache import LRUCache
+
+
+@dataclass
+class ServeStats:
+    queries: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    lanes_used: int = 0       # seeded lanes across all batches
+    lanes_padded: int = 0     # unseeded (partial-batch) lanes
+
+    def as_dict(self) -> dict:
+        return {
+            "queries": self.queries, "batches": self.batches,
+            "cache_hits": self.cache_hits, "lanes_used": self.lanes_used,
+            "lanes_padded": self.lanes_padded,
+        }
+
+
+class BFSServeEngine:
+    """Serve single-source BFS level queries from batched msBFS sweeps.
+
+    Parameters
+    ----------
+    graph / pg : give either the raw ``COOGraph`` (partitioned here with
+        ``th``/``p_rank``/``p_gpu``) or an already-partitioned graph.
+    cfg : msBFS config; ``cfg.n_queries`` is the lane width W.
+    cache_capacity : LRU entries ((graph, source) -> levels); 0 disables.
+    graph_id : cache key namespace; defaults to a digest of the partition
+        structure so two engines on the same graph share semantics.
+    """
+
+    def __init__(
+        self,
+        graph: COOGraph | None = None,
+        *,
+        pg: PartitionedGraph | None = None,
+        th: int = 64,
+        p_rank: int = 1,
+        p_gpu: int = 2,
+        cfg: M.MSBFSConfig | None = None,
+        cache_capacity: int = 256,
+        graph_id: str | None = None,
+    ):
+        if pg is None:
+            if graph is None:
+                raise ValueError("need graph= or pg=")
+            pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
+        self.pg = pg
+        self.cfg = cfg or M.MSBFSConfig()
+        self.pgv = B.device_view(pg)
+        self.plan = E.build_exchange_plan(pg)
+        if graph_id is None:
+            m = np.asarray(pg.nn.m).sum() + np.asarray(pg.dd.m).sum()
+            graph_id = f"pg-n{pg.n}-p{pg.p}-d{pg.d}-th{pg.th}-m{int(m)}"
+        self.graph_id = graph_id
+        self.cache = LRUCache(cache_capacity)
+        self.stats = ServeStats()
+
+    # -- core batch path ----------------------------------------------------
+    def run_batch(self, sources: np.ndarray) -> np.ndarray:
+        """Traverse one lane batch (<= n_queries sources): [k, n] levels."""
+        st = M.init_multi_state(self.pg, sources, self.cfg)
+        out = M.run_msbfs_emulated(self.pgv, self.plan, st, self.cfg)
+        levels = M.gather_levels_multi(self.pg, out)
+        self.stats.batches += 1
+        self.stats.lanes_used += len(sources)
+        self.stats.lanes_padded += self.cfg.n_queries - len(sources)
+        return levels[: len(sources)]
+
+    # -- public API ---------------------------------------------------------
+    def query(self, sources) -> np.ndarray:
+        """Levels for each source: [len(sources), n] int32.
+
+        Duplicate and cached sources cost nothing extra; only unique misses
+        occupy lanes.
+        """
+        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+        if sources.size == 0:
+            return np.zeros((0, self.pg.n), dtype=np.int32)
+        self.stats.queries += len(sources)
+        results: dict[int, np.ndarray] = {}
+        misses: list[int] = []
+        for s in dict.fromkeys(sources.tolist()):  # dedup, keep order
+            hit = self.cache.get((self.graph_id, s))
+            if hit is not None:
+                self.stats.cache_hits += 1
+                results[s] = hit
+            else:
+                misses.append(s)
+        for batch in pack_sources(misses, self.cfg.n_queries):
+            levels = self.run_batch(batch)
+            for s, lev in zip(batch.tolist(), levels):
+                lev = np.array(lev)  # own the row: don't pin the [W, n] batch
+                results[s] = lev
+                self.cache.put((self.graph_id, s), lev)
+        return np.stack([results[s] for s in sources.tolist()])
+
+    def query_one(self, source: int) -> np.ndarray:
+        return self.query([source])[0]
+
+    def warmup(self) -> None:
+        """Compile the msBFS runner (vertex 0 as a throwaway source)."""
+        st = M.init_multi_state(self.pg, [0], self.cfg)
+        M.run_msbfs_emulated(self.pgv, self.plan, st, self.cfg)

@@ -1,7 +1,7 @@
 """Partitioning invariants (paper Section III: Algorithm 1 properties)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.partition import distribute_edges, edge_kind_stats, partition_graph, select_delegates
 from repro.core.types import COOGraph, PartitionLayout

@@ -1,0 +1,157 @@
+"""Batched multi-source BFS vs single-source oracle runs, lane-word packing
+round-trips, word-wise collectives, and the ell_pull_multi kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bfs as B, comm, engine as E, msbfs as M
+from repro.core.oracle import bfs_levels
+from repro.core.partition import partition_graph
+from repro.core.types import INF_LEVEL
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.kernels import ops, ref
+from repro.kernels.ell_pull_multi import ell_pull_multi
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(10, seed=7)
+
+
+def run_multi(g, pg, sources, **kw):
+    kw.setdefault("max_iters", 40)
+    cfg = M.MSBFSConfig(**kw)
+    plan = E.build_exchange_plan(pg)
+    pgv = B.device_view(pg)
+    out = M.run_msbfs_emulated(pgv, plan, M.init_multi_state(pg, sources, cfg), cfg)
+    return M.gather_levels_multi(pg, out), out
+
+
+# ------------------------------------------------------------- lane packing
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(3)
+    for w in (1, 31, 32, 33, 64, 96):
+        lanes = jnp.asarray(rng.random((5, 7, w)) < 0.4)
+        words = M.pack_lanes(lanes)
+        assert words.dtype == jnp.uint32
+        assert words.shape == (5, 7, -(-w // 32))
+        np.testing.assert_array_equal(np.asarray(M.unpack_lanes(words, w)),
+                                      np.asarray(lanes))
+
+
+# ----------------------------------------------------------- msBFS parity
+@pytest.mark.parametrize("p_rank,p_gpu,th", [(1, 1, 32), (2, 2, 32), (3, 2, 64)])
+def test_msbfs_matches_single_source(graph, p_rank, p_gpu, th):
+    pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    sources = pick_sources(graph, 6, seed=1)
+    if pg.d:  # always include a delegate (replicated) source in the batch
+        sources = np.concatenate(
+            [sources, np.asarray(pg.delegate_vids).reshape(-1)[:1]])
+    levels, out = run_multi(graph, pg, sources)
+    for q, src in enumerate(sources):
+        np.testing.assert_array_equal(levels[q], bfs_levels(graph, int(src)))
+
+
+def test_msbfs_partial_batch(graph):
+    """< n_queries sources: tail lanes stay INF and the seeded lanes match."""
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    sources = pick_sources(graph, 3, seed=5)
+    levels, _ = run_multi(graph, pg, sources, n_queries=32)
+    for q, src in enumerate(sources):
+        np.testing.assert_array_equal(levels[q], bfs_levels(graph, int(src)))
+    assert (levels[len(sources):] == INF_LEVEL).all()
+
+
+def test_msbfs_plain_matches_do(graph):
+    """Per-lane direction optimization changes work, never results."""
+    pg = partition_graph(graph, th=64, p_rank=2, p_gpu=2)
+    sources = pick_sources(graph, 5, seed=9)
+    lev_do, out_do = run_multi(graph, pg, sources, enable_do=True)
+    lev_pl, out_pl = run_multi(graph, pg, sources, enable_do=False)
+    np.testing.assert_array_equal(lev_do, lev_pl)
+    w_do = int(np.asarray(out_do.work_fwd).sum() + np.asarray(out_do.work_bwd).sum())
+    w_pl = int(np.asarray(out_pl.work_fwd).sum())
+    assert w_do < w_pl  # DO on RMAT cuts the shared traversal workload
+
+
+def test_msbfs_multiword_lanes(graph):
+    """W=64 -> two uint32 words per vertex on every comm boundary."""
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    sources = pick_sources(graph, 40, seed=11)  # spills into word 2
+    levels, _ = run_multi(graph, pg, sources, n_queries=64)
+    for q in (0, 31, 32, 39):  # lanes straddling the word boundary
+        np.testing.assert_array_equal(levels[q], bfs_levels(graph, int(sources[q])))
+
+
+def test_msbfs_rejects_oversized_batch(graph):
+    pg = partition_graph(graph, th=32, p_rank=1, p_gpu=2)
+    cfg = M.MSBFSConfig(n_queries=4)
+    with pytest.raises(ValueError):
+        M.init_multi_state(pg, list(range(5)), cfg)
+
+
+# ------------------------------------------------------ word-wise collectives
+def test_delegate_allreduce_or_is_bitwise_or():
+    rng = np.random.default_rng(0)
+    words = jnp.asarray(rng.integers(0, 2**32, (4, 9, 2), dtype=np.uint32))
+    got = jax.vmap(lambda x: comm.delegate_allreduce_or(x, "p"), axis_name="p")(words)
+    want = np.bitwise_or.reduce(np.asarray(words), axis=0)
+    for k in range(4):  # replicated result on every partition
+        np.testing.assert_array_equal(np.asarray(got)[k], want)
+
+
+def test_exchange_words_transposes_peer_blocks():
+    p, cap, nw = 4, 2, 1
+    words = jnp.arange(p * p * cap * nw, dtype=jnp.uint32).reshape(p, p * cap, nw)
+    got = jax.vmap(lambda x: comm.exchange_words(x, "p"), axis_name="p")(words)
+    want = np.asarray(words).reshape(p, p, cap, nw).transpose(1, 0, 2, 3).reshape(
+        p, p * cap, nw)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ------------------------------------------------------------ kernel parity
+@pytest.mark.parametrize("r,k,n,nw", [(7, 4, 40, 1), (256, 32, 500, 2),
+                                      (33, 7, 100, 3), (1, 1, 32, 1)])
+def test_ell_pull_multi_pallas_matches_ref(r, k, n, nw):
+    rng = np.random.default_rng(r * 100 + k)
+    parents = jnp.asarray(rng.integers(-1, n, (r, k)).astype(np.int32))
+    fw = jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
+    aw = jnp.asarray(rng.integers(0, 2**32, (r, nw), dtype=np.uint32))
+    got = ell_pull_multi(parents, fw, aw, interpret=True)
+    want = ref.ell_pull_multi_ref(parents, fw, aw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(ops.ell_pull_multi(parents, fw, aw)),
+                                  np.asarray(want))
+
+
+def test_ell_pull_multi_matches_msbfs_pull(graph):
+    """The kernel computes exactly the lane-word pull decision that
+    msbfs._pull_chunked_multi makes on a real dd subgraph."""
+    pg = partition_graph(graph, th=32, p_rank=1, p_gpu=1)
+    dd = pg.dd
+    offsets = np.asarray(dd.offsets)[0]
+    cols = np.asarray(dd.cols)[0]
+    d = max(pg.d, 1)
+    w = 32
+    rng = np.random.default_rng(17)
+    frontier = rng.random((d, w)) < 0.15
+    need = (rng.random((d, w)) < 0.5) & ~frontier
+
+    csr1 = type(dd)(offsets=jnp.asarray(offsets), cols=jnp.asarray(cols),
+                    rowids=jnp.asarray(np.asarray(dd.rowids)[0]),
+                    m=jnp.asarray(np.asarray(dd.m)[0]), eidx=None,
+                    n_rows=dd.n_rows, e_max=dd.e_max)
+    found, _ = M._pull_chunked_multi(csr1, jnp.asarray(need),
+                                     jnp.asarray(frontier), chunk=16)
+
+    deg = offsets[1:] - offsets[:-1]
+    width = max(int(deg.max()), 1)
+    ell = np.full((d, width), -1, np.int32)
+    for row in range(d):
+        ell[row, : deg[row]] = cols[offsets[row]: offsets[row + 1]]
+    got_words = ops.ell_pull_multi(
+        jnp.asarray(ell), M.pack_lanes(jnp.asarray(frontier)),
+        M.pack_lanes(jnp.asarray(need)), force="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(M.unpack_lanes(got_words, w)), np.asarray(found))

@@ -1,0 +1,98 @@
+"""Serving layer: batcher packing, LRU cache semantics, engine parity."""
+import numpy as np
+import pytest
+
+from repro.core.oracle import bfs_levels
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.serve import BFSServeEngine, LRUCache, QueryBatcher, pack_sources
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(10, seed=7)
+
+
+@pytest.fixture(scope="module")
+def engine(graph):
+    eng = BFSServeEngine(graph, th=32, p_rank=2, p_gpu=2, cache_capacity=64)
+    eng.warmup()
+    return eng
+
+
+# ---------------------------------------------------------------- batcher
+def test_pack_sources_splits_and_pads_nothing():
+    batches = pack_sources(np.arange(70), width=32)
+    assert [len(b) for b in batches] == [32, 32, 6]
+    np.testing.assert_array_equal(np.concatenate(batches), np.arange(70))
+    assert pack_sources([], width=32) == []
+
+
+def test_batcher_fifo_and_drain():
+    b = QueryBatcher(width=4)
+    tickets = [b.submit(s) for s in (10, 11, 12, 13, 14)]
+    assert tickets == [0, 1, 2, 3, 4] and b.pending == 5
+    t1, s1 = b.next_batch()
+    assert t1 == [0, 1, 2, 3] and list(s1) == [10, 11, 12, 13]
+    got = list(b.drain())
+    assert len(got) == 1 and list(got[0][1]) == [14]
+    assert b.pending == 0
+
+
+# ------------------------------------------------------------------ cache
+def test_lru_eviction_order():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1        # refreshes "a"
+    c.put("c", 3)                 # evicts "b" (least recent)
+    assert "a" in c and "c" in c and "b" not in c
+    assert c.get("b") is None
+    assert c.hits == 1 and c.misses == 1
+
+
+def test_lru_capacity_zero_disables():
+    c = LRUCache(0)
+    c.put("a", 1)
+    assert len(c) == 0 and c.get("a") is None
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_levels_match_oracle(graph, engine):
+    sources = pick_sources(graph, 5, seed=2)
+    levels = engine.query(sources)
+    assert levels.shape == (5, graph.n)
+    for s, lev in zip(sources, levels):
+        np.testing.assert_array_equal(lev, bfs_levels(graph, int(s)))
+
+
+def test_engine_multi_batch_and_cache(graph, engine):
+    """> W unique sources span batches; a repeat call is served from cache."""
+    start_batches = engine.stats.batches
+    sources = pick_sources(graph, 40, seed=3)
+    levels = engine.query(sources)
+    assert engine.stats.batches == start_batches + 2      # 32 + 8 lanes
+    for s, lev in zip(sources[::7], levels[::7]):
+        np.testing.assert_array_equal(lev, bfs_levels(graph, int(s)))
+
+    hits0 = engine.stats.cache_hits
+    again = engine.query(sources[:10])
+    assert engine.stats.batches == start_batches + 2      # no new traversal
+    assert engine.stats.cache_hits == hits0 + 10
+    np.testing.assert_array_equal(again, levels[:10])
+
+
+def test_engine_duplicates_share_a_lane(graph, engine):
+    """Duplicate sources in one request only occupy one lane."""
+    lanes0 = engine.stats.lanes_used
+    src = int(pick_sources(graph, 1, seed=11)[0])
+    engine.cache.clear()
+    levels = engine.query([src, src, src])
+    assert engine.stats.lanes_used == lanes0 + 1
+    np.testing.assert_array_equal(levels[0], levels[2])
+
+
+def test_engine_delegate_source(graph, engine):
+    """A replicated (delegate) vertex is a valid query source."""
+    dvid = int(np.asarray(engine.pg.delegate_vids).reshape(-1)[0])
+    lev = engine.query_one(dvid)
+    np.testing.assert_array_equal(lev, bfs_levels(graph, dvid))
