@@ -6,6 +6,15 @@ sweep answers 32 independent queries for roughly the cost of one traversal
 batched queries/sec should beat 32 sequential ``run_bfs_emulated`` calls by
 well over 4x on CPU emulation. Both sides are timed post-compilation, and
 every batched answer is checked against the single-source runs.
+
+``--refill`` benchmarks the second amortization layer: batch-at-a-time
+retirement vs the mid-flight lane-refill pipeline on a *skewed-depth* query
+stream (an RMAT core with path tails attached: most queries converge in
+O(log n) sweeps, a few need ~tail-length). Batch mode pays every batch's
+slowest lane; refill reseeds converged lanes mid-flight, so deep stragglers
+never idle the rest of the word. Reports queries/sec for both engines plus
+refill lane utilization, and checks every refill answer against the numpy
+oracle.
 """
 from __future__ import annotations
 
@@ -75,5 +84,76 @@ def run(scale: int = 12, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
             "speedup": qps_batch / qps_seq}
 
 
+def run_refill(scale: int = 11, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
+               n_queries: int = 32, n_tails: int = 6, tail_len: int = 96,
+               requests: int = 64, min_speedup: float = 1.2):
+    """Lane refill vs batch-at-a-time on a skewed-depth query stream."""
+    from repro.core.oracle import bfs_levels
+    from repro.graphs.synthetic import with_tails
+    from repro.serve import BFSServeEngine
+
+    core = rmat_graph(scale, seed=3)
+    g, tips = with_tails(core, n_tails=n_tails, length=tail_len, seed=5)
+    pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+
+    # the stream: mostly shallow core sources, a few deep tail tips, spread
+    # deterministically so every lane batch of the baseline catches >= 1
+    # straggler (the common case for random arrival order)
+    shallow = pick_sources(core, requests - len(tips), seed=1)
+    stream = np.asarray(shallow, np.int64).tolist()
+    gap = max(1, len(stream) // max(len(tips), 1))
+    for i, tip in enumerate(tips):
+        stream.insert(i * gap, int(tip))
+    stream = np.asarray(stream[:requests], np.int64)
+
+    # deepest query: tip -> core -> another tail's tip (~2*tail_len + diam)
+    cfg = M.MSBFSConfig(n_queries=n_queries, max_iters=2 * tail_len + 48,
+                        enable_do=True)
+    mk = lambda refill: BFSServeEngine(pg=pg, cfg=cfg, cache_capacity=0,
+                                       refill=refill)
+
+    results = {}
+    for name, refill in (("batch", False), ("refill", True)):
+        eng = mk(refill)
+        eng.warmup()
+        t0 = time.perf_counter()
+        levels = eng.query(stream)
+        dt = time.perf_counter() - t0
+        results[name] = (eng, levels, dt)
+
+    eng_b, lev_b, t_b = results["batch"]
+    eng_r, lev_r, t_r = results["refill"]
+
+    # exact oracle parity for every lane of the refill run (incl. refilled)
+    for s in np.unique(stream):
+        idx = int(np.nonzero(stream == s)[0][0])
+        np.testing.assert_array_equal(lev_r[idx], bfs_levels(g, int(s)))
+    np.testing.assert_array_equal(lev_r, lev_b)
+
+    qps_b = len(stream) / t_b
+    qps_r = len(stream) / t_r
+    emit("msbfs/serve_batch", 1e6 * t_b / len(stream),
+         f"qps={qps_b:.2f} batches={eng_b.stats.batches}")
+    emit("msbfs/serve_refill", 1e6 * t_r / len(stream),
+         f"qps={qps_r:.2f} sweeps={eng_r.stats.sweeps} "
+         f"refills={eng_r.stats.refills} "
+         f"lane_util={eng_r.stats.lane_utilization:.0%} "
+         f"speedup={qps_r / qps_b:.2f}x")
+    assert qps_r >= min_speedup * qps_b, (
+        f"refill {qps_r:.2f} q/s < {min_speedup}x batch {qps_b:.2f} q/s")
+    return {"qps_batch": qps_b, "qps_refill": qps_r,
+            "speedup": qps_r / qps_b,
+            "lane_utilization": eng_r.stats.lane_utilization,
+            "sweeps": eng_r.stats.sweeps, "refills": eng_r.stats.refills}
+
+
 if __name__ == "__main__":
-    print(run())
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--refill", action="store_true",
+                    help="benchmark lane refill vs batch-at-a-time serving")
+    ap.add_argument("--scale", type=int, default=None)
+    args = ap.parse_args()
+    kw = {} if args.scale is None else {"scale": args.scale}
+    print(run_refill(**kw) if args.refill else run(**kw))

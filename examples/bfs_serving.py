@@ -6,7 +6,7 @@ lane-word, traversed by shared msBFS sweeps, and memoized in the LRU cache.
 Prints throughput, batch utilization, and cache hit rate, and spot-checks
 answers against the numpy oracle.
 
-    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400]
+    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] [--refill]
 """
 import argparse
 import time
@@ -24,11 +24,14 @@ def main():
     ap.add_argument("--th", type=int, default=64)
     ap.add_argument("--requests", type=int, default=400)
     ap.add_argument("--hot", type=int, default=16, help="hot landmark count")
+    ap.add_argument("--refill", action="store_true",
+                    help="serve through the mid-flight lane-refill pipeline")
     args = ap.parse_args()
 
     g = rmat_graph(args.scale, seed=0)
     print(f"graph n={g.n:,} m={g.m:,}")
-    eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512)
+    eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
+                         refill=args.refill)
     t0 = time.perf_counter()
     eng.warmup()
     print(f"engine ready (compile {time.perf_counter() - t0:.1f}s, "
@@ -61,6 +64,9 @@ def main():
     print(f"msbfs batches={st.batches} lane_utilization="
           f"{st.lanes_used / max(st.lanes_used + st.lanes_padded, 1):.0%} "
           f"cache_hit_rate={st.cache_hits / max(st.queries, 1):.0%}")
+    if args.refill:
+        print(f"refill sweeps={st.sweeps} reseeds={st.refills} "
+              f"busy_lane_sweeps={st.lane_utilization:.0%}")
 
     for t in list(answers)[:: max(len(answers) // 5, 1)]:
         ref = bfs_levels(g, tickets[t])

@@ -136,3 +136,17 @@ def exchange_words(words: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
     ~1 bit per query per slot, independent of how many queries are active.
     """
     return lax.all_to_all(words, axis_names, split_axis=0, concat_axis=0, tiled=True)
+
+
+def lane_any_reduce(lane_flags: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global per-lane OR of ``[W]`` bool flags (elementwise pmax).
+
+    The convergence mask of the lane-refill serving path: lane ``q``'s flag
+    is "query q marked a new vertex somewhere this sweep"; the reduced word
+    going to False is what lets the engine retire the lane mid-flight. The
+    whole reduction is one W-bit word per partition -- it adds no per-vertex
+    wire volume, and the packed formats of :func:`delegate_allreduce_or` and
+    :func:`exchange_words` are untouched by refill (a reseeded lane is just
+    a fresh bit pattern in the same words).
+    """
+    return lax.pmax(lane_flags.astype(jnp.int32), axis_names) > 0

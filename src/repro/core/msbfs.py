@@ -34,6 +34,7 @@ the wire format matches the paper's Section V accounting.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Sequence
@@ -95,11 +96,25 @@ class MSBFSConfig:
 
 @dataclass
 class MSBFSState:
-    level_n: Any     # [p, n_local, W] int32
+    """Lane-word traversal state.
+
+    Levels are stored *absolute*: a lane seeded at global iteration ``b``
+    records its sources at value ``b`` (``base_it``) and depth-k vertices at
+    ``b + k``, so the shared frontier test ``level == it`` needs no per-lane
+    offset arithmetic on the hot path. :func:`gather_levels_multi` subtracts
+    ``base_it`` when unpacking -- that is what makes mid-flight lane refill
+    (retire a converged lane, reseed it with a fresh query at the current
+    ``it``) a pure state edit with no change to the sweep.
+    """
+
+    level_n: Any     # [p, n_local, W] int32 (absolute: base_it[q] + depth)
     level_d: Any     # [p, d, W] int32 (replicated content)
     backward: Any    # [p, 3, W] bool -- per-lane direction per (dd, dn, nd)
     it: Any          # [p] int32
     done: Any        # [p] bool
+    lane_active: Any  # [p, W] bool -- lane's frontier non-empty at `it`
+                      # (replicated; the refill retirement signal)
+    base_it: Any     # [p, W] int32 -- iteration the lane was (re)seeded at
     # per-iteration statistics [p, max_iters]:
     work_fwd: Any    # edge-lane pairs examined by pushes
     work_bwd: Any    # parent-word checks by pulls
@@ -110,9 +125,35 @@ class MSBFSState:
 jax.tree_util.register_dataclass(
     MSBFSState,
     data_fields=("level_n", "level_d", "backward", "it", "done",
+                 "lane_active", "base_it",
                  "work_fwd", "work_bwd", "nn_sent", "delegate_round"),
     meta_fields=(),
 )
+
+
+def validate_sources(pg: PartitionedGraph, sources) -> np.ndarray:
+    """Flatten to int64 and range-check source vertex ids."""
+    sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+    if sources.size and ((sources < 0).any() or (sources >= pg.n).any()):
+        bad = sources[(sources < 0) | (sources >= pg.n)]
+        raise ValueError(f"source ids out of range [0, {pg.n}): {bad[:8].tolist()}")
+    return sources
+
+
+def locate_source(pg: PartitionedGraph, layout: PartitionLayout,
+                  dvids: np.ndarray, src: int):
+    """Host-side seed coordinates for one source vertex.
+
+    Returns ``(is_delegate, part, local, dpos)``: a delegate source seeds
+    position ``dpos`` of the replicated delegate levels; a normal source
+    seeds ``(part, local)`` of the owner partition. Shared by
+    :func:`init_multi_state` and the serve engine's refill reseeding so the
+    delegate classification can never diverge between the two."""
+    pos = int(np.searchsorted(dvids, src))
+    if pg.d and pos < pg.d and dvids[pos] == src:
+        return True, 0, 0, pos
+    return (False, int(layout.part_of(np.int64(src))),
+            int(layout.local_of(np.int64(src))), 0)
 
 
 def init_multi_state(
@@ -122,12 +163,9 @@ def init_multi_state(
     tail lanes unseeded (a partial batch): they stay at INF_LEVEL and never
     contribute work."""
     w = cfg.n_queries
-    sources = np.asarray(sources, dtype=np.int64)
+    sources = validate_sources(pg, sources)
     if sources.size > w:
         raise ValueError(f"{sources.size} sources > n_queries={w}")
-    if sources.size and ((sources < 0).any() or (sources >= pg.n).any()):
-        bad = sources[(sources < 0) | (sources >= pg.n)]
-        raise ValueError(f"source ids out of range [0, {pg.n}): {bad[:8].tolist()}")
     layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
     p, nl = pg.p, pg.n_local
     d = max(pg.d, 1)
@@ -135,19 +173,22 @@ def init_multi_state(
     level_d = np.full((p, d, w), INF_LEVEL, dtype=np.int32)
     dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
     for q, src in enumerate(sources):
-        pos = int(np.searchsorted(dvids, src))
-        if pg.d and pos < pg.d and dvids[pos] == src:
-            level_d[:, pos, q] = 0
+        isd, part, local, dpos = locate_source(pg, layout, dvids, int(src))
+        if isd:
+            level_d[:, dpos, q] = 0
         else:
-            level_n[int(layout.part_of(np.int64(src))),
-                    int(layout.local_of(np.int64(src))), q] = 0
+            level_n[part, local, q] = 0
     mi = cfg.max_iters
     z = lambda: np.zeros((p, mi), dtype=np.int32)
+    lane_active = np.zeros((p, w), dtype=bool)
+    lane_active[:, : sources.size] = True
     return MSBFSState(
         level_n=level_n, level_d=level_d,
         backward=np.zeros((p, 3, w), dtype=bool),
         it=np.zeros((p,), dtype=np.int32),
         done=np.zeros((p,), dtype=bool),
+        lane_active=lane_active,
+        base_it=np.zeros((p, w), dtype=np.int32),
         work_fwd=z(), work_bwd=z(), nn_sent=z(), delegate_round=z(),
     )
 
@@ -279,6 +320,11 @@ def msbfs_step(
             _decide_direction_lane(state.backward[1], fv_dn, bv_dn, cfg.factor0[1], cfg.factor1[1]),
             _decide_direction_lane(state.backward[2], fv_nd, bv_nd, cfg.factor0[2], cfg.factor1[2]),
         ])
+        # A converged (or never-seeded) lane must not pull: its frontier word
+        # is empty, so its pull early-exit can never be satisfied and would
+        # rescan full parent lists every remaining sweep. Forward mode with
+        # an empty frontier is free.
+        backward = backward & state.lane_active[None, :]
     else:
         backward = jnp.zeros((3, w), dtype=jnp.bool_)
     bwd_dd, bwd_dn, bwd_nd = backward[0], backward[1], backward[2]
@@ -338,7 +384,11 @@ def msbfs_step(
     newly_n = (cand_dn | recv) & unvis_n
     new_level_n = jnp.where(newly_n, it + 1, state.level_n)
 
-    updated = comm.any_reduce(jnp.any(newly_n) | new_d_any, axis_names)
+    # per-lane convergence: lane q stays live iff it marked a new vertex on
+    # some partition this sweep (delegate updates are already global)
+    lane_upd = (comm.lane_any_reduce(jnp.any(newly_n, axis=0), axis_names)
+                | jnp.any(newly_d, axis=0))
+    updated = jnp.any(lane_upd)
 
     # ---- statistics --------------------------------------------------------
     w_fwd = (
@@ -353,10 +403,66 @@ def msbfs_step(
         backward=backward,
         it=it + 1,
         done=~updated,
+        lane_active=lane_upd,
+        base_it=state.base_it,
         work_fwd=state.work_fwd.at[slot].set(w_fwd),
         work_bwd=state.work_bwd.at[slot].set(w_bwd),
         nn_sent=state.nn_sent.at[slot].set(sent),
         delegate_round=state.delegate_round.at[slot].set(new_d_any.astype(jnp.int32)),
+    )
+
+
+# -----------------------------------------------------------------------------
+# Lane retirement / refill
+
+
+@jax.jit
+def reseed_lanes(
+    state: MSBFSState,
+    lane_mask: jnp.ndarray,       # [W] bool: lanes to retire + reseed
+    src_part: jnp.ndarray,        # [W] int32: owner partition (normal source)
+    src_local: jnp.ndarray,       # [W] int32: local id      (normal source)
+    src_dpos: jnp.ndarray,        # [W] int32: delegate pos  (delegate source)
+    src_is_delegate: jnp.ndarray,  # [W] bool
+) -> MSBFSState:
+    """Retire converged lanes and reseed them with fresh queries in place.
+
+    For every lane in ``lane_mask``: the lane's level columns are cleared to
+    INF, its new source is seeded at the *current* global iteration (so the
+    shared ``level == it`` frontier test picks it up on the very next
+    sweep), ``base_it`` records the seed iteration for unpacking, and the
+    lane's direction hysteresis resets to forward. Untouched lanes are
+    bit-identical -- the sweep, the packed wire formats, and the other
+    queries' levels never see the refill.
+
+    The scatter trick: non-reseeded lanes scatter INF_LEVEL at a dummy
+    location via ``.min``, which is a no-op against any stored level.
+    """
+    w = lane_mask.shape[0]
+    lanes = jnp.arange(w, dtype=jnp.int32)
+    it = state.it[0]                      # replicated across partitions
+    clear = lane_mask[None, None, :]
+    level_n = jnp.where(clear, INF_LEVEL, state.level_n)
+    level_d = jnp.where(clear, INF_LEVEL, state.level_d)
+
+    seed_n = lane_mask & ~src_is_delegate
+    vals_n = jnp.where(seed_n, it, INF_LEVEL).astype(level_n.dtype)
+    level_n = level_n.at[jnp.where(seed_n, src_part, 0),
+                         jnp.where(seed_n, src_local, 0), lanes].min(vals_n)
+
+    seed_d = lane_mask & src_is_delegate
+    vals_d = jnp.where(seed_d, it, INF_LEVEL).astype(level_d.dtype)
+    level_d = level_d.at[:, jnp.where(seed_d, src_dpos, 0), lanes].min(
+        vals_d[None, :])
+
+    return dataclasses.replace(
+        state,
+        level_n=level_n,
+        level_d=level_d,
+        backward=state.backward & ~lane_mask[None, None, :],
+        base_it=jnp.where(lane_mask[None, :], it, state.base_it),
+        lane_active=state.lane_active | lane_mask[None, :],
+        done=state.done & ~jnp.any(lane_mask),
     )
 
 
@@ -374,30 +480,43 @@ def _run_loop(args, state: MSBFSState, cfg: MSBFSConfig, step_fn):
     return lax.while_loop(cond, body, state)
 
 
+def _vmapped_step(cfg: MSBFSConfig):
+    return jax.vmap(
+        lambda pg_l, pl_l, st_l: msbfs_step(pg_l, pl_l, st_l, cfg, "p"),
+        axis_name="p", in_axes=(0, 0, 0),
+    )
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def run_msbfs_emulated(
     pgv_stacked: PartitionedGraph, plan_stacked, state: MSBFSState, cfg: MSBFSConfig
 ) -> MSBFSState:
     """Single-device emulation: partitions are vmap lanes, collectives run
     over the vmapped axis (same contract as ``bfs.run_bfs_emulated``)."""
-    step = jax.vmap(
-        lambda pg_l, pl_l, st_l: msbfs_step(pg_l, pl_l, st_l, cfg, "p"),
-        axis_name="p", in_axes=(0, 0, 0),
-    )
+    step = _vmapped_step(cfg)
     return _run_loop((pgv_stacked, plan_stacked), state, cfg,
                      lambda args, st: step(args[0], args[1], st))
 
 
-def make_sharded_msbfs(mesh, partition_axes, cfg: MSBFSConfig):
-    """shard_map msBFS over a real device mesh (each partition a device)."""
+@partial(jax.jit, static_argnames=("cfg",))
+def msbfs_step_emulated(
+    pgv_stacked: PartitionedGraph, plan_stacked, state: MSBFSState, cfg: MSBFSConfig
+) -> MSBFSState:
+    """One emulated superstep -- the host-stepped sibling of
+    :func:`run_msbfs_emulated` that the refill engine drives so it can
+    retire/reseed lanes at sweep boundaries."""
+    return _vmapped_step(cfg)(pgv_stacked, plan_stacked, state)
+
+
+def _make_sharded_step(mesh, axes: tuple, cfg: MSBFSConfig):
+    """One shard_map superstep over a real device mesh (shared by the
+    fused-loop and host-stepped sharded drivers)."""
     from jax.sharding import PartitionSpec as P
 
-    axes = tuple(partition_axes)
     spec_leaf = lambda x: P(axes, *([None] * (x.ndim - 1)))
     specs_for = lambda tree: jax.tree.map(spec_leaf, tree)
 
-    def sharded_step(args, st):
-        pgv, plan = args
+    def sharded_step(pgv, plan, st):
         in_specs = (specs_for(pgv), specs_for(plan), specs_for(st))
         out_specs = specs_for(st)
 
@@ -411,22 +530,56 @@ def make_sharded_msbfs(mesh, partition_axes, cfg: MSBFSConfig):
             local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False)(pgv, plan, st)
 
+    return sharded_step
+
+
+def make_sharded_msbfs(mesh, partition_axes, cfg: MSBFSConfig):
+    """shard_map msBFS over a real device mesh (each partition a device)."""
+    step = _make_sharded_step(mesh, tuple(partition_axes), cfg)
+
     @jax.jit
     def run(pgv, plan, st):
-        return _run_loop((pgv, plan), st, cfg, sharded_step)
+        return _run_loop((pgv, plan), st, cfg,
+                         lambda args, s: step(args[0], args[1], s))
 
     return run
 
 
-def gather_levels_multi(pg: PartitionedGraph, state: MSBFSState) -> np.ndarray:
-    """Assemble per-query global hop distances: [W, n] int32."""
+def make_sharded_msbfs_step(mesh, partition_axes, cfg: MSBFSConfig):
+    """Jitted single shard_map superstep: ``step(pgv, plan, state) -> state``
+    (the mesh analog of :func:`msbfs_step_emulated`, for the refill engine)."""
+    return jax.jit(_make_sharded_step(mesh, tuple(partition_axes), cfg))
+
+
+def gather_levels_multi(
+    pg: PartitionedGraph, state: MSBFSState, lanes=None
+) -> np.ndarray:
+    """Assemble per-query global hop distances: [W, n] int32.
+
+    Stored levels are absolute (seed iteration + depth); each lane's
+    ``base_it`` is subtracted here so refilled lanes unpack to plain hop
+    distances, identical to a fresh batch run.
+
+    ``lanes`` (optional 1-D index array) restricts unpacking to those lane
+    columns -- returns ``[len(lanes), n]``. The refill engine retires a few
+    lanes at a time; slicing keeps the host-side assembly O(k * n) instead
+    of O(W * n). The slice happens host-side *after* the transfer: slicing
+    the device array would re-jit a gather per distinct retirement count,
+    which costs far more than the extra copied columns."""
     layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
     level_n = np.asarray(state.level_n)           # [p, nl, W]
     level_d = np.asarray(state.level_d)[0]        # [d, W]
+    bi = state.base_it
+    if lanes is not None:
+        lanes = np.asarray(lanes)
+        level_n = level_n[..., lanes]             # [p, nl, k]
+        level_d = level_d[..., lanes]             # [d, k]
+        bi = np.asarray(bi)[..., lanes]
     vids = np.arange(pg.n, dtype=np.int64)
-    out = level_n[layout.part_of(vids), layout.local_of(vids)]   # [n, W]
-    out = np.ascontiguousarray(out.T)                            # [W, n]
+    out = level_n[layout.part_of(vids), layout.local_of(vids)]   # [n, k]
+    out = np.ascontiguousarray(out.T)                            # [k, n]
     if pg.d:
         dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
         out[:, dvids] = level_d[: pg.d].T
-    return out
+    base = np.asarray(bi)[0]                                     # [k]
+    return np.where(out == INF_LEVEL, INF_LEVEL, out - base[:, None])

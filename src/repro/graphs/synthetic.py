@@ -25,6 +25,36 @@ def cora_like(n=512, avg_deg=4, d_feat=64, n_classes=7, seed=0):
     return g, feats, labels, train_mask
 
 
+def with_tails(g: COOGraph, n_tails=4, length=64, seed=0):
+    """Attach undirected path chains ("tails") to random non-isolated
+    vertices of ``g``.
+
+    The result has ``g.n + n_tails * length`` vertices; a BFS from a tail's
+    far end needs ~``length`` extra supersteps, while core sources converge
+    in O(log n) -- the skewed depth distribution the lane-refill serving
+    path is built for. Returns ``(graph, tips)`` where ``tips`` are the far
+    endpoints of the tails.
+    """
+    rng = np.random.default_rng(seed)
+    deg = g.out_degrees()
+    anchors = rng.choice(np.nonzero(deg > 0)[0], size=n_tails, replace=False)
+    src, dst, tips = [], [], []
+    nv = g.n
+    for a in anchors:
+        prev = int(a)
+        for _ in range(length):
+            v = nv
+            nv += 1
+            src += [prev, v]
+            dst += [v, prev]
+            prev = v
+        tips.append(prev)
+    tail = COOGraph(nv, np.asarray(src, np.int64), np.asarray(dst, np.int64))
+    merged = COOGraph(nv, np.concatenate([g.src, tail.src]),
+                      np.concatenate([g.dst, tail.dst]))
+    return merged, np.asarray(tips, np.int64)
+
+
 def grid_mesh(rows=16, cols=16, multimesh_levels=0, seed=0):
     """Triangulated 2D grid mesh; multimesh_levels > 0 adds coarse skip edges
     (GraphCast-style hierarchy -- the coarse hubs become delegates)."""

@@ -7,10 +7,11 @@ uint32-lane-word (``batcher``), traversed together by one msBFS sweep
 how the lane-word packing maps onto the paper's Section V communication
 classes.
 """
-from .batcher import QueryBatcher, pack_sources
+from .batcher import LaneAssignment, LaneScheduler, QueryBatcher, pack_sources
 from .cache import LRUCache
 from .engine import BFSServeEngine, ServeStats
 
 __all__ = [
-    "BFSServeEngine", "LRUCache", "QueryBatcher", "ServeStats", "pack_sources",
+    "BFSServeEngine", "LRUCache", "LaneAssignment", "LaneScheduler",
+    "QueryBatcher", "ServeStats", "pack_sources",
 ]

@@ -4,6 +4,12 @@ A batch is up to ``width`` sources; query q of a batch rides lane q of the
 msBFS lane word.  Partial batches are legal -- unseeded lanes start with an
 all-INF level column and never generate work -- so the batcher never waits:
 ``drain`` flushes whatever is queued, full batches first.
+
+:class:`LaneScheduler` is the continuous-queue sibling used by the refill
+engine: instead of retiring whole batches it tracks per-lane occupancy and
+a per-lane *generation* counter, so a lane can be retired and reseeded
+mid-flight without ambiguity about which query its unpacked levels belong
+to.
 """
 from __future__ import annotations
 
@@ -63,3 +69,70 @@ class QueryBatcher:
         """Yield (tickets, sources) batches until the queue is empty."""
         while self._queue:
             yield self.next_batch()
+
+
+@dataclass(frozen=True)
+class LaneAssignment:
+    """One (re)seeding decision: query ``source`` occupies ``lane`` as its
+    ``generation``-th tenant."""
+
+    lane: int
+    source: int
+    generation: int
+
+
+class LaneScheduler:
+    """Continuous lane assignment for mid-flight refill.
+
+    Tracks which query occupies each of the ``width`` msBFS lanes. Every
+    (re)seed bumps the lane's generation counter, and :meth:`retire` returns
+    the (source, generation) pair the lane was serving -- the unpacking side
+    keys results by that pair, so a lane reused for a new query can never
+    leak levels across tenants even if retirement processing is deferred.
+
+    The scheduler is pure bookkeeping (no device state): the engine asks
+    :meth:`fill_idle` for assignments at a sweep boundary, performs the
+    reseed on-device, and reports convergence back through :meth:`retire`.
+    """
+
+    def __init__(self, width: int, pending=()):
+        if width <= 0:
+            raise ValueError(f"width must be positive, got {width}")
+        self.width = int(width)
+        self.pending: deque = deque(int(s) for s in pending)
+        self.lane_source = np.full(self.width, -1, dtype=np.int64)
+        self.lane_generation = np.zeros(self.width, dtype=np.int64)
+        self.busy = np.zeros(self.width, dtype=bool)
+
+    def submit(self, source: int) -> None:
+        self.pending.append(int(source))
+
+    @property
+    def n_busy(self) -> int:
+        return int(self.busy.sum())
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    def fill_idle(self) -> list[LaneAssignment]:
+        """Assign pending queries to idle lanes (lowest lane first); bumps
+        each assigned lane's generation. Returns the assignments made."""
+        out: list[LaneAssignment] = []
+        for lane in range(self.width):
+            if self.busy[lane] or not self.pending:
+                continue
+            source = self.pending.popleft()
+            self.lane_generation[lane] += 1
+            self.lane_source[lane] = source
+            self.busy[lane] = True
+            out.append(LaneAssignment(lane, source,
+                                      int(self.lane_generation[lane])))
+        return out
+
+    def retire(self, lane: int):
+        """Mark a converged lane idle; returns its (source, generation)."""
+        if not self.busy[lane]:
+            raise ValueError(f"lane {lane} is not busy")
+        self.busy[lane] = False
+        return int(self.lane_source[lane]), int(self.lane_generation[lane])

@@ -20,6 +20,7 @@ class LRUCache:
         self._data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._data)
@@ -44,6 +45,7 @@ class LRUCache:
         self._data[key] = value
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
+            self.evictions += 1
 
     def clear(self) -> None:
         self._data.clear()

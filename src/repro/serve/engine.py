@@ -3,36 +3,74 @@
 One ``BFSServeEngine`` owns a partitioned graph, the static exchange plan,
 and a compiled msBFS runner (compiled once; every batch reuses it because
 lane-word shapes are static in ``n_queries``).  ``query`` answers a list of
-sources: cache hits are returned immediately, misses are packed into full
-lane batches, traversed, unpacked into per-query level arrays, and cached.
+sources: cache hits are returned immediately, misses are packed into lane
+batches, traversed, unpacked into per-query level arrays, and cached.
+
+Two execution dimensions, both picked at construction:
+
+* **placement** -- ``mesh=None`` (or a 1-device mesh) runs the vmap-emulated
+  path; a multi-device mesh runs every sweep under ``shard_map`` with one
+  graph partition per device (``msbfs.make_sharded_msbfs``).
+* **scheduling** -- ``refill=False`` retires whole batches at once;
+  ``refill=True`` runs the continuously-fed pipeline: each sweep reports a
+  per-lane convergence mask, converged lanes are retired (their levels
+  unpacked and attributed via the :class:`~repro.serve.batcher.LaneScheduler`
+  generation counters) and reseeded from the pending queue at the next sweep
+  boundary, so a deep straggler query never idles the other W-1 lanes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import bfs as B, engine as E, msbfs as M
 from repro.core.partition import partition_graph
-from repro.core.types import COOGraph, PartitionedGraph
+from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
 
-from .batcher import pack_sources
+from .batcher import LaneScheduler, pack_sources
 from .cache import LRUCache
 
 
 @dataclass
 class ServeStats:
+    """Serving counters.
+
+    Lane accounting invariants (pinned by tests/test_serve_refill.py):
+
+    * ``lanes_used`` is the number of lane occupancies -- every traversed
+      query counts exactly once, in both scheduling modes.
+    * batch mode: each batch accounts a full lane word, so
+      ``lanes_used + lanes_padded == batches * n_queries``.
+    * refill mode: a drain session of k queries accounts
+      ``max(n_queries, k)`` lane slots (k used, ``max(0, n_queries - k)``
+      padded) -- refilled lanes reuse slots instead of padding new words.
+    * ``lane_sweeps_busy / lane_sweeps_total`` is the refill pipeline's lane
+      utilization (what ``--refill`` benchmarks report).
+    """
+
     queries: int = 0
     batches: int = 0
     cache_hits: int = 0
-    lanes_used: int = 0       # seeded lanes across all batches
-    lanes_padded: int = 0     # unseeded (partial-batch) lanes
+    lanes_used: int = 0       # seeded lanes across all batches/sessions
+    lanes_padded: int = 0     # lane slots never occupied by a query
+    refills: int = 0          # mid-flight lane reseeds
+    sweeps: int = 0           # host-stepped supersteps (refill mode only)
+    lane_sweeps_busy: int = 0
+    lane_sweeps_total: int = 0
+
+    @property
+    def lane_utilization(self) -> float:
+        return self.lane_sweeps_busy / max(self.lane_sweeps_total, 1)
 
     def as_dict(self) -> dict:
         return {
             "queries": self.queries, "batches": self.batches,
             "cache_hits": self.cache_hits, "lanes_used": self.lanes_used,
-            "lanes_padded": self.lanes_padded,
+            "lanes_padded": self.lanes_padded, "refills": self.refills,
+            "sweeps": self.sweeps,
+            "lane_sweeps_busy": self.lane_sweeps_busy,
+            "lane_sweeps_total": self.lane_sweeps_total,
         }
 
 
@@ -47,6 +85,13 @@ class BFSServeEngine:
     cache_capacity : LRU entries ((graph, source) -> levels); 0 disables.
     graph_id : cache key namespace; defaults to a digest of the partition
         structure so two engines on the same graph share semantics.
+    mesh / partition_axes : a device mesh to run sweeps on under
+        ``shard_map`` (the product of the partition axes' sizes must equal
+        ``pg.p``). ``None`` -- or a mesh spanning a single device -- uses
+        the vmap-emulated path, so CPU tests and 1-device deployments
+        degenerate to the classic engine.
+    refill : serve misses through the continuously-fed lane-refill pipeline
+        instead of batch-at-a-time traversals.
     """
 
     def __init__(
@@ -60,6 +105,9 @@ class BFSServeEngine:
         cfg: M.MSBFSConfig | None = None,
         cache_capacity: int = 256,
         graph_id: str | None = None,
+        mesh=None,
+        partition_axes=None,
+        refill: bool = False,
     ):
         if pg is None:
             if graph is None:
@@ -67,6 +115,7 @@ class BFSServeEngine:
             pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
         self.pg = pg
         self.cfg = cfg or M.MSBFSConfig()
+        self.refill = bool(refill)
         self.pgv = B.device_view(pg)
         self.plan = E.build_exchange_plan(pg)
         if graph_id is None:
@@ -75,17 +124,133 @@ class BFSServeEngine:
         self.graph_id = graph_id
         self.cache = LRUCache(cache_capacity)
         self.stats = ServeStats()
+        self._layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
+        self._dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+
+        self.mesh = mesh
+        self.sharded = False
+        if mesh is not None:
+            axes = (tuple(partition_axes) if partition_axes is not None
+                    else tuple(mesh.axis_names))
+            ndev = int(np.prod([mesh.shape[a] for a in axes]))
+            if ndev > 1:
+                if ndev != pg.p:
+                    raise ValueError(
+                        f"mesh axes {axes} span {ndev} devices but the graph "
+                        f"has p={pg.p} partitions")
+                import jax
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                def put(tree):
+                    def leaf(x):
+                        spec = P(axes, *([None] * (np.ndim(x) - 1)))
+                        return jax.device_put(x, NamedSharding(mesh, spec))
+                    return jax.tree.map(leaf, tree)
+
+                self._put = put
+                self.pgv = put(self.pgv)
+                self.plan = put(self.plan)
+                self._run_full = M.make_sharded_msbfs(mesh, axes, self.cfg)
+                self._step_once = M.make_sharded_msbfs_step(mesh, axes, self.cfg)
+                self.sharded = True
+        if not self.sharded:
+            self._put = lambda tree: tree
+            self._run_full = (
+                lambda pgv, plan, st: M.run_msbfs_emulated(pgv, plan, st, self.cfg))
+            self._step_once = (
+                lambda pgv, plan, st: M.msbfs_step_emulated(pgv, plan, st, self.cfg))
 
     # -- core batch path ----------------------------------------------------
     def run_batch(self, sources: np.ndarray) -> np.ndarray:
         """Traverse one lane batch (<= n_queries sources): [k, n] levels."""
-        st = M.init_multi_state(self.pg, sources, self.cfg)
-        out = M.run_msbfs_emulated(self.pgv, self.plan, st, self.cfg)
+        st = self._put(M.init_multi_state(self.pg, sources, self.cfg))
+        out = self._run_full(self.pgv, self.plan, st)
         levels = M.gather_levels_multi(self.pg, out)
         self.stats.batches += 1
         self.stats.lanes_used += len(sources)
         self.stats.lanes_padded += self.cfg.n_queries - len(sources)
         return levels[: len(sources)]
+
+    # -- refill path --------------------------------------------------------
+    def _seed_descriptors(self, assignments):
+        """Host-side lane seed coordinates for ``msbfs.reseed_lanes``."""
+        w = self.cfg.n_queries
+        mask = np.zeros(w, dtype=bool)
+        part = np.zeros(w, dtype=np.int32)
+        local = np.zeros(w, dtype=np.int32)
+        dpos = np.zeros(w, dtype=np.int32)
+        isd = np.zeros(w, dtype=bool)
+        for a in assignments:
+            mask[a.lane] = True
+            (isd[a.lane], part[a.lane], local[a.lane],
+             dpos[a.lane]) = M.locate_source(self.pg, self._layout,
+                                             self._dvids, a.source)
+        return mask, part, local, dpos, isd
+
+    def run_refill(self, sources: np.ndarray) -> dict:
+        """Drain ``sources`` through the continuously-fed lane pipeline.
+
+        Returns {source: levels [n] int32}; duplicate sources share one
+        lane (and one result entry). Lanes are retired the sweep their
+        frontier empties and reseeded from the pending queue at the next
+        sweep boundary; results are attributed through the scheduler's
+        (lane, generation) bookkeeping.
+        """
+        sources = M.validate_sources(self.pg, sources)
+        sources = np.asarray(list(dict.fromkeys(sources.tolist())), np.int64)
+        if sources.size == 0:
+            return {}
+        w = self.cfg.n_queries
+        sched = LaneScheduler(w, pending=sources.tolist())
+        state = self._put(M.init_multi_state(self.pg, [], self.cfg))
+
+        import jax.numpy as jnp
+        def reseed(state, assignments):
+            desc = self._seed_descriptors(assignments)
+            return M.reseed_lanes(state, *map(jnp.asarray, desc))
+
+        state = reseed(state, sched.fill_idle())
+        self.stats.batches += 1
+        self.stats.lanes_used += sched.n_busy
+        self.stats.lanes_padded += max(0, w - sources.size)
+
+        results: dict[int, np.ndarray] = {}
+        expected: dict[int, tuple] = {
+            int(sched.lane_source[q]): (q, int(sched.lane_generation[q]))
+            for q in np.nonzero(sched.busy)[0]}
+        sweeps = 0
+        guard = self.cfg.max_iters * max(1, sources.size) + w
+        while sched.n_busy:
+            busy_now = sched.n_busy
+            state = self._step_once(self.pgv, self.plan, state)
+            sweeps += 1
+            self.stats.sweeps += 1
+            self.stats.lane_sweeps_busy += busy_now
+            self.stats.lane_sweeps_total += w
+            if sweeps > guard:
+                raise RuntimeError(
+                    f"refill pipeline exceeded {guard} sweeps with "
+                    f"{sched.n_busy} lanes still busy")
+            active = np.asarray(state.lane_active)[0]
+            finished = sched.busy & ~active
+            if not finished.any():
+                continue
+            fin_lanes = np.nonzero(finished)[0]
+            # only the retired lanes' columns leave the device: [k, n]
+            levels = M.gather_levels_multi(self.pg, state, lanes=fin_lanes)
+            for i, q in enumerate(fin_lanes):
+                source, gen = sched.retire(int(q))
+                assert expected.pop(source) == (int(q), gen), (
+                    "lane generation bookkeeping out of sync")
+                results[source] = np.array(levels[i])
+            fresh = sched.fill_idle()
+            if fresh:
+                state = reseed(state, fresh)
+                self.stats.refills += len(fresh)
+                self.stats.lanes_used += len(fresh)
+                for a in fresh:
+                    expected[a.source] = (a.lane, a.generation)
+        return results
 
     # -- public API ---------------------------------------------------------
     def query(self, sources) -> np.ndarray:
@@ -107,18 +272,34 @@ class BFSServeEngine:
                 results[s] = hit
             else:
                 misses.append(s)
-        for batch in pack_sources(misses, self.cfg.n_queries):
-            levels = self.run_batch(batch)
-            for s, lev in zip(batch.tolist(), levels):
-                lev = np.array(lev)  # own the row: don't pin the [W, n] batch
+        if self.refill:
+            for s, lev in self.run_refill(np.asarray(misses, np.int64)).items():
                 results[s] = lev
                 self.cache.put((self.graph_id, s), lev)
+        else:
+            for batch in pack_sources(misses, self.cfg.n_queries):
+                levels = self.run_batch(batch)
+                for s, lev in zip(batch.tolist(), levels):
+                    lev = np.array(lev)  # own the row: don't pin the [W, n] batch
+                    results[s] = lev
+                    self.cache.put((self.graph_id, s), lev)
         return np.stack([results[s] for s in sources.tolist()])
 
     def query_one(self, source: int) -> np.ndarray:
         return self.query([source])[0]
 
     def warmup(self) -> None:
-        """Compile the msBFS runner (vertex 0 as a throwaway source)."""
-        st = M.init_multi_state(self.pg, [0], self.cfg)
-        M.run_msbfs_emulated(self.pgv, self.plan, st, self.cfg)
+        """Compile the runner for the configured scheduling mode (vertex 0
+        as a throwaway source). Refill engines only drive the single-step
+        runner, so the fused while-loop compile is skipped there (it still
+        compiles lazily if ``run_batch`` is called directly)."""
+        st = self._put(M.init_multi_state(self.pg, [0], self.cfg))
+        if self.refill:
+            self._step_once(self.pgv, self.plan, st)
+            import jax.numpy as jnp
+            w = self.cfg.n_queries
+            M.reseed_lanes(st, jnp.zeros(w, bool), jnp.zeros(w, jnp.int32),
+                           jnp.zeros(w, jnp.int32), jnp.zeros(w, jnp.int32),
+                           jnp.zeros(w, bool))
+        else:
+            self._run_full(self.pgv, self.plan, st)

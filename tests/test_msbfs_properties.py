@@ -1,0 +1,132 @@
+"""Oracle-backed property tests for the msBFS lane-word substrate.
+
+Every property runs against a brute-force numpy oracle on randomized
+inputs (hypothesis when available, the deterministic ``tests/_hypo``
+replayer otherwise): lane packing round-trips at non-multiple-of-32
+widths, and the scatter-OR push primitive on random synthetic and RMAT
+graphs.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import msbfs as M
+from repro.core.types import CSR
+from repro.graphs.rmat import rmat_graph
+
+from _hypo import given, settings, st
+
+
+def _csr_single(n: int, src: np.ndarray, dst: np.ndarray) -> CSR:
+    """Single-partition CSR over global vertex ids (rowids per edge)."""
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    offsets = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(np.bincount(src, minlength=n), out=offsets[1:])
+    return CSR(offsets=jnp.asarray(offsets), cols=jnp.asarray(dst.astype(np.int32)),
+               rowids=jnp.asarray(src.astype(np.int32)),
+               m=jnp.int32(src.size), eidx=None, n_rows=n, e_max=int(src.size))
+
+
+def _push_oracle(n: int, src: np.ndarray, dst: np.ndarray,
+                 frontier: np.ndarray) -> np.ndarray:
+    """out[v, q] = OR over edges (u -> v) of frontier[u, q]."""
+    out = np.zeros((n, frontier.shape[1]), dtype=bool)
+    np.logical_or.at(out, dst, frontier[src])
+    return out
+
+
+# ------------------------------------------------------------- lane packing
+@settings(max_examples=30, deadline=None)
+@given(w=st.integers(1, 100), seed=st.integers(0, 10_000))
+def test_pack_unpack_roundtrip_any_width(w, seed):
+    """unpack(pack(lanes), w) == lanes for every width, 32-aligned or not."""
+    rng = np.random.default_rng(seed)
+    lanes = jnp.asarray(rng.random((3, 5, w)) < 0.5)
+    words = M.pack_lanes(lanes)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (3, 5, M.n_words(w))
+    np.testing.assert_array_equal(np.asarray(M.unpack_lanes(words, w)),
+                                  np.asarray(lanes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=st.integers(1, 100), seed=st.integers(0, 10_000))
+def test_unpack_pack_identity_on_masked_words(w, seed):
+    """pack(unpack(words, w)) == words whenever the pad bits are zero --
+    i.e. packing loses nothing but the (undefined) padding of the last
+    word."""
+    rng = np.random.default_rng(seed)
+    nw = M.n_words(w)
+    words = rng.integers(0, 2**32, (4, nw), dtype=np.uint32)
+    tail_bits = w - 32 * (nw - 1)
+    mask = np.uint32(0xFFFFFFFF) if tail_bits == 32 else np.uint32(
+        (1 << tail_bits) - 1)
+    words[:, -1] &= mask
+    got = M.pack_lanes(M.unpack_lanes(jnp.asarray(words), w))
+    np.testing.assert_array_equal(np.asarray(got), words)
+
+
+@settings(max_examples=20, deadline=None)
+@given(w=st.integers(1, 67), seed=st.integers(0, 10_000))
+def test_pack_pad_bits_are_zero(w, seed):
+    """Bits above lane w-1 of the last word are always zero: packed words
+    can be OR-reduced / exchanged without leaking garbage between widths."""
+    rng = np.random.default_rng(seed)
+    words = np.asarray(M.pack_lanes(jnp.asarray(rng.random((6, w)) < 0.7)))
+    tail_bits = w - 32 * (M.n_words(w) - 1)
+    if tail_bits < 32:
+        assert (words[:, -1] >> tail_bits).max() == 0
+
+
+# ------------------------------------------------------- scatter-OR push
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 48), em=st.integers(1, 6), w=st.integers(1, 40),
+       seed=st.integers(0, 10_000))
+def test_push_scatter_matches_oracle_random(n, em, w, seed):
+    """_push_active_multi + _push_scatter_multi == the numpy OR oracle on
+    random directed multigraphs (duplicate edges and all)."""
+    rng = np.random.default_rng(seed)
+    m = em * n
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    csr = _csr_single(n, src, dst)
+    frontier = rng.random((n, w)) < 0.3
+    act = M._push_active_multi(csr, jnp.asarray(frontier))
+    got = M._push_scatter_multi(csr, act, n)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _push_oracle(n, src, dst, frontier))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), w=st.integers(1, 40))
+def test_push_scatter_matches_oracle_rmat(seed, w):
+    """Same property on small RMAT graphs (skewed degrees, hashed ids)."""
+    g = rmat_graph(6, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    csr = _csr_single(g.n, g.src, g.dst)
+    frontier = rng.random((g.n, w)) < 0.2
+    act = M._push_active_multi(csr, jnp.asarray(frontier))
+    got = M._push_scatter_multi(csr, act, g.n)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _push_oracle(g.n, g.src, g.dst, frontier))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 32), em=st.integers(1, 4), w=st.integers(1, 40),
+       seed=st.integers(0, 10_000))
+def test_pull_matches_push_transpose(n, em, w, seed):
+    """The chunked pull over the transposed edge set finds exactly the rows
+    the push would have reached (restricted to the requested lanes)."""
+    rng = np.random.default_rng(seed)
+    m = em * n
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    frontier = rng.random((n, w)) < 0.3
+    need = rng.random((n, w)) < 0.5
+    # pull scans rows' parent lists: row v's parents are srcs of edges v<-u,
+    # i.e. the transpose CSR
+    csr_t = _csr_single(n, dst, src)
+    found, _ = M._pull_chunked_multi(csr_t, jnp.asarray(need),
+                                     jnp.asarray(frontier), chunk=8)
+    want = _push_oracle(n, src, dst, frontier) & need
+    np.testing.assert_array_equal(np.asarray(found), want)

@@ -1,0 +1,180 @@
+"""Mid-flight lane refill: scheduler bookkeeping, engine parity on a
+skewed-depth stream, LRU + ServeStats accounting under refill."""
+import numpy as np
+import pytest
+
+from repro.core import msbfs as M
+from repro.core.oracle import bfs_levels
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.graphs.synthetic import with_tails
+from repro.serve import BFSServeEngine, LaneScheduler, LRUCache
+
+
+@pytest.fixture(scope="module")
+def tailed():
+    """Small RMAT core with two long tails: a skewed depth distribution."""
+    core = rmat_graph(8, seed=11)
+    g, tips = with_tails(core, n_tails=2, length=24, seed=2)
+    return core, g, tips
+
+
+def make_engine(g, *, w=4, cache=32, **kw):
+    cfg = M.MSBFSConfig(n_queries=w, max_iters=96)
+    return BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                          cache_capacity=cache, refill=True, **kw)
+
+
+# ------------------------------------------------------------ LaneScheduler
+def test_lane_scheduler_generations():
+    s = LaneScheduler(2, pending=[10, 11, 12])
+    a = s.fill_idle()
+    assert [(x.lane, x.source, x.generation) for x in a] == [(0, 10, 1), (1, 11, 1)]
+    assert s.n_busy == 2 and s.n_pending == 1
+    assert s.fill_idle() == []                       # no idle lane
+    assert s.retire(0) == (10, 1)
+    b = s.fill_idle()
+    assert [(x.lane, x.source, x.generation) for x in b] == [(0, 12, 2)]
+    assert s.retire(0) == (12, 2)                    # generation advanced
+    assert s.retire(1) == (11, 1)
+    assert s.n_busy == 0 and s.n_pending == 0
+    with pytest.raises(ValueError):
+        s.retire(1)                                  # idle lane
+    s.submit(13)
+    assert [x.source for x in s.fill_idle()] == [13]
+
+
+def test_lane_scheduler_rejects_bad_width():
+    with pytest.raises(ValueError):
+        LaneScheduler(0)
+
+
+# ------------------------------------------------------- refill engine parity
+def test_refill_parity_skewed_stream(tailed):
+    """Deep tail queries and shallow core queries interleaved through W=4
+    lanes: every answer (refilled lanes included) matches the oracle."""
+    core, g, tips = tailed
+    shallow = pick_sources(core, 10, seed=3)
+    stream = np.concatenate([[tips[0]], shallow[:5], [tips[1]], shallow[5:]])
+    eng = make_engine(g)
+    levels = eng.query(stream)
+    for s, lev in zip(stream, levels):
+        np.testing.assert_array_equal(lev, bfs_levels(g, int(s)))
+    # 12 queries through 4 lanes: at least 8 mid-flight reseeds
+    assert eng.stats.refills >= len(stream) - eng.cfg.n_queries
+    assert eng.stats.sweeps > 0
+    assert 0.0 < eng.stats.lane_utilization <= 1.0
+
+
+def test_refill_delegate_and_repeat_sources(tailed):
+    _, g, _ = tailed
+    eng = make_engine(g)
+    dvid = int(np.asarray(eng.pg.delegate_vids).reshape(-1)[0])
+    out = eng.query([dvid, 3, dvid])                 # duplicate + delegate
+    np.testing.assert_array_equal(out[0], bfs_levels(g, dvid))
+    np.testing.assert_array_equal(out[0], out[2])
+    assert eng.stats.lanes_used == 2                 # dedup: one lane each
+
+
+def test_refill_matches_batch_engine(tailed):
+    """Refill and batch-at-a-time are answer-identical on the same stream."""
+    core, g, tips = tailed
+    stream = np.concatenate([pick_sources(core, 6, seed=9), tips])
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=96)
+    eng_b = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                           cache_capacity=0, refill=False)
+    eng_r = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                           cache_capacity=0, refill=True)
+    np.testing.assert_array_equal(eng_r.query(stream), eng_b.query(stream))
+
+
+def test_refill_rejects_out_of_range(tailed):
+    _, g, _ = tailed
+    eng = make_engine(g)
+    with pytest.raises(ValueError):
+        eng.query([g.n])
+
+
+def test_run_refill_dedups_duplicate_sources(tailed):
+    """Direct run_refill with duplicates: one lane, one result entry (the
+    generation bookkeeping must not collide on the shared source key)."""
+    core, g, _ = tailed
+    eng = make_engine(g, cache=0)
+    s = int(pick_sources(core, 1, seed=4)[0])
+    got = eng.run_refill(np.asarray([s, s, s]))
+    assert list(got) == [s]
+    np.testing.assert_array_equal(got[s], bfs_levels(g, s))
+    assert eng.stats.lanes_used == 1
+
+
+# ----------------------------------------------------------- stats accounting
+def test_stats_accounting_refill_vs_batch(tailed):
+    """lanes_used counts every traversed query once in both modes; padding
+    follows the documented per-mode sum rules."""
+    core, g, _ = tailed
+    w = 4
+    sources = pick_sources(core, 10, seed=5)
+
+    eng_b = make_engine(g, w=w, cache=0)
+    eng_b.refill = False
+    eng_b.query(sources)
+    st = eng_b.stats
+    assert st.lanes_used == len(sources)
+    assert st.batches == -(-len(sources) // w)
+    assert st.lanes_used + st.lanes_padded == st.batches * w
+
+    eng_r = make_engine(g, w=w, cache=0)
+    eng_r.query(sources)                             # one session, k > W
+    st = eng_r.stats
+    assert st.lanes_used == len(sources)
+    assert st.batches == 1
+    assert st.lanes_used + st.lanes_padded == max(w, len(sources))
+    assert st.refills == len(sources) - w
+    assert st.lane_sweeps_total == st.sweeps * w
+    assert 0 < st.lane_sweeps_busy <= st.lane_sweeps_total
+
+    eng_r.query(pick_sources(core, 2, seed=8))       # second session, k < W
+    st = eng_r.stats
+    assert st.lanes_used == len(sources) + 2
+    assert st.lanes_padded == w - 2                  # only the partial session pads
+
+
+# ------------------------------------------------------------- cache + refill
+def test_lru_eviction_order_is_retirement_order(tailed):
+    """With capacity < misses the cache keeps the most recently *retired*
+    queries; an immediate repeat query is served without new sweeps."""
+    core, g, _ = tailed
+    sources = pick_sources(core, 6, seed=7)
+    eng = make_engine(g, w=4, cache=3)
+    eng.query(sources)
+    assert len(eng.cache) == 3
+    assert eng.cache.evictions == 3
+    cached = [k[1] for k in eng.cache._data]         # insertion == retirement order
+    sweeps0 = eng.stats.sweeps
+    hits0 = eng.stats.cache_hits
+    again = eng.query(cached)
+    assert eng.stats.sweeps == sweeps0               # pure cache traffic
+    assert eng.stats.cache_hits == hits0 + 3
+    for s, lev in zip(cached, again):
+        np.testing.assert_array_equal(lev, bfs_levels(g, int(s)))
+
+
+def test_lru_eviction_evicts_least_recent_under_mixed_traffic():
+    c = LRUCache(3)
+    for k in "abc":
+        c.put(k, k.upper())
+    assert c.get("a") == "A"                         # refresh a
+    c.put("d", "D")                                  # evicts b
+    assert "b" not in c and all(k in c for k in "acd")
+    c.put("e", "E")                                  # evicts c (a was refreshed)
+    assert "c" not in c and all(k in c for k in "ade")
+    assert c.evictions == 2
+    assert c.hits == 1
+
+
+def test_lru_put_refreshes_existing_key():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("a", 3)                                    # refresh + overwrite
+    c.put("c", 4)                                    # evicts b, not a
+    assert c.get("a") == 3 and "b" not in c and "c" in c

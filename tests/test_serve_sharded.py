@@ -1,0 +1,126 @@
+"""Sharded serving parity: the engine on a 1-device mesh (degenerates to
+the emulated path) and on a real multi-device mesh (CPU devices forced via
+XLA_FLAGS) must produce oracle-identical levels for every lane, refilled
+lanes included.
+
+The multi-device variants run in-process when the interpreter already has
+>= 4 host devices (the CI job forcing
+``--xla_force_host_platform_device_count=4`` exercises them on every push)
+and via a subprocess with XLA_FLAGS forced otherwise (``-m slow``).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import msbfs as M
+from repro.core.oracle import bfs_levels
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.graphs.synthetic import with_tails
+from repro.launch.mesh import make_test_mesh
+from repro.serve import BFSServeEngine
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 host devices (run under the multi-device CI job)")
+
+
+def _stream_and_graph():
+    core = rmat_graph(8, seed=11)
+    g, tips = with_tails(core, n_tails=2, length=16, seed=2)
+    stream = np.concatenate([[tips[0]], pick_sources(core, 7, seed=3), [tips[1]]])
+    return g, stream
+
+
+def _check_engine(eng, g, stream):
+    levels = eng.query(stream)
+    for s, lev in zip(stream, levels):
+        np.testing.assert_array_equal(lev, bfs_levels(g, int(s)))
+
+
+def test_one_device_mesh_degenerates_to_emulated():
+    """mesh= spanning one device keeps the vmap path (sharded=False) and
+    stays oracle-exact, refill included."""
+    g, stream = _stream_and_graph()
+    mesh = make_test_mesh((1,), ("p",))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=True)
+    assert not eng.sharded
+    _check_engine(eng, g, stream)
+    assert eng.stats.refills >= len(stream) - 4
+
+
+def test_mesh_partition_mismatch_raises():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices to build a multi-device mesh")
+    mesh = make_test_mesh((2,), ("p",))
+    with pytest.raises(ValueError):
+        BFSServeEngine(rmat_graph(7, seed=1), th=32, p_rank=1, p_gpu=1,
+                       mesh=mesh)
+
+
+@needs4
+def test_sharded_engine_parity_multidevice():
+    """shard_map engine (one partition per device): batch mode parity."""
+    g, stream = _stream_and_graph()
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=False)
+    assert eng.sharded
+    _check_engine(eng, g, stream)
+
+
+@needs4
+def test_sharded_refill_parity_multidevice():
+    """shard_map engine with mid-flight refill: every lane, every refill
+    generation, oracle-exact."""
+    g, stream = _stream_and_graph()
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=True)
+    assert eng.sharded
+    _check_engine(eng, g, stream)
+    assert eng.stats.refills >= len(stream) - 4
+
+
+SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, "tests")
+import numpy as np
+import test_serve_sharded as T
+
+g, stream = T._stream_and_graph()
+from repro.core import msbfs as M
+from repro.launch.mesh import make_test_mesh
+from repro.serve import BFSServeEngine
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                     cache_capacity=0, mesh=mesh, refill=True)
+assert eng.sharded
+T._check_engine(eng, g, stream)
+assert eng.stats.refills >= len(stream) - 4
+print("sharded refill parity OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_refill_parity_subprocess():
+    """Same parity check with XLA_FLAGS forced in a fresh interpreter (for
+    1-device hosts; the multi-device CI job runs the in-process variants)."""
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "sharded refill parity OK" in r.stdout
