@@ -15,6 +15,18 @@ slowest lane; refill reseeds converged lanes mid-flight, so deep stragglers
 never idle the rest of the word. Reports queries/sec for both engines plus
 refill lane utilization, and checks every refill answer against the numpy
 oracle.
+
+``--mixed`` benchmarks the typed-query subsystem (``repro.serve.queries``)
+on one skewed RMAT stream served four ways: full levels, reachability-only
+(raw device path and the shipped serving path with per-component reuse),
+distance-limited, and a round-robin mixed-kind stream. Every answer is
+oracle-checked and a ``BENCH_queries.json`` summary is written. The claim
+under test: query kinds that need less than full levels are served faster
+on the same substrate -- reachability via the levels-free lane-word
+variant plus component reuse (an undirected reachable set is source-
+invariant within its component, a reuse level arrays can never have), and
+distance-limited via the per-lane depth cap folded into the convergence
+word (most of the deep tail sweeps simply never run).
 """
 from __future__ import annotations
 
@@ -147,13 +159,144 @@ def run_refill(scale: int = 11, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
             "sweeps": eng_r.stats.sweeps, "refills": eng_r.stats.refills}
 
 
+def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
+              p_rank: int = 2, p_gpu: int = 2, n_queries: int = 32,
+              requests: int = 40, n_tails: int = 4, tail_len: int = 48,
+              max_depth: int = 3, min_reach_speedup: float = 1.3,
+              out_json: str = "BENCH_queries.json"):
+    """Typed-query serving: one skewed stream, four query kinds."""
+    import json
+
+    from repro.core.oracle import bfs_levels, bfs_levels_limited, target_depths
+    from repro.graphs.synthetic import with_tails
+    from repro.serve import BFSServeEngine, Query, QueryKind
+
+    core = rmat_graph(scale, edge_factor=edge_factor, seed=3)
+    g, tips = with_tails(core, n_tails=n_tails, length=tail_len, seed=5)
+    pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+
+    shallow = pick_sources(core, requests - len(tips), seed=1)
+    stream = np.concatenate([shallow, tips]).astype(np.int64)
+    np.random.default_rng(0).shuffle(stream)
+    stream = stream[:requests]
+    tpool = [int(s) for s in shallow[:4]]   # multi-target target pool
+
+    cfg = M.MSBFSConfig(n_queries=n_queries, max_iters=2 * tail_len + 48)
+    oracle = {int(s): bfs_levels(g, int(s)) for s in stream}
+
+    def serve(name, queries, check, **eng_kw):
+        eng = BFSServeEngine(pg=pg, cfg=cfg, cache_capacity=0, refill=True,
+                             **eng_kw)
+        eng.warmup(reachability=all(q.kind is QueryKind.REACHABILITY
+                                    for q in queries),
+                   targets=any(q.kind is QueryKind.MULTI_TARGET
+                               for q in queries))
+        t0 = time.perf_counter()
+        answers = eng.submit_many(queries)
+        dt = time.perf_counter() - t0
+        for q, a in zip(queries, answers):
+            check(q, a)
+        return eng, len(queries) / dt
+
+    inf = np.int32(2**30)
+    eng_lv, qps_levels = serve(
+        "levels", [Query(int(s)) for s in stream],
+        lambda q, a: np.testing.assert_array_equal(a, oracle[q.source]))
+    reach_q = [Query(int(s), QueryKind.REACHABILITY) for s in stream]
+    reach_chk = lambda q, a: np.testing.assert_array_equal(
+        a, oracle[q.source] != inf)
+    _, qps_reach_raw = serve("reach_raw", reach_q, reach_chk,
+                             reuse_components=False)
+    eng_re, qps_reach = serve("reach", reach_q, reach_chk)
+    eng_dl, qps_dist = serve(
+        "distance", [Query(int(s), QueryKind.DISTANCE_LIMITED,
+                           max_depth=max_depth) for s in stream],
+        lambda q, a: np.testing.assert_array_equal(
+            a, bfs_levels_limited(g, q.source, max_depth)))
+
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=max_depth),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tuple(tpool[:2]))]
+    mixed_q = [kinds[i % 4](int(s)) for i, s in enumerate(stream)]
+
+    def check_mixed(q, a):
+        if q.kind is QueryKind.LEVELS:
+            np.testing.assert_array_equal(a, oracle[q.source])
+        elif q.kind is QueryKind.REACHABILITY:
+            np.testing.assert_array_equal(a, oracle[q.source] != inf)
+        elif q.kind is QueryKind.DISTANCE_LIMITED:
+            np.testing.assert_array_equal(
+                a, bfs_levels_limited(g, q.source, max_depth))
+        else:
+            assert a == target_depths(g, q.source, q.targets)
+
+    eng_mx, qps_mixed = serve("mixed", mixed_q, check_mixed)
+
+    summary = {
+        "graph": {"n": int(g.n), "m": int(g.m), "scale": scale,
+                  "edge_factor": edge_factor, "n_tails": n_tails,
+                  "tail_len": tail_len},
+        "requests": int(len(stream)), "n_queries": n_queries,
+        "qps": {"levels": qps_levels, "reachability_raw": qps_reach_raw,
+                "reachability": qps_reach, "distance_limited": qps_dist,
+                "mixed": qps_mixed},
+        "speedup_vs_levels": {
+            "reachability_raw": qps_reach_raw / qps_levels,
+            "reachability": qps_reach / qps_levels,
+            "distance_limited": qps_dist / qps_levels,
+            "mixed": qps_mixed / qps_levels,
+        },
+        "levels_sweeps": eng_lv.stats.sweeps,
+        "distance_limited_sweeps": eng_dl.stats.sweeps,
+        "distance_limited_early_stops": eng_dl.stats.early_stops,
+        "reach_component_hits": eng_re.stats.component_hits,
+        "reach_fast_batches": eng_re.stats.reach_fast_batches,
+        "mixed_kind_counts": eng_mx.stats.kind_counts,
+        "mixed_early_stops": eng_mx.stats.early_stops,
+    }
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=2)
+
+    emit("msbfs/serve_levels", 1e6 / qps_levels,
+         f"qps={qps_levels:.2f} sweeps={eng_lv.stats.sweeps}")
+    emit("msbfs/serve_reach", 1e6 / qps_reach,
+         f"qps={qps_reach:.2f} raw_qps={qps_reach_raw:.2f} "
+         f"comp_hits={eng_re.stats.component_hits} "
+         f"speedup={qps_reach / qps_levels:.2f}x")
+    emit("msbfs/serve_distlim", 1e6 / qps_dist,
+         f"qps={qps_dist:.2f} sweeps={eng_dl.stats.sweeps} "
+         f"early_stops={eng_dl.stats.early_stops} "
+         f"speedup={qps_dist / qps_levels:.2f}x")
+    emit("msbfs/serve_mixed", 1e6 / qps_mixed,
+         f"qps={qps_mixed:.2f} early_stops={eng_mx.stats.early_stops} "
+         f"speedup={qps_mixed / qps_levels:.2f}x")
+    assert qps_reach >= min_reach_speedup * qps_levels, (
+        f"reachability-only {qps_reach:.2f} q/s < {min_reach_speedup}x "
+        f"full-levels {qps_levels:.2f} q/s")
+    # The levels-free variant's per-sweep edge (no level scatter, no [E, W]
+    # work counters) is a few percent on CPU emulation -- within run-to-run
+    # noise -- so raw is reported, with only a generous regression floor.
+    assert qps_reach_raw >= 0.6 * qps_levels, (
+        f"levels-free reachability path {qps_reach_raw:.2f} q/s regressed "
+        f"far below full-levels {qps_levels:.2f} q/s")
+    return summary
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--refill", action="store_true",
                     help="benchmark lane refill vs batch-at-a-time serving")
+    ap.add_argument("--mixed", action="store_true",
+                    help="benchmark the typed-query kinds on one stream")
     ap.add_argument("--scale", type=int, default=None)
     args = ap.parse_args()
     kw = {} if args.scale is None else {"scale": args.scale}
-    print(run_refill(**kw) if args.refill else run(**kw))
+    if args.mixed:
+        print(run_mixed(**kw))
+    elif args.refill:
+        print(run_refill(**kw))
+    else:
+        print(run(**kw))

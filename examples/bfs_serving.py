@@ -6,7 +6,13 @@ lane-word, traversed by shared msBFS sweeps, and memoized in the LRU cache.
 Prints throughput, batch utilization, and cache hit rate, and spot-checks
 answers against the numpy oracle.
 
-    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] [--refill]
+``--mixed`` serves a typed mixed-kind stream instead: the same skewed
+sources cycled through all four query kinds (full levels, reachability,
+distance-limited, multi-target) via ``BFSServeEngine.submit_many``, with
+per-kind oracle spot-checks and the typed-query counters (early exits,
+component reuse, per-kind tallies) printed.
+
+    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] [--refill] [--mixed]
 """
 import argparse
 import time
@@ -14,36 +20,9 @@ import time
 import numpy as np
 
 
-def main():
+def serve_classic(eng, g, stream, args):
     from repro.core.oracle import bfs_levels
-    from repro.graphs.rmat import pick_sources, rmat_graph
-    from repro.serve import BFSServeEngine, QueryBatcher
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=int, default=11)
-    ap.add_argument("--th", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=400)
-    ap.add_argument("--hot", type=int, default=16, help="hot landmark count")
-    ap.add_argument("--refill", action="store_true",
-                    help="serve through the mid-flight lane-refill pipeline")
-    args = ap.parse_args()
-
-    g = rmat_graph(args.scale, seed=0)
-    print(f"graph n={g.n:,} m={g.m:,}")
-    eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
-                         refill=args.refill)
-    t0 = time.perf_counter()
-    eng.warmup()
-    print(f"engine ready (compile {time.perf_counter() - t0:.1f}s, "
-          f"W={eng.cfg.n_queries}, p={eng.pg.p}, delegates={eng.pg.d})")
-
-    # skewed request stream: 80% of traffic on `hot` landmarks
-    candidates = pick_sources(g, 4 * args.hot, seed=7)
-    hot, cold = candidates[: args.hot], candidates[args.hot :]
-    rng = np.random.default_rng(1)
-    stream = np.where(rng.random(args.requests) < 0.8,
-                      rng.choice(hot, args.requests),
-                      rng.choice(cold, args.requests))
+    from repro.serve import QueryBatcher
 
     batcher = QueryBatcher(width=eng.cfg.n_queries)
     tickets = {}
@@ -72,6 +51,87 @@ def main():
         ref = bfs_levels(g, tickets[t])
         assert np.array_equal(answers[t], ref), f"mismatch for source {tickets[t]}"
     print("spot-checked answers against the oracle: OK")
+
+
+def serve_mixed(eng, g, stream, args):
+    from repro.core.oracle import (bfs_levels, bfs_levels_limited,
+                                   reachable_mask, target_depths)
+    from repro.serve import Query, QueryKind
+
+    tpool = tuple(int(s) for s in np.unique(stream)[:2])
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=3),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tpool)]
+    queries = [kinds[i % 4](int(s)) for i, s in enumerate(stream)]
+
+    t0 = time.perf_counter()
+    answers = eng.submit_many(queries)
+    dt = time.perf_counter() - t0
+
+    st = eng.stats
+    print(f"served {len(answers)} typed requests in {dt:.2f}s "
+          f"({len(answers) / dt:.0f} req/s)")
+    print(f"kinds={st.kind_counts} early_stops={st.early_stops} "
+          f"component_hits={st.component_hits} "
+          f"reach_fast_batches={st.reach_fast_batches}")
+    print(f"msbfs batches={st.batches} "
+          f"cache_hit_rate={st.cache_hits / max(st.queries, 1):.0%}"
+          + (f" refill sweeps={st.sweeps} reseeds={st.refills}"
+             if args.refill else ""))
+
+    for i in range(0, len(queries), max(len(queries) // 8, 1)):
+        q, a = queries[i], answers[i]
+        if q.kind is QueryKind.LEVELS:
+            ok = np.array_equal(a, bfs_levels(g, q.source))
+        elif q.kind is QueryKind.REACHABILITY:
+            ok = np.array_equal(a, reachable_mask(g, q.source))
+        elif q.kind is QueryKind.DISTANCE_LIMITED:
+            ok = np.array_equal(a, bfs_levels_limited(g, q.source, q.max_depth))
+        else:
+            ok = a == target_depths(g, q.source, q.targets)
+        assert ok, f"mismatch for {q}"
+    print("spot-checked per-kind answers against the oracle: OK")
+
+
+def main():
+    from repro.graphs.rmat import pick_sources, rmat_graph
+    from repro.serve import BFSServeEngine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--th", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--hot", type=int, default=16, help="hot landmark count")
+    ap.add_argument("--refill", action="store_true",
+                    help="serve through the mid-flight lane-refill pipeline")
+    ap.add_argument("--mixed", action="store_true",
+                    help="serve a typed mixed-kind query stream")
+    args = ap.parse_args()
+
+    g = rmat_graph(args.scale, seed=0)
+    print(f"graph n={g.n:,} m={g.m:,}")
+    eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
+                         refill=args.refill)
+    t0 = time.perf_counter()
+    # a mixed stream is never homogeneously-reachability, so only the
+    # multi-target variant needs the extra compile
+    eng.warmup(targets=args.mixed)
+    print(f"engine ready (compile {time.perf_counter() - t0:.1f}s, "
+          f"W={eng.cfg.n_queries}, p={eng.pg.p}, delegates={eng.pg.d})")
+
+    # skewed request stream: 80% of traffic on `hot` landmarks
+    candidates = pick_sources(g, 4 * args.hot, seed=7)
+    hot, cold = candidates[: args.hot], candidates[args.hot :]
+    rng = np.random.default_rng(1)
+    stream = np.where(rng.random(args.requests) < 0.8,
+                      rng.choice(hot, args.requests),
+                      rng.choice(cold, args.requests))
+
+    if args.mixed:
+        serve_mixed(eng, g, stream, args)
+    else:
+        serve_classic(eng, g, stream, args)
 
 
 if __name__ == "__main__":

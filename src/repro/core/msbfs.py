@@ -31,6 +31,24 @@ is then amortized over the whole batch:
 On device the lane axis is kept as trailing bools (vectorized compute);
 packing to uint32 happens exactly at the two communication boundaries, so
 the wire format matches the paper's Section V accounting.
+
+**Typed queries.** Each lane additionally carries query parameters so the
+serving layer can compile richer query shapes onto the same substrate
+(``repro.serve.queries``):
+
+* a per-lane **depth cap** (``MSBFSState.depth_cap``) folds into the
+  frontier gate: a lane past its cap contributes no frontier anywhere --
+  push gather, pull scan, nn exchange and delegate candidates all drop out
+  the same sweep (the bookkeeping-cutting observation of arXiv:1104.4518);
+* per-lane **target words** (``target_n`` / ``target_d``): a multi-target
+  lane latches ``lane_stop`` the sweep its last unvisited target is
+  marked, and retires through the same ``lane_active`` convergence word the
+  refill scheduler already watches;
+* a **reachability-only mode** (``MSBFSConfig(track_levels=False)``, legal
+  when every lane in the batch is a reachability query): level arrays are
+  replaced by bool visited words plus an explicit frontier word -- no level
+  scatter, no ``it`` arithmetic, no per-edge work counters, pure lane
+  words end to end.
 """
 from __future__ import annotations
 
@@ -49,6 +67,10 @@ from repro import compat
 from . import comm
 from .bfs import _decide_direction, _row_degrees
 from .types import CSR, INF_LEVEL, PartitionedGraph, PartitionLayout
+
+# Sentinel per-lane depth cap meaning "unlimited" (any reachable depth is
+# < max_iters << NO_DEPTH_CAP, so the gate `depth < cap` never fires).
+NO_DEPTH_CAP = np.int32(INF_LEVEL)
 
 # -----------------------------------------------------------------------------
 # Lane-word packing
@@ -92,6 +114,19 @@ class MSBFSConfig:
     # per-lane direction-switch factors, order (dd, dn, nd) as in BFSConfig
     factor0: tuple = (0.5, 0.05, 1e-7)
     factor1: tuple = (1e-3, 1e-4, 1e-9)
+    # False compiles the reachability-only variant: bool visited words +
+    # explicit frontier words instead of int32 levels (legal only when no
+    # lane in the batch needs hop distances).
+    track_levels: bool = True
+    # False compiles away the per-sweep multi-target coverage scan (the
+    # [n_local, W] target-word pass and its extra reduce word) for batches
+    # with no MULTI_TARGET lane; seeding targets then raises.
+    enable_targets: bool = True
+    # Route the chunked pull through the dispatching ELL kernel wrapper
+    # (`repro.kernels.ops.ell_pull_multi`) on packed lane words instead of
+    # the native bool-lane gather. None = native; "ref" / "pallas" pin the
+    # dispatch target; "auto" lets the wrapper pick per backend.
+    kernel_pull: str | None = None
 
 
 @dataclass
@@ -107,14 +142,25 @@ class MSBFSState:
     ``it``) a pure state edit with no change to the sweep.
     """
 
-    level_n: Any     # [p, n_local, W] int32 (absolute: base_it[q] + depth)
-    level_d: Any     # [p, d, W] int32 (replicated content)
+    level_n: Any     # [p, n_local, W] int32 (absolute: base_it[q] + depth);
+                     # bool visited words when cfg.track_levels is False
+    level_d: Any     # [p, d, W] int32 (replicated content); bool in
+                     # reachability-only mode
     backward: Any    # [p, 3, W] bool -- per-lane direction per (dd, dn, nd)
     it: Any          # [p] int32
     done: Any        # [p] bool
     lane_active: Any  # [p, W] bool -- lane's frontier non-empty at `it`
                       # (replicated; the refill retirement signal)
     base_it: Any     # [p, W] int32 -- iteration the lane was (re)seeded at
+    # typed-query per-lane parameters (repro.serve.queries):
+    lane_stop: Any   # [p, W] bool -- latched early-exit (cap / targets hit)
+    depth_cap: Any   # [p, W] int32 -- max hop depth (NO_DEPTH_CAP = none)
+    has_targets: Any  # [p, W] bool -- lane retires once targets are covered
+    target_n: Any    # [p, n_local, W] bool -- target marks (owner partition)
+    target_d: Any    # [p, d, W] bool -- target marks (replicated)
+    # reachability-only mode frontier words ([p, 1, 1] dummies otherwise):
+    frontier_n: Any  # [p, n_local, W] bool
+    frontier_d: Any  # [p, d, W] bool
     # per-iteration statistics [p, max_iters]:
     work_fwd: Any    # edge-lane pairs examined by pushes
     work_bwd: Any    # parent-word checks by pulls
@@ -126,6 +172,8 @@ jax.tree_util.register_dataclass(
     MSBFSState,
     data_fields=("level_n", "level_d", "backward", "it", "done",
                  "lane_active", "base_it",
+                 "lane_stop", "depth_cap", "has_targets",
+                 "target_n", "target_d", "frontier_n", "frontier_d",
                  "work_fwd", "work_bwd", "nn_sent", "delegate_round"),
     meta_fields=(),
 )
@@ -157,11 +205,17 @@ def locate_source(pg: PartitionedGraph, layout: PartitionLayout,
 
 
 def init_multi_state(
-    pg: PartitionedGraph, sources: Sequence[int], cfg: MSBFSConfig
+    pg: PartitionedGraph, sources: Sequence[int], cfg: MSBFSConfig,
+    *, depth_caps: Sequence | None = None, targets: Sequence | None = None,
 ) -> MSBFSState:
     """Seed one lane per source. Fewer than ``n_queries`` sources leaves the
     tail lanes unseeded (a partial batch): they stay at INF_LEVEL and never
-    contribute work."""
+    contribute work.
+
+    ``depth_caps`` (aligned with ``sources``) gives lane ``q`` a max hop
+    depth (``None`` entries = unlimited); ``targets`` gives lane ``q`` a
+    sequence of target vertex ids (``None`` / empty = none) -- the lane
+    retires the sweep all of its targets are visited."""
     w = cfg.n_queries
     sources = validate_sources(pg, sources)
     if sources.size > w:
@@ -169,15 +223,49 @@ def init_multi_state(
     layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
     p, nl = pg.p, pg.n_local
     d = max(pg.d, 1)
-    level_n = np.full((p, nl, w), INF_LEVEL, dtype=np.int32)
-    level_d = np.full((p, d, w), INF_LEVEL, dtype=np.int32)
     dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+    if cfg.track_levels:
+        level_n = np.full((p, nl, w), INF_LEVEL, dtype=np.int32)
+        level_d = np.full((p, d, w), INF_LEVEL, dtype=np.int32)
+        frontier_n = np.zeros((p, 1, 1), dtype=bool)
+        frontier_d = np.zeros((p, 1, 1), dtype=bool)
+    else:
+        level_n = np.zeros((p, nl, w), dtype=bool)     # visited words
+        level_d = np.zeros((p, d, w), dtype=bool)
+        frontier_n = np.zeros((p, nl, w), dtype=bool)
+        frontier_d = np.zeros((p, d, w), dtype=bool)
     for q, src in enumerate(sources):
         isd, part, local, dpos = locate_source(pg, layout, dvids, int(src))
         if isd:
-            level_d[:, dpos, q] = 0
+            level_d[:, dpos, q] = 0 if cfg.track_levels else True
+            if not cfg.track_levels:
+                frontier_d[:, dpos, q] = True
         else:
-            level_n[part, local, q] = 0
+            level_n[part, local, q] = 0 if cfg.track_levels else True
+            if not cfg.track_levels:
+                frontier_n[part, local, q] = True
+    depth_cap = np.full((p, w), NO_DEPTH_CAP, dtype=np.int32)
+    if depth_caps is not None:
+        for q, cap in enumerate(depth_caps):
+            if cap is not None:
+                depth_cap[:, q] = np.int32(cap)
+    target_n = np.zeros((p, nl, w), dtype=bool)
+    target_d = np.zeros((p, d, w), dtype=bool)
+    has_targets = np.zeros((p, w), dtype=bool)
+    if targets is not None:
+        for q, tgts in enumerate(targets):
+            if tgts is None or len(tgts) == 0:
+                continue
+            if not cfg.enable_targets:
+                raise ValueError(
+                    "targets given but cfg.enable_targets is False")
+            has_targets[:, q] = True
+            for t in validate_sources(pg, tgts):
+                isd, part, local, dpos = locate_source(pg, layout, dvids, int(t))
+                if isd:
+                    target_d[:, dpos, q] = True
+                else:
+                    target_n[part, local, q] = True
     mi = cfg.max_iters
     z = lambda: np.zeros((p, mi), dtype=np.int32)
     lane_active = np.zeros((p, w), dtype=bool)
@@ -189,6 +277,11 @@ def init_multi_state(
         done=np.zeros((p,), dtype=bool),
         lane_active=lane_active,
         base_it=np.zeros((p, w), dtype=np.int32),
+        lane_stop=np.zeros((p, w), dtype=bool),
+        depth_cap=depth_cap,
+        has_targets=has_targets,
+        target_n=target_n, target_d=target_d,
+        frontier_n=frontier_n, frontier_d=frontier_d,
         work_fwd=z(), work_bwd=z(), nn_sent=z(), delegate_round=z(),
     )
 
@@ -212,7 +305,8 @@ def _push_scatter_multi(csr: CSR, act: jnp.ndarray, n_dst: int) -> jnp.ndarray:
 
 
 def _pull_chunked_multi(
-    csr: CSR, rows_need: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int
+    csr: CSR, rows_need: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int,
+    kernel: str | None = None,
 ):
     """Chunked bottom-up pull with word-OR early exit.
 
@@ -221,6 +315,15 @@ def _pull_chunked_multi(
     parents' frontier words, and drops out as soon as the accumulated word
     covers every needed lane -- the lane-word generalization of the paper's
     single-bit early exit. Returns (found [R, W] bool, work scalar int32).
+
+    ``kernel`` routes the per-chunk parent scan through the dispatching
+    ELL-tile wrapper :func:`repro.kernels.ops.ell_pull_multi` on *packed*
+    uint32 lane words (the TPU kernel path): each chunk is an ELL tile of
+    ``chunk`` parent columns, the frontier table is packed once up front,
+    and the still-wanted lanes (``rows_need & ~acc``) are the kernel's
+    active words. ``None`` keeps the native bool-lane gather; ``"ref"`` /
+    ``"pallas"`` pin the wrapper's dispatch; ``"auto"`` lets it pick per
+    backend.
     """
     deg = _row_degrees(csr)
     n_rows = csr.n_rows
@@ -228,6 +331,10 @@ def _pull_chunked_multi(
     ends = csr.offsets[1:]
     w = rows_need.shape[-1]
     max_chunks = -(-csr.e_max // chunk)
+    if kernel is not None:
+        from repro.kernels import ops as _kops
+        frontier_words = pack_lanes(col_frontier)           # [N, nw], once
+        force = None if kernel == "auto" else kernel
 
     def remaining(k, acc):
         unsat = jnp.any(rows_need & ~acc, axis=1)
@@ -244,8 +351,15 @@ def _pull_chunked_multi(
         idx = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
         valid = rem[:, None] & (idx < ends[:, None])
         cols = csr.cols[jnp.clip(idx, 0, csr.e_max - 1)]
-        lanes = col_frontier[cols] & valid[..., None]       # [R, chunk, W]
-        acc = acc | jnp.any(lanes, axis=1)
+        if kernel is None:
+            lanes = col_frontier[cols] & valid[..., None]   # [R, chunk, W]
+            acc = acc | jnp.any(lanes, axis=1)
+        else:
+            parents = jnp.where(valid, cols, -1).astype(jnp.int32)
+            need = pack_lanes(rows_need & ~acc)             # [R, nw]
+            hits = _kops.ell_pull_multi(parents, frontier_words, need,
+                                        force=force)
+            acc = acc | unpack_lanes(hits, w)
         work = work + jnp.sum(valid.astype(jnp.int32))
         return k + 1, acc, work
 
@@ -288,11 +402,27 @@ def msbfs_step(
     d = state.level_d.shape[-2]
     it = state.it
 
+    # Typed-query liveness gate: a lane with a latched stop (all targets
+    # hit) or at its depth cap contributes no frontier this sweep, so its
+    # push gather, pull scan, nn exchange slots and delegate candidates all
+    # drop out together -- the early exit the distance-limited and
+    # multi-target kinds buy on this substrate.
+    depth = it - state.base_it                               # [W]
+    expand = ~state.lane_stop & (depth < state.depth_cap)    # [W]
+
     nv = pgv.normal_valid[:, None]
-    unvis_n = (state.level_n == INF_LEVEL) & nv
-    unvis_d = state.level_d == INF_LEVEL
-    frontier_n = (state.level_n == it) & nv
-    frontier_d = state.level_d == it
+    if cfg.track_levels:
+        unvis_n = (state.level_n == INF_LEVEL) & nv
+        unvis_d = state.level_d == INF_LEVEL
+        frontier_n = (state.level_n == it) & nv & expand[None, :]
+        frontier_d = (state.level_d == it) & expand[None, :]
+    else:
+        # Reachability-only batches: level arrays are bool visited words and
+        # the frontier is explicit state -- no level arithmetic anywhere.
+        unvis_n = ~state.level_n & nv
+        unvis_d = ~state.level_d
+        frontier_n = state.frontier_n & nv & expand[None, :]
+        frontier_d = state.frontier_d & expand[None, :]
 
     deg_nd = _row_degrees(pgv.nd)
     deg_dn = _row_degrees(pgv.dn)
@@ -337,7 +467,7 @@ def msbfs_step(
         pgv.dd, _push_active_multi(pgv.dd, frontier_d & ~bwd_dd[None, :]), d)
     pull_dd, work_dd_b = _pull_chunked_multi(
         pgv.dd, unvis_d & pgv.dd_src_mask[:, None] & bwd_dd[None, :],
-        frontier_d, cfg.pull_chunk)
+        frontier_d, cfg.pull_chunk, cfg.kernel_pull)
     cand_dd = push_dd | pull_dd
 
     # ---- nd: normal -> delegate (pull walks the dn subgraph) --------------
@@ -345,7 +475,7 @@ def msbfs_step(
         pgv.nd, _push_active_multi(pgv.nd, frontier_n & ~bwd_nd[None, :]), d)
     pull_nd, work_nd_b = _pull_chunked_multi(
         pgv.dn, unvis_d & pgv.dn_src_mask[:, None] & bwd_nd[None, :],
-        frontier_n, cfg.pull_chunk)
+        frontier_n, cfg.pull_chunk, cfg.kernel_pull)
     cand_nd = push_nd | pull_nd
 
     # ---- dn: delegate -> normal (pull walks the nd subgraph) --------------
@@ -353,7 +483,7 @@ def msbfs_step(
         pgv.dn, _push_active_multi(pgv.dn, frontier_d & ~bwd_dn[None, :]), nl)
     pull_dn, work_dn_b = _pull_chunked_multi(
         pgv.nd, unvis_n & pgv.nd_src_mask[:, None] & bwd_dn[None, :],
-        frontier_d, cfg.pull_chunk)
+        frontier_d, cfg.pull_chunk, cfg.kernel_pull)
     cand_dn = push_dn | pull_dn
 
     # ---- nn: normal -> normal, forward only, packed-word static exchange --
@@ -377,24 +507,51 @@ def msbfs_step(
     cand_d_words = pack_lanes(cand_dd | cand_nd)             # [d, nw]
     reduced = comm.delegate_allreduce_or(cand_d_words, axis_names)
     newly_d = unpack_lanes(reduced, w) & unvis_d
-    new_level_d = jnp.where(newly_d, it + 1, state.level_d)
     new_d_any = jnp.any(newly_d)
 
-    # ---- normal level updates ---------------------------------------------
+    # ---- level / visited updates ------------------------------------------
     newly_n = (cand_dn | recv) & unvis_n
-    new_level_n = jnp.where(newly_n, it + 1, state.level_n)
+    if cfg.track_levels:
+        new_level_d = jnp.where(newly_d, it + 1, state.level_d)
+        new_level_n = jnp.where(newly_n, it + 1, state.level_n)
+        new_frontier_n, new_frontier_d = state.frontier_n, state.frontier_d
+    else:
+        new_level_d = state.level_d | newly_d                # visited words
+        new_level_n = state.level_n | newly_n
+        new_frontier_n, new_frontier_d = newly_n, newly_d
 
     # per-lane convergence: lane q stays live iff it marked a new vertex on
-    # some partition this sweep (delegate updates are already global)
-    lane_upd = (comm.lane_any_reduce(jnp.any(newly_n, axis=0), axis_names)
-                | jnp.any(newly_d, axis=0))
+    # some partition this sweep (delegate updates are already global). The
+    # target word rides the same one-word collective: flag 1 is "lane q
+    # still has an unvisited target somewhere".
+    if cfg.enable_targets:
+        unhit_n = jnp.any(state.target_n & unvis_n & ~newly_n, axis=0)
+        flags = jnp.stack([jnp.any(newly_n, axis=0), unhit_n])   # [2, W]
+        red = comm.lane_any_reduce(flags, axis_names)
+        unhit = red[1] | jnp.any(state.target_d & unvis_d & ~newly_d, axis=0)
+        upd_global = red[0]
+        stop_targets = state.has_targets & ~unhit
+    else:
+        upd_global = comm.lane_any_reduce(jnp.any(newly_n, axis=0),
+                                          axis_names)
+        stop_targets = jnp.zeros_like(state.lane_stop)
+    # latch the stop: every target covered, or the next sweep would exceed
+    # the lane's depth cap
+    new_stop = (state.lane_stop | stop_targets
+                | (depth + 1 >= state.depth_cap))
+    lane_upd = (upd_global | jnp.any(newly_d, axis=0)) & ~new_stop
     updated = jnp.any(lane_upd)
 
     # ---- statistics --------------------------------------------------------
     w_fwd = (
         jnp.sum(jnp.where(bwd_dd, 0, fv_dd)) + jnp.sum(jnp.where(bwd_nd, 0, fv_nd))
-        + jnp.sum(jnp.where(bwd_dn, 0, fv_dn)) + jnp.sum(act_nn.astype(jnp.int32))
+        + jnp.sum(jnp.where(bwd_dn, 0, fv_dn))
     )
+    if cfg.track_levels:
+        # exact per-edge-lane push count; the reachability-only variant
+        # keeps the frontier degree-sum estimates above instead of
+        # materializing the [E, W] int32 count
+        w_fwd = w_fwd + jnp.sum(act_nn.astype(jnp.int32))
     w_bwd = work_dd_b + work_nd_b + work_dn_b
     slot = jnp.clip(it, 0, cfg.max_iters - 1)
     return MSBFSState(
@@ -405,6 +562,13 @@ def msbfs_step(
         done=~updated,
         lane_active=lane_upd,
         base_it=state.base_it,
+        lane_stop=new_stop,
+        depth_cap=state.depth_cap,
+        has_targets=state.has_targets,
+        target_n=state.target_n,
+        target_d=state.target_d,
+        frontier_n=new_frontier_n,
+        frontier_d=new_frontier_d,
         work_fwd=state.work_fwd.at[slot].set(w_fwd),
         work_bwd=state.work_bwd.at[slot].set(w_bwd),
         nn_sent=state.nn_sent.at[slot].set(sent),
@@ -424,44 +588,89 @@ def reseed_lanes(
     src_local: jnp.ndarray,       # [W] int32: local id      (normal source)
     src_dpos: jnp.ndarray,        # [W] int32: delegate pos  (delegate source)
     src_is_delegate: jnp.ndarray,  # [W] bool
+    depth_cap: jnp.ndarray | None = None,       # [W] int32 (NO_DEPTH_CAP = none)
+    tgt_part: jnp.ndarray | None = None,        # [W, T] int32
+    tgt_local: jnp.ndarray | None = None,       # [W, T] int32
+    tgt_dpos: jnp.ndarray | None = None,        # [W, T] int32
+    tgt_is_delegate: jnp.ndarray | None = None,  # [W, T] bool
+    tgt_valid: jnp.ndarray | None = None,       # [W, T] bool
 ) -> MSBFSState:
     """Retire converged lanes and reseed them with fresh queries in place.
 
     For every lane in ``lane_mask``: the lane's level columns are cleared to
     INF, its new source is seeded at the *current* global iteration (so the
     shared ``level == it`` frontier test picks it up on the very next
-    sweep), ``base_it`` records the seed iteration for unpacking, and the
-    lane's direction hysteresis resets to forward. Untouched lanes are
-    bit-identical -- the sweep, the packed wire formats, and the other
-    queries' levels never see the refill.
+    sweep), ``base_it`` records the seed iteration for unpacking, the lane's
+    direction hysteresis resets to forward, and its typed-query parameters
+    (depth cap, target words, stop latch) are replaced -- omitted parameter
+    arrays reset reseeded lanes to plain full-levels semantics. Untouched
+    lanes are bit-identical -- the sweep, the packed wire formats, and the
+    other queries' levels never see the refill.
 
     The scatter trick: non-reseeded lanes scatter INF_LEVEL at a dummy
-    location via ``.min``, which is a no-op against any stored level.
+    location via ``.min`` (False via ``.max`` in reachability-only mode),
+    which is a no-op against any stored level.
     """
     w = lane_mask.shape[0]
     lanes = jnp.arange(w, dtype=jnp.int32)
     it = state.it[0]                      # replicated across partitions
     clear = lane_mask[None, None, :]
-    level_n = jnp.where(clear, INF_LEVEL, state.level_n)
-    level_d = jnp.where(clear, INF_LEVEL, state.level_d)
-
     seed_n = lane_mask & ~src_is_delegate
-    vals_n = jnp.where(seed_n, it, INF_LEVEL).astype(level_n.dtype)
-    level_n = level_n.at[jnp.where(seed_n, src_part, 0),
-                         jnp.where(seed_n, src_local, 0), lanes].min(vals_n)
-
     seed_d = lane_mask & src_is_delegate
-    vals_d = jnp.where(seed_d, it, INF_LEVEL).astype(level_d.dtype)
-    level_d = level_d.at[:, jnp.where(seed_d, src_dpos, 0), lanes].min(
-        vals_d[None, :])
+    idx_n = (jnp.where(seed_n, src_part, 0), jnp.where(seed_n, src_local, 0),
+             lanes)
+    idx_d = jnp.where(seed_d, src_dpos, 0)
+
+    if state.level_n.dtype == jnp.bool_:
+        # reachability-only mode: visited + frontier words, seed = True
+        level_n = (state.level_n & ~clear).at[idx_n].max(seed_n)
+        level_d = (state.level_d & ~clear).at[:, idx_d, lanes].max(
+            seed_d[None, :])
+        frontier_n = (state.frontier_n & ~clear).at[idx_n].max(seed_n)
+        frontier_d = (state.frontier_d & ~clear).at[:, idx_d, lanes].max(
+            seed_d[None, :])
+    else:
+        level_n = jnp.where(clear, INF_LEVEL, state.level_n)
+        level_d = jnp.where(clear, INF_LEVEL, state.level_d)
+        vals_n = jnp.where(seed_n, it, INF_LEVEL).astype(level_n.dtype)
+        level_n = level_n.at[idx_n].min(vals_n)
+        vals_d = jnp.where(seed_d, it, INF_LEVEL).astype(level_d.dtype)
+        level_d = level_d.at[:, idx_d, lanes].min(vals_d[None, :])
+        frontier_n, frontier_d = state.frontier_n, state.frontier_d
+
+    # typed-query parameter state for the reseeded lanes
+    cap_vals = NO_DEPTH_CAP if depth_cap is None else depth_cap
+    new_cap = jnp.where(lane_mask[None, :], cap_vals, state.depth_cap)
+    target_n = state.target_n & ~clear
+    target_d = state.target_d & ~clear
+    if tgt_valid is None:
+        has_targets = state.has_targets & ~lane_mask[None, :]
+    else:
+        tn = tgt_valid & ~tgt_is_delegate & lane_mask[:, None]   # [W, T]
+        lanes_wt = jnp.broadcast_to(lanes[:, None], tn.shape)
+        target_n = target_n.at[jnp.where(tn, tgt_part, 0),
+                               jnp.where(tn, tgt_local, 0), lanes_wt].max(tn)
+        td = tgt_valid & tgt_is_delegate & lane_mask[:, None]
+        target_d = target_d.at[:, jnp.where(td, tgt_dpos, 0), lanes_wt].max(
+            td[None])
+        has_targets = jnp.where(lane_mask[None, :],
+                                jnp.any(tgt_valid, axis=1)[None, :],
+                                state.has_targets)
 
     return dataclasses.replace(
         state,
         level_n=level_n,
         level_d=level_d,
+        frontier_n=frontier_n,
+        frontier_d=frontier_d,
         backward=state.backward & ~lane_mask[None, None, :],
         base_it=jnp.where(lane_mask[None, :], it, state.base_it),
         lane_active=state.lane_active | lane_mask[None, :],
+        lane_stop=state.lane_stop & ~lane_mask[None, :],
+        depth_cap=new_cap,
+        has_targets=has_targets,
+        target_n=target_n,
+        target_d=target_d,
         done=state.done & ~jnp.any(lane_mask),
     )
 
@@ -551,21 +760,9 @@ def make_sharded_msbfs_step(mesh, partition_axes, cfg: MSBFSConfig):
     return jax.jit(_make_sharded_step(mesh, tuple(partition_axes), cfg))
 
 
-def gather_levels_multi(
-    pg: PartitionedGraph, state: MSBFSState, lanes=None
-) -> np.ndarray:
-    """Assemble per-query global hop distances: [W, n] int32.
-
-    Stored levels are absolute (seed iteration + depth); each lane's
-    ``base_it`` is subtracted here so refilled lanes unpack to plain hop
-    distances, identical to a fresh batch run.
-
-    ``lanes`` (optional 1-D index array) restricts unpacking to those lane
-    columns -- returns ``[len(lanes), n]``. The refill engine retires a few
-    lanes at a time; slicing keeps the host-side assembly O(k * n) instead
-    of O(W * n). The slice happens host-side *after* the transfer: slicing
-    the device array would re-jit a gather per distinct retirement count,
-    which costs far more than the extra copied columns."""
+def _gather_lane_columns(pg: PartitionedGraph, state: MSBFSState, lanes):
+    """Host-side assembly of per-lane global vertex columns: [k, n] in the
+    level arrays' dtype, plus the matching per-lane base iterations [k]."""
     layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
     level_n = np.asarray(state.level_n)           # [p, nl, W]
     level_d = np.asarray(state.level_d)[0]        # [d, W]
@@ -581,5 +778,35 @@ def gather_levels_multi(
     if pg.d:
         dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
         out[:, dvids] = level_d[: pg.d].T
-    base = np.asarray(bi)[0]                                     # [k]
+    return out, np.asarray(bi)[0]
+
+
+def gather_levels_multi(
+    pg: PartitionedGraph, state: MSBFSState, lanes=None
+) -> np.ndarray:
+    """Assemble per-query global hop distances: [W, n] int32.
+
+    Stored levels are absolute (seed iteration + depth); each lane's
+    ``base_it`` is subtracted here so refilled lanes unpack to plain hop
+    distances, identical to a fresh batch run.
+
+    ``lanes`` (optional 1-D index array) restricts unpacking to those lane
+    columns -- returns ``[len(lanes), n]``. The refill engine retires a few
+    lanes at a time; slicing keeps the host-side assembly O(k * n) instead
+    of O(W * n). The slice happens host-side *after* the transfer: slicing
+    the device array would re-jit a gather per distinct retirement count,
+    which costs far more than the extra copied columns."""
+    out, base = _gather_lane_columns(pg, state, lanes)
     return np.where(out == INF_LEVEL, INF_LEVEL, out - base[:, None])
+
+
+def gather_reachable_multi(
+    pg: PartitionedGraph, state: MSBFSState, lanes=None
+) -> np.ndarray:
+    """Assemble per-query reachability masks: [W, n] bool.
+
+    The reachability-only (``track_levels=False``) sibling of
+    :func:`gather_levels_multi`: the state's bool visited words unpack
+    directly, with no base-iteration arithmetic."""
+    out, _ = _gather_lane_columns(pg, state, lanes)
+    return out

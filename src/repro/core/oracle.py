@@ -40,6 +40,26 @@ def bfs_levels(g: COOGraph, source: int) -> np.ndarray:
     return levels
 
 
+def reachable_mask(g: COOGraph, source: int) -> np.ndarray:
+    """Reachability reference: bool [n], True where BFS from ``source``
+    arrives (the REACHABILITY query kind's oracle)."""
+    return bfs_levels(g, source) != INF_LEVEL
+
+
+def bfs_levels_limited(g: COOGraph, source: int, max_depth: int) -> np.ndarray:
+    """Distance-limited reference: hop distances up to ``max_depth``,
+    INF_LEVEL beyond (the DISTANCE_LIMITED query kind's oracle)."""
+    levels = bfs_levels(g, source)
+    return np.where(levels <= max_depth, levels, INF_LEVEL).astype(np.int32)
+
+
+def target_depths(g: COOGraph, source: int, targets) -> dict:
+    """Multi-target reference: {target: hop depth} with INF_LEVEL for
+    unreached targets (the MULTI_TARGET query kind's oracle)."""
+    levels = bfs_levels(g, source)
+    return {int(t): int(levels[int(t)]) for t in targets}
+
+
 def traversed_edges(g: COOGraph, levels: np.ndarray) -> int:
     """Edges in the connected component of the source (for TEPS, counted on
     the undirected graph as m_component / 2)."""

@@ -1,17 +1,20 @@
-"""BFS query serving on top of the batched multi-source BFS subsystem.
+"""Typed traversal-query serving on top of the batched msBFS subsystem.
 
 ``repro.serve`` turns the one-shot traversal engine into a query service:
-independent BFS queries (one source vertex each) are queued, packed 32-per-
+independent typed traversal queries (``queries.Query`` -- full levels,
+reachability, distance-limited, multi-target) are queued, packed 32-per-
 uint32-lane-word (``batcher``), traversed together by one msBFS sweep
-(``engine``), and memoized (``cache``).  See README.md in this package for
-how the lane-word packing maps onto the paper's Section V communication
-classes.
+(``engine``), unpacked per kind, and memoized (``cache``).  See README.md
+in this package for how the lane-word packing maps onto the paper's
+Section V communication classes and for the query taxonomy.
 """
 from .batcher import LaneAssignment, LaneScheduler, QueryBatcher, pack_sources
 from .cache import LRUCache
 from .engine import BFSServeEngine, ServeStats
+from .queries import MAX_TARGETS, Query, QueryKind, as_query, unpack_result
 
 __all__ = [
     "BFSServeEngine", "LRUCache", "LaneAssignment", "LaneScheduler",
-    "QueryBatcher", "ServeStats", "pack_sources",
+    "MAX_TARGETS", "Query", "QueryBatcher", "QueryKind", "ServeStats",
+    "as_query", "pack_sources", "unpack_result",
 ]

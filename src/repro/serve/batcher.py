@@ -73,12 +73,16 @@ class QueryBatcher:
 
 @dataclass(frozen=True)
 class LaneAssignment:
-    """One (re)seeding decision: query ``source`` occupies ``lane`` as its
-    ``generation``-th tenant."""
+    """One (re)seeding decision: the query on ``source`` occupies ``lane``
+    as its ``generation``-th tenant. ``item`` is the queued descriptor --
+    a typed :class:`~repro.serve.queries.Query` carrying per-kind
+    parameters (depth cap, targets), or the raw source id for classic
+    untyped submissions."""
 
     lane: int
     source: int
     generation: int
+    item: object = None
 
 
 class LaneScheduler:
@@ -86,9 +90,15 @@ class LaneScheduler:
 
     Tracks which query occupies each of the ``width`` msBFS lanes. Every
     (re)seed bumps the lane's generation counter, and :meth:`retire` returns
-    the (source, generation) pair the lane was serving -- the unpacking side
+    the (item, generation) pair the lane was serving -- the unpacking side
     keys results by that pair, so a lane reused for a new query can never
     leak levels across tenants even if retirement processing is deferred.
+
+    Queue items are either raw source vertex ids or typed query
+    descriptors (anything with a ``.source`` attribute): the scheduler
+    only needs the source for bookkeeping and hands the full descriptor
+    back through :class:`LaneAssignment` so the engine can seed per-kind
+    lane parameters. Mixed-kind pending queues are the normal case.
 
     The scheduler is pure bookkeeping (no device state): the engine asks
     :meth:`fill_idle` for assignments at a sweep boundary, performs the
@@ -99,13 +109,15 @@ class LaneScheduler:
         if width <= 0:
             raise ValueError(f"width must be positive, got {width}")
         self.width = int(width)
-        self.pending: deque = deque(int(s) for s in pending)
+        self.pending: deque = deque(pending)
+        self.lane_item: list = [None] * self.width
         self.lane_source = np.full(self.width, -1, dtype=np.int64)
         self.lane_generation = np.zeros(self.width, dtype=np.int64)
         self.busy = np.zeros(self.width, dtype=bool)
 
-    def submit(self, source: int) -> None:
-        self.pending.append(int(source))
+    def submit(self, item) -> None:
+        """Queue a source vertex id or a typed query descriptor."""
+        self.pending.append(item)
 
     @property
     def n_busy(self) -> int:
@@ -122,17 +134,21 @@ class LaneScheduler:
         for lane in range(self.width):
             if self.busy[lane] or not self.pending:
                 continue
-            source = self.pending.popleft()
+            item = self.pending.popleft()
+            source = int(getattr(item, "source", item))
             self.lane_generation[lane] += 1
+            self.lane_item[lane] = item
             self.lane_source[lane] = source
             self.busy[lane] = True
             out.append(LaneAssignment(lane, source,
-                                      int(self.lane_generation[lane])))
+                                      int(self.lane_generation[lane]), item))
         return out
 
     def retire(self, lane: int):
-        """Mark a converged lane idle; returns its (source, generation)."""
+        """Mark a converged lane idle; returns its (item, generation) --
+        ``item`` is exactly what was submitted (a raw source id round-trips
+        as the int it was)."""
         if not self.busy[lane]:
             raise ValueError(f"lane {lane} is not busy")
         self.busy[lane] = False
-        return int(self.lane_source[lane]), int(self.lane_generation[lane])
+        return self.lane_item[lane], int(self.lane_generation[lane])

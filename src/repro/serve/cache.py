@@ -1,48 +1,82 @@
-"""LRU memoization of BFS results, keyed by (graph id, source vertex).
+"""LRU + TTL memoization of traversal-query results.
 
 Serving traffic is heavy-tailed in practice (popular landmark vertices are
 queried over and over), so a small exact-result cache in front of the
-msBFS engine absorbs the repeats. Values are per-query level arrays
-([n] int32); the graph id keys the cache across engine instances / graph
-reloads so a stale graph never answers.
+msBFS engine absorbs the repeats. Keys are full query descriptors --
+``(graph_id, kind, params, source)`` (see ``repro.serve.queries``) -- so a
+distance-limited or reachability answer can never collide with a
+full-levels entry for the same source, and the graph id keys the cache
+across engine instances / graph reloads so a stale graph never answers.
+
+Entries may carry a time-to-live: for mutable graphs the engine sets a
+default TTL and every ``get`` past an entry's deadline treats it as a miss
+(counted in ``expired``). ``ttl=None`` entries never expire (the classic
+immutable-graph behavior).
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
+
+_USE_DEFAULT = object()
 
 
 class LRUCache:
-    """Plain ordered-dict LRU: get refreshes recency, put evicts the oldest
-    entry beyond ``capacity``. ``capacity <= 0`` disables caching."""
+    """Ordered-dict LRU with optional per-entry TTL.
 
-    def __init__(self, capacity: int = 256):
+    ``get`` refreshes recency, ``put`` evicts the oldest entry beyond
+    ``capacity``. ``capacity <= 0`` disables caching. ``ttl`` (seconds) is
+    the default time-to-live stamped on entries at ``put`` time; pass
+    ``ttl=`` to ``put`` to override per entry (``None`` = never expires).
+    ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, capacity: int = 256, ttl: float | None = None,
+                 clock=time.monotonic):
         self.capacity = int(capacity)
-        self._data: OrderedDict = OrderedDict()
+        self.ttl = ttl
+        self._clock = clock
+        self._data: OrderedDict = OrderedDict()   # key -> (value, deadline)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.expired = 0
 
     def __len__(self) -> int:
         return len(self._data)
 
     def __contains__(self, key) -> bool:
-        return key in self._data
+        entry = self._data.get(key)
+        return entry is not None and not self._is_expired(entry)
+
+    def _is_expired(self, entry) -> bool:
+        deadline = entry[1]
+        return deadline is not None and self._clock() >= deadline
 
     def get(self, key):
-        """Value for key, refreshing recency; None on miss."""
-        if key not in self._data:
+        """Value for key, refreshing recency; None on miss or expiry."""
+        entry = self._data.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if self._is_expired(entry):
+            del self._data[key]
+            self.expired += 1
             self.misses += 1
             return None
         self.hits += 1
         self._data.move_to_end(key)
-        return self._data[key]
+        return entry[0]
 
-    def put(self, key, value) -> None:
+    def put(self, key, value, ttl=_USE_DEFAULT) -> None:
         if self.capacity <= 0:
             return
+        if ttl is _USE_DEFAULT:
+            ttl = self.ttl
+        deadline = None if ttl is None else self._clock() + ttl
         if key in self._data:
             self._data.move_to_end(key)
-        self._data[key] = value
+        self._data[key] = (value, deadline)
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
             self.evictions += 1

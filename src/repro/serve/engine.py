@@ -1,26 +1,37 @@
-"""Jitted msBFS serving engine: queue -> lane batches -> level arrays.
+"""Jitted msBFS serving engine: typed query queue -> lane batches -> results.
 
 One ``BFSServeEngine`` owns a partitioned graph, the static exchange plan,
-and a compiled msBFS runner (compiled once; every batch reuses it because
-lane-word shapes are static in ``n_queries``).  ``query`` answers a list of
-sources: cache hits are returned immediately, misses are packed into lane
-batches, traversed, unpacked into per-query level arrays, and cached.
+and compiled msBFS runners (compiled once; every batch reuses them because
+lane-word shapes are static in ``n_queries``).  ``submit`` answers typed
+:class:`~repro.serve.queries.Query` descriptors -- full levels,
+reachability masks, distance-limited levels, multi-target depths -- and
+``query`` stays as the classic full-levels sugar.  Cache hits are returned
+immediately; misses are packed into lane batches (kinds mix freely),
+traversed, unpacked per kind, and cached under ``(graph_id, kind, params,
+source)`` keys.
 
-Two execution dimensions, both picked at construction:
+Three execution dimensions, the first two picked at construction:
 
 * **placement** -- ``mesh=None`` (or a 1-device mesh) runs the vmap-emulated
   path; a multi-device mesh runs every sweep under ``shard_map`` with one
   graph partition per device (``msbfs.make_sharded_msbfs``).
 * **scheduling** -- ``refill=False`` retires whole batches at once;
   ``refill=True`` runs the continuously-fed pipeline: each sweep reports a
-  per-lane convergence mask, converged lanes are retired (their levels
+  per-lane convergence mask, converged lanes are retired (their results
   unpacked and attributed via the :class:`~repro.serve.batcher.LaneScheduler`
   generation counters) and reseeded from the pending queue at the next sweep
   boundary, so a deep straggler query never idles the other W-1 lanes.
+  Distance-limited and multi-target lanes retire through the same
+  convergence word the moment their early-exit condition latches.
+* **specialization** -- a batch (or refill drain session) that is
+  homogeneously ``REACHABILITY`` compiles to the levels-free msBFS variant
+  (``track_levels=False``): pure lane words, no level scatter, no per-edge
+  work counters. Mixed batches keep levels for everyone and unpack per
+  kind.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field, replace as _dc_replace
 
 import numpy as np
 
@@ -28,8 +39,9 @@ from repro.core import bfs as B, engine as E, msbfs as M
 from repro.core.partition import partition_graph
 from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
 
-from .batcher import LaneScheduler, pack_sources
+from .batcher import LaneScheduler
 from .cache import LRUCache
+from .queries import MAX_TARGETS, Query, QueryKind, as_query, unpack_result
 
 
 @dataclass
@@ -47,6 +59,12 @@ class ServeStats:
       padded) -- refilled lanes reuse slots instead of padding new words.
     * ``lane_sweeps_busy / lane_sweeps_total`` is the refill pipeline's lane
       utilization (what ``--refill`` benchmarks report).
+
+    Typed-query counters: ``kind_counts`` tallies submissions per kind
+    (cache hits included), ``early_stops`` counts lanes retired through a
+    latched early exit (depth cap reached / all targets hit) rather than
+    natural frontier exhaustion, and ``reach_fast_batches`` counts batches
+    or drain sessions served by the levels-free reachability variant.
     """
 
     queries: int = 0
@@ -58,10 +76,17 @@ class ServeStats:
     sweeps: int = 0           # host-stepped supersteps (refill mode only)
     lane_sweeps_busy: int = 0
     lane_sweeps_total: int = 0
+    early_stops: int = 0      # lanes retired via depth-cap/target latch
+    reach_fast_batches: int = 0
+    component_hits: int = 0   # reachability answers reused across sources
+    kind_counts: dict = field(default_factory=dict)
 
     @property
     def lane_utilization(self) -> float:
         return self.lane_sweeps_busy / max(self.lane_sweeps_total, 1)
+
+    def note_kind(self, kind: QueryKind) -> None:
+        self.kind_counts[kind.value] = self.kind_counts.get(kind.value, 0) + 1
 
     def as_dict(self) -> dict:
         return {
@@ -71,18 +96,24 @@ class ServeStats:
             "sweeps": self.sweeps,
             "lane_sweeps_busy": self.lane_sweeps_busy,
             "lane_sweeps_total": self.lane_sweeps_total,
+            "early_stops": self.early_stops,
+            "reach_fast_batches": self.reach_fast_batches,
+            "component_hits": self.component_hits,
+            "kind_counts": dict(self.kind_counts),
         }
 
 
 class BFSServeEngine:
-    """Serve single-source BFS level queries from batched msBFS sweeps.
+    """Serve typed traversal queries from batched msBFS sweeps.
 
     Parameters
     ----------
     graph / pg : give either the raw ``COOGraph`` (partitioned here with
         ``th``/``p_rank``/``p_gpu``) or an already-partitioned graph.
     cfg : msBFS config; ``cfg.n_queries`` is the lane width W.
-    cache_capacity : LRU entries ((graph, source) -> levels); 0 disables.
+    cache_capacity : LRU entries (query-descriptor keyed); 0 disables.
+    cache_ttl : default per-entry time-to-live in seconds (None = entries
+        never expire -- the immutable-graph default).
     graph_id : cache key namespace; defaults to a digest of the partition
         structure so two engines on the same graph share semantics.
     mesh / partition_axes : a device mesh to run sweeps on under
@@ -92,6 +123,16 @@ class BFSServeEngine:
         degenerate to the classic engine.
     refill : serve misses through the continuously-fed lane-refill pipeline
         instead of batch-at-a-time traversals.
+    specialize_reachability : compile homogeneous REACHABILITY batches to
+        the levels-free msBFS variant (lazily, on first use).
+    reuse_components : memoize reachability answers *per connected
+        component*: on an undirected graph the reachable set is the
+        source's component, so every later REACHABILITY query from an
+        already-mapped component is answered without a traversal (counted
+        in ``stats.component_hits``) -- a reuse level arrays can never
+        have, since levels differ per source. The repo's Graph500 / RMAT
+        graphs are all symmetrized; set False for directed edge lists,
+        where reachability is not symmetric and the reuse would be wrong.
     """
 
     def __init__(
@@ -104,10 +145,13 @@ class BFSServeEngine:
         p_gpu: int = 2,
         cfg: M.MSBFSConfig | None = None,
         cache_capacity: int = 256,
+        cache_ttl: float | None = None,
         graph_id: str | None = None,
         mesh=None,
         partition_axes=None,
         refill: bool = False,
+        specialize_reachability: bool = True,
+        reuse_components: bool = True,
     ):
         if pg is None:
             if graph is None:
@@ -115,20 +159,29 @@ class BFSServeEngine:
             pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
         self.pg = pg
         self.cfg = cfg or M.MSBFSConfig()
+        if not self.cfg.track_levels or not self.cfg.enable_targets:
+            raise ValueError(
+                "pass a track_levels=True, enable_targets=True cfg; the "
+                "engine derives the specialized per-batch variants itself")
         self.refill = bool(refill)
+        self.specialize_reachability = bool(specialize_reachability)
+        self.reuse_components = bool(reuse_components)
+        self._comp_id = np.full(pg.n, -1, dtype=np.int32)
+        self._comp_masks: dict[int, np.ndarray] = {}
         self.pgv = B.device_view(pg)
         self.plan = E.build_exchange_plan(pg)
         if graph_id is None:
             m = np.asarray(pg.nn.m).sum() + np.asarray(pg.dd.m).sum()
             graph_id = f"pg-n{pg.n}-p{pg.p}-d{pg.d}-th{pg.th}-m{int(m)}"
         self.graph_id = graph_id
-        self.cache = LRUCache(cache_capacity)
+        self.cache = LRUCache(cache_capacity, ttl=cache_ttl)
         self.stats = ServeStats()
         self._layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
         self._dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
 
         self.mesh = mesh
         self.sharded = False
+        self._axes = None
         if mesh is not None:
             axes = (tuple(partition_axes) if partition_axes is not None
                     else tuple(mesh.axis_names))
@@ -150,61 +203,176 @@ class BFSServeEngine:
                 self._put = put
                 self.pgv = put(self.pgv)
                 self.plan = put(self.plan)
-                self._run_full = M.make_sharded_msbfs(mesh, axes, self.cfg)
-                self._step_once = M.make_sharded_msbfs_step(mesh, axes, self.cfg)
+                self._axes = axes
                 self.sharded = True
         if not self.sharded:
             self._put = lambda tree: tree
-            self._run_full = (
-                lambda pgv, plan, st: M.run_msbfs_emulated(pgv, plan, st, self.cfg))
-            self._step_once = (
-                lambda pgv, plan, st: M.msbfs_step_emulated(pgv, plan, st, self.cfg))
+        # compiled runner pairs (run_full, step_once), keyed by the static
+        # per-batch config variant (track_levels x enable_targets), built
+        # lazily on first use -- target-free batches compile the target
+        # bookkeeping away, homogeneous REACHABILITY batches the levels
+        self._runners: dict[M.MSBFSConfig, tuple] = {}
+
+    # -- runner construction ------------------------------------------------
+    def _build_runners(self, cfg: M.MSBFSConfig) -> tuple:
+        if self.sharded:
+            return (M.make_sharded_msbfs(self.mesh, self._axes, cfg),
+                    M.make_sharded_msbfs_step(self.mesh, self._axes, cfg))
+        run = lambda pgv, plan, st: M.run_msbfs_emulated(pgv, plan, st, cfg)
+        step = lambda pgv, plan, st: M.msbfs_step_emulated(pgv, plan, st, cfg)
+        return run, step
+
+    def _session_cfg(self, queries) -> M.MSBFSConfig:
+        """The static msBFS variant this batch/session compiles to."""
+        if self._reach_fast(queries):
+            return _dc_replace(self.cfg, track_levels=False,
+                               enable_targets=False)
+        if any(q.kind is QueryKind.MULTI_TARGET for q in queries):
+            return self.cfg
+        return _dc_replace(self.cfg, enable_targets=False)
+
+    def _runner_pair(self, cfg: M.MSBFSConfig) -> tuple:
+        if cfg not in self._runners:
+            self._runners[cfg] = self._build_runners(cfg)
+        return self._runners[cfg]
+
+    def _reach_fast(self, queries) -> bool:
+        return (self.specialize_reachability
+                and all(q.kind is QueryKind.REACHABILITY for q in queries))
+
+    def _validate_queries(self, queries) -> None:
+        """Range-check every source *and* target before any lane is seeded
+        (the refill path seeds targets through ``_seed_descriptors``, which
+        must never scatter an out-of-range coordinate)."""
+        ids = [q.source for q in queries]
+        for q in queries:
+            ids.extend(q.targets or ())
+        M.validate_sources(self.pg, ids)
+
+    # -- per-component reachability reuse -----------------------------------
+    def _component_of(self, q: Query):
+        """The memoized reachable mask covering ``q``, or None."""
+        if not (self.reuse_components
+                and q.kind is QueryKind.REACHABILITY):
+            return None
+        cid = self._comp_id[q.source]
+        return None if cid < 0 else self._comp_masks[cid]
+
+    def _register_component(self, q: Query, result) -> None:
+        """Record a served reachability mask as its source's component."""
+        if (self.reuse_components and q.kind is QueryKind.REACHABILITY
+                and self._comp_id[q.source] < 0):
+            cid = len(self._comp_masks)
+            self._comp_masks[cid] = np.array(result)
+            self._comp_id[result] = cid
 
     # -- core batch path ----------------------------------------------------
     def run_batch(self, sources: np.ndarray) -> np.ndarray:
-        """Traverse one lane batch (<= n_queries sources): [k, n] levels."""
-        st = self._put(M.init_multi_state(self.pg, sources, self.cfg))
-        out = self._run_full(self.pgv, self.plan, st)
-        levels = M.gather_levels_multi(self.pg, out)
+        """Traverse one full-levels lane batch (classic API): [k, n]."""
+        qs = [as_query(int(s)) for s in sources]
+        res = self.run_batch_queries(qs)
+        return np.stack([res[q] for q in qs]) if qs else np.zeros(
+            (0, self.pg.n), dtype=np.int32)
+
+    def run_batch_queries(self, queries) -> dict:
+        """Traverse one (possibly mixed-kind) lane batch of typed queries:
+        {query: per-kind result}. Homogeneous REACHABILITY batches run on
+        the levels-free variant."""
+        w = self.cfg.n_queries
+        if len(queries) > w:
+            raise ValueError(f"{len(queries)} queries > n_queries={w}")
+        if not queries:
+            return {}
+        reach_fast = self._reach_fast(queries)
+        cfg = self._session_cfg(queries)
+        run_full, _ = self._runner_pair(cfg)
+        st = self._put(M.init_multi_state(
+            self.pg, [q.source for q in queries], cfg,
+            depth_caps=[q.depth_cap for q in queries],
+            targets=[q.targets for q in queries]))
+        out = run_full(self.pgv, self.plan, st)
+        if reach_fast:
+            rows = M.gather_reachable_multi(self.pg, out)
+            self.stats.reach_fast_batches += 1
+        else:
+            rows = M.gather_levels_multi(self.pg, out)
+        stops = np.asarray(out.lane_stop)[0]
         self.stats.batches += 1
-        self.stats.lanes_used += len(sources)
-        self.stats.lanes_padded += self.cfg.n_queries - len(sources)
-        return levels[: len(sources)]
+        self.stats.lanes_used += len(queries)
+        self.stats.lanes_padded += w - len(queries)
+        self.stats.early_stops += int(stops[: len(queries)].sum())
+        return {q: unpack_result(q, rows[i], packed_reach=reach_fast)
+                for i, q in enumerate(queries)}
 
     # -- refill path --------------------------------------------------------
     def _seed_descriptors(self, assignments):
-        """Host-side lane seed coordinates for ``msbfs.reseed_lanes``."""
-        w = self.cfg.n_queries
+        """Host-side lane seed coordinates + typed-query parameters for
+        ``msbfs.reseed_lanes``."""
+        w, t = self.cfg.n_queries, MAX_TARGETS
         mask = np.zeros(w, dtype=bool)
         part = np.zeros(w, dtype=np.int32)
         local = np.zeros(w, dtype=np.int32)
         dpos = np.zeros(w, dtype=np.int32)
         isd = np.zeros(w, dtype=bool)
+        cap = np.full(w, M.NO_DEPTH_CAP, dtype=np.int32)
+        tpart = np.zeros((w, t), dtype=np.int32)
+        tlocal = np.zeros((w, t), dtype=np.int32)
+        tdpos = np.zeros((w, t), dtype=np.int32)
+        tisd = np.zeros((w, t), dtype=bool)
+        tvalid = np.zeros((w, t), dtype=bool)
         for a in assignments:
             mask[a.lane] = True
             (isd[a.lane], part[a.lane], local[a.lane],
              dpos[a.lane]) = M.locate_source(self.pg, self._layout,
                                              self._dvids, a.source)
-        return mask, part, local, dpos, isd
+            q = as_query(a.item if a.item is not None else a.source)
+            if q.depth_cap is not None:
+                cap[a.lane] = q.depth_cap
+            for j, tgt in enumerate(q.targets or ()):
+                (tisd[a.lane, j], tpart[a.lane, j], tlocal[a.lane, j],
+                 tdpos[a.lane, j]) = M.locate_source(
+                     self.pg, self._layout, self._dvids, int(tgt))
+                tvalid[a.lane, j] = True
+        return (mask, part, local, dpos, isd, cap,
+                tpart, tlocal, tdpos, tisd, tvalid)
 
     def run_refill(self, sources: np.ndarray) -> dict:
-        """Drain ``sources`` through the continuously-fed lane pipeline.
-
-        Returns {source: levels [n] int32}; duplicate sources share one
-        lane (and one result entry). Lanes are retired the sweep their
-        frontier empties and reseeded from the pending queue at the next
-        sweep boundary; results are attributed through the scheduler's
-        (lane, generation) bookkeeping.
-        """
+        """Classic full-levels drain (kept for direct callers): dedups
+        ``sources`` and returns {source: levels [n] int32}."""
         sources = M.validate_sources(self.pg, sources)
-        sources = np.asarray(list(dict.fromkeys(sources.tolist())), np.int64)
-        if sources.size == 0:
+        qs = [as_query(int(s))
+              for s in dict.fromkeys(sources.tolist())]
+        return {q.source: lev
+                for q, lev in self.run_refill_queries(qs).items()}
+
+    def run_refill_queries(self, queries) -> dict:
+        """Drain deduped typed ``queries`` through the continuously-fed lane
+        pipeline: {query: per-kind result}.
+
+        Lanes are retired the sweep their early-exit latches or their
+        frontier empties, and reseeded from the pending queue at the next
+        sweep boundary; results are attributed through the scheduler's
+        (lane, generation) bookkeeping. Kinds mix freely across refill
+        generations; a homogeneously-REACHABILITY session runs on the
+        levels-free variant.
+        """
+        queries = list(queries)
+        if not queries:
             return {}
+        if len(set(queries)) != len(queries):
+            raise ValueError("run_refill_queries needs deduped queries")
+        self._validate_queries(queries)
+        reach_fast = self._reach_fast(queries)
+        cfg = self._session_cfg(queries)
+        _, step_once = self._runner_pair(cfg)
         w = self.cfg.n_queries
-        sched = LaneScheduler(w, pending=sources.tolist())
-        state = self._put(M.init_multi_state(self.pg, [], self.cfg))
+        sched = LaneScheduler(w, pending=queries)
+        state = self._put(M.init_multi_state(self.pg, [], cfg))
+        if reach_fast:
+            self.stats.reach_fast_batches += 1
 
         import jax.numpy as jnp
+
         def reseed(state, assignments):
             desc = self._seed_descriptors(assignments)
             return M.reseed_lanes(state, *map(jnp.asarray, desc))
@@ -212,17 +380,17 @@ class BFSServeEngine:
         state = reseed(state, sched.fill_idle())
         self.stats.batches += 1
         self.stats.lanes_used += sched.n_busy
-        self.stats.lanes_padded += max(0, w - sources.size)
+        self.stats.lanes_padded += max(0, w - len(queries))
 
-        results: dict[int, np.ndarray] = {}
-        expected: dict[int, tuple] = {
-            int(sched.lane_source[q]): (q, int(sched.lane_generation[q]))
+        results: dict = {}
+        expected: dict = {
+            sched.lane_item[q]: (q, int(sched.lane_generation[q]))
             for q in np.nonzero(sched.busy)[0]}
         sweeps = 0
-        guard = self.cfg.max_iters * max(1, sources.size) + w
+        guard = self.cfg.max_iters * max(1, len(queries)) + w
         while sched.n_busy:
             busy_now = sched.n_busy
-            state = self._step_once(self.pgv, self.plan, state)
+            state = step_once(self.pgv, self.plan, state)
             sweeps += 1
             self.stats.sweeps += 1
             self.stats.lane_sweeps_busy += busy_now
@@ -237,69 +405,152 @@ class BFSServeEngine:
                 continue
             fin_lanes = np.nonzero(finished)[0]
             # only the retired lanes' columns leave the device: [k, n]
-            levels = M.gather_levels_multi(self.pg, state, lanes=fin_lanes)
+            if reach_fast:
+                rows = M.gather_reachable_multi(self.pg, state, lanes=fin_lanes)
+            else:
+                rows = M.gather_levels_multi(self.pg, state, lanes=fin_lanes)
+            stops = np.asarray(state.lane_stop)[0]
             for i, q in enumerate(fin_lanes):
-                source, gen = sched.retire(int(q))
-                assert expected.pop(source) == (int(q), gen), (
+                item, gen = sched.retire(int(q))
+                assert expected.pop(item) == (int(q), gen), (
                     "lane generation bookkeeping out of sync")
-                results[source] = np.array(levels[i])
+                results[item] = unpack_result(item, rows[i],
+                                              packed_reach=reach_fast)
+                self._register_component(item, results[item])
+                self.stats.early_stops += int(stops[q])
+            if self.reuse_components:
+                # a freshly mapped component may cover other reachability
+                # queries: answer pending ones without a lane, and cut
+                # *active* lanes short -- their traversal result is already
+                # known, so a deep straggler stops costing sweeps the
+                # moment any same-component lane retires
+                for lane in np.nonzero(sched.busy)[0]:
+                    mask = self._component_of(as_query(sched.lane_item[lane]))
+                    if mask is not None:
+                        item, _ = sched.retire(int(lane))
+                        expected.pop(item)
+                        results[item] = np.array(mask)
+                        self.stats.component_hits += 1
+                if sched.pending:
+                    keep = []
+                    for item in sched.pending:
+                        mask = self._component_of(as_query(item))
+                        if mask is None:
+                            keep.append(item)
+                        else:
+                            results[item] = np.array(mask)
+                            self.stats.component_hits += 1
+                    sched.pending.clear()
+                    sched.pending.extend(keep)
             fresh = sched.fill_idle()
             if fresh:
                 state = reseed(state, fresh)
                 self.stats.refills += len(fresh)
                 self.stats.lanes_used += len(fresh)
                 for a in fresh:
-                    expected[a.source] = (a.lane, a.generation)
+                    expected[a.item] = (a.lane, a.generation)
         return results
 
     # -- public API ---------------------------------------------------------
-    def query(self, sources) -> np.ndarray:
-        """Levels for each source: [len(sources), n] int32.
+    def submit_many(self, queries) -> list:
+        """Per-kind results for each query (raw ints coerce to LEVELS).
 
-        Duplicate and cached sources cost nothing extra; only unique misses
+        Duplicate and cached queries cost nothing extra; only unique misses
         occupy lanes.
         """
+        qs = [as_query(q) for q in queries]
+        if not qs:
+            return []
+        self._validate_queries(qs)
+        self.stats.queries += len(qs)
+        for q in qs:
+            self.stats.note_kind(q.kind)
+        results: dict = {}
+        misses: list = []
+        for q in dict.fromkeys(qs):  # dedup, keep order
+            hit = self.cache.get(q.key(self.graph_id))
+            if hit is not None:
+                self.stats.cache_hits += 1
+                results[q] = hit
+                continue
+            if self.reuse_components and q.kind is QueryKind.REACHABILITY:
+                cid = self._comp_id[q.source]
+                if cid >= 0:   # component already mapped: mask is the answer
+                    self.stats.component_hits += 1
+                    results[q] = np.array(self._comp_masks[cid])
+                    continue
+            misses.append(q)
+        if self.refill:
+            served = self.run_refill_queries(misses)
+        else:
+            served = {}
+            remaining = list(misses)
+            while remaining:
+                if self.reuse_components:
+                    # components mapped by earlier batches answer later
+                    # reachability misses without a lane
+                    still = []
+                    for q in remaining:
+                        mask = self._component_of(q)
+                        if mask is None:
+                            still.append(q)
+                        else:
+                            served[q] = np.array(mask)
+                            self.stats.component_hits += 1
+                    remaining = still
+                    if not remaining:
+                        break
+                batch = remaining[: self.cfg.n_queries]
+                remaining = remaining[self.cfg.n_queries:]
+                batch_res = self.run_batch_queries(batch)
+                for q, res in batch_res.items():
+                    self._register_component(q, res)
+                served.update(batch_res)
+        for q, res in served.items():
+            results[q] = res
+            self.cache.put(q.key(self.graph_id), res)
+        # hand out copies: the same object is cached (and shared by
+        # duplicate queries), so caller mutation must never reach it
+        own = lambda r: dict(r) if isinstance(r, dict) else np.array(r)
+        return [own(results[q]) for q in qs]
+
+    def submit(self, query):
+        """One typed query -> its per-kind result."""
+        return self.submit_many([query])[0]
+
+    def query(self, sources) -> np.ndarray:
+        """Full levels for each source: [len(sources), n] int32 (classic
+        API; sugar over LEVELS-kind ``submit_many``)."""
         sources = np.asarray(sources, dtype=np.int64).reshape(-1)
         if sources.size == 0:
             return np.zeros((0, self.pg.n), dtype=np.int32)
-        self.stats.queries += len(sources)
-        results: dict[int, np.ndarray] = {}
-        misses: list[int] = []
-        for s in dict.fromkeys(sources.tolist()):  # dedup, keep order
-            hit = self.cache.get((self.graph_id, s))
-            if hit is not None:
-                self.stats.cache_hits += 1
-                results[s] = hit
-            else:
-                misses.append(s)
-        if self.refill:
-            for s, lev in self.run_refill(np.asarray(misses, np.int64)).items():
-                results[s] = lev
-                self.cache.put((self.graph_id, s), lev)
-        else:
-            for batch in pack_sources(misses, self.cfg.n_queries):
-                levels = self.run_batch(batch)
-                for s, lev in zip(batch.tolist(), levels):
-                    lev = np.array(lev)  # own the row: don't pin the [W, n] batch
-                    results[s] = lev
-                    self.cache.put((self.graph_id, s), lev)
-        return np.stack([results[s] for s in sources.tolist()])
+        return np.stack(self.submit_many([int(s) for s in sources]))
 
     def query_one(self, source: int) -> np.ndarray:
         return self.query([source])[0]
 
-    def warmup(self) -> None:
-        """Compile the runner for the configured scheduling mode (vertex 0
+    def warmup(self, reachability: bool = False, targets: bool = False) -> None:
+        """Compile the runners for the configured scheduling mode (vertex 0
         as a throwaway source). Refill engines only drive the single-step
         runner, so the fused while-loop compile is skipped there (it still
-        compiles lazily if ``run_batch`` is called directly)."""
-        st = self._put(M.init_multi_state(self.pg, [0], self.cfg))
-        if self.refill:
-            self._step_once(self.pgv, self.plan, st)
-            import jax.numpy as jnp
-            w = self.cfg.n_queries
-            M.reseed_lanes(st, jnp.zeros(w, bool), jnp.zeros(w, jnp.int32),
-                           jnp.zeros(w, jnp.int32), jnp.zeros(w, jnp.int32),
-                           jnp.zeros(w, bool))
-        else:
-            self._run_full(self.pgv, self.plan, st)
+        compiles lazily if ``run_batch`` is called directly).
+
+        By default only the target-free levels variant (the common serving
+        case) is compiled; ``targets=True`` adds the multi-target variant
+        and ``reachability=True`` the levels-free reachability one."""
+        cfgs = [_dc_replace(self.cfg, enable_targets=False)]
+        if targets:
+            cfgs.append(self.cfg)
+        if reachability and self.specialize_reachability:
+            cfgs.append(_dc_replace(self.cfg, track_levels=False,
+                                    enable_targets=False))
+        for cfg in cfgs:
+            run_full, step_once = self._runner_pair(cfg)
+            st = self._put(M.init_multi_state(self.pg, [0], cfg))
+            if self.refill:
+                step_once(self.pgv, self.plan, st)
+                import jax.numpy as jnp
+                desc = self._seed_descriptors([])
+                M.reseed_lanes(st, *map(jnp.asarray, desc))
+            else:
+                run_full(self.pgv, self.plan, st)

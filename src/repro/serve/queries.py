@@ -1,0 +1,116 @@
+"""Typed traversal queries compiled onto the batched msBFS substrate.
+
+The paper's engine answers one query shape -- full level arrays from a
+single source. Serving traffic wants more shapes, and knowing *what* a
+query needs lets the engine skip work (the direction-optimization insight
+of arXiv:1503.04359 applied to query semantics, plus the bookkeeping-
+cutting observation of arXiv:1104.4518): reachability needs no level
+scatter at all, a depth cap or a covered target set cuts the traversal
+short. Every kind rides the same W-lane word sweep -- kinds mix freely
+within one lane batch, including mid-flight refill generations.
+
+| kind               | per-lane params | lane early exit          | result |
+|--------------------|-----------------|--------------------------|--------|
+| ``LEVELS``         | --              | frontier empties         | ``[n] int32`` hop distances |
+| ``REACHABILITY``   | --              | frontier empties         | ``[n] bool`` reachable mask |
+| ``DISTANCE_LIMITED``| ``max_depth``  | depth cap folded into the lane_active word | ``[n] int32``, ``INF_LEVEL`` beyond the cap |
+| ``MULTI_TARGET``   | ``targets``     | retires the sweep the last target is hit | ``{target: depth}`` (``INF_LEVEL`` if unreached) |
+
+A batch that is *homogeneously* ``REACHABILITY`` additionally compiles to
+the levels-free msBFS variant (``MSBFSConfig(track_levels=False)``): pure
+lane words end to end, no level scatter, no per-edge work counters.
+
+Cache identity is the full query descriptor: ``(graph_id, kind, params,
+source)`` -- a distance-limited answer can never shadow a full-levels
+answer for the same source.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.msbfs import NO_DEPTH_CAP  # noqa: F401  (re-exported)
+from repro.core.types import INF_LEVEL
+
+# Per-query target budget: pads the jitted reseed scatter to one static
+# [W, MAX_TARGETS] shape so mid-flight refill never retraces.
+MAX_TARGETS = 8
+
+
+class QueryKind(enum.Enum):
+    LEVELS = "levels"
+    REACHABILITY = "reachability"
+    DISTANCE_LIMITED = "distance_limited"
+    MULTI_TARGET = "multi_target"
+
+
+@dataclass(frozen=True)
+class Query:
+    """One typed traversal query (hashable: doubles as its own dedup and
+    cache identity, see :meth:`key`)."""
+
+    source: int
+    kind: QueryKind = QueryKind.LEVELS
+    max_depth: int | None = None      # DISTANCE_LIMITED only
+    targets: tuple | None = None      # MULTI_TARGET only (canonicalized)
+
+    def __post_init__(self):
+        object.__setattr__(self, "source", int(self.source))
+        if self.kind is QueryKind.DISTANCE_LIMITED:
+            if self.max_depth is None or int(self.max_depth) < 0:
+                raise ValueError("DISTANCE_LIMITED needs max_depth >= 0")
+            object.__setattr__(self, "max_depth", int(self.max_depth))
+        elif self.max_depth is not None:
+            raise ValueError(f"{self.kind.name} takes no max_depth")
+        if self.kind is QueryKind.MULTI_TARGET:
+            if not self.targets:
+                raise ValueError("MULTI_TARGET needs >= 1 target")
+            tgts = tuple(sorted({int(t) for t in self.targets}))
+            if len(tgts) > MAX_TARGETS:
+                raise ValueError(
+                    f"{len(tgts)} targets > MAX_TARGETS={MAX_TARGETS}")
+            object.__setattr__(self, "targets", tgts)
+        elif self.targets is not None:
+            raise ValueError(f"{self.kind.name} takes no targets")
+
+    @property
+    def params(self) -> tuple:
+        """Canonical hashable parameter tuple (part of the cache key)."""
+        if self.kind is QueryKind.DISTANCE_LIMITED:
+            return ("max_depth", self.max_depth)
+        if self.kind is QueryKind.MULTI_TARGET:
+            return ("targets",) + self.targets
+        return ()
+
+    @property
+    def depth_cap(self):
+        """Per-lane depth cap for the msBFS state (None = unlimited)."""
+        return self.max_depth if self.kind is QueryKind.DISTANCE_LIMITED else None
+
+    def key(self, graph_id: str) -> tuple:
+        """Cache key: ``(graph_id, kind, params, source)`` -- kinds and
+        parameterizations can never collide."""
+        return (graph_id, self.kind.value, self.params, self.source)
+
+
+def as_query(q) -> Query:
+    """Coerce a raw vertex id (the classic API) into a LEVELS query."""
+    if isinstance(q, Query):
+        return q
+    return Query(source=int(q))
+
+
+def unpack_result(q: Query, row: np.ndarray, *, packed_reach: bool = False):
+    """Per-kind result from one unpacked lane column ``row`` [n].
+
+    ``packed_reach`` marks rows coming from the levels-free reachability
+    variant (already bool). Array results own their memory (the row may be
+    a view into a [k, n] batch gather).
+    """
+    if q.kind is QueryKind.REACHABILITY:
+        return np.array(row if packed_reach else row != INF_LEVEL)
+    if q.kind is QueryKind.MULTI_TARGET:
+        return {t: int(row[t]) for t in q.targets}
+    return np.array(row)   # LEVELS / DISTANCE_LIMITED (already capped)

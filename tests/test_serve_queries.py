@@ -1,0 +1,328 @@
+"""Typed traversal queries: descriptor validation, per-kind oracle parity
+in batch and refill modes (kinds mixed within one refill batch), the
+levels-free reachability specialization, per-component reuse, kind-keyed
+TTL caching, and the ops.ell_pull_multi kernel routing."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import bfs as B, engine as E, msbfs as M
+from repro.core.oracle import (bfs_levels, bfs_levels_limited, reachable_mask,
+                               target_depths)
+from repro.core.partition import partition_graph
+from repro.core.types import INF_LEVEL
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.graphs.synthetic import with_tails
+from repro.serve import (BFSServeEngine, LRUCache, MAX_TARGETS, Query,
+                         QueryKind)
+
+
+@pytest.fixture(scope="module")
+def tailed():
+    core = rmat_graph(8, seed=11)
+    g, tips = with_tails(core, n_tails=2, length=24, seed=2)
+    return core, g, tips
+
+
+def make_engine(g, *, w=4, cache=0, **kw):
+    cfg = M.MSBFSConfig(n_queries=w, max_iters=96)
+    return BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                          cache_capacity=cache, **kw)
+
+
+def mixed_stream(g, eng, core, tips):
+    """One of each kind + a delegate source + a deep straggler."""
+    srcs = pick_sources(core, 5, seed=3)
+    dvid = int(np.asarray(eng.pg.delegate_vids).reshape(-1)[0])
+    ref0 = bfs_levels(g, int(srcs[0]))
+    tg = [int(t) for t in
+          np.nonzero((ref0 > 0) & (ref0 <= 3) & (ref0 != INF_LEVEL))[0][:3]]
+    return [
+        Query(int(srcs[0])),
+        Query(int(srcs[1]), QueryKind.REACHABILITY),
+        Query(int(srcs[2]), QueryKind.DISTANCE_LIMITED, max_depth=2),
+        Query(int(srcs[0]), QueryKind.MULTI_TARGET, targets=tuple(tg)),
+        Query(int(tips[0]), QueryKind.DISTANCE_LIMITED, max_depth=5),
+        Query(dvid, QueryKind.REACHABILITY),
+        Query(dvid, QueryKind.MULTI_TARGET, targets=(int(srcs[0]), dvid)),
+        Query(int(srcs[3]), QueryKind.DISTANCE_LIMITED, max_depth=0),
+        Query(int(tips[1])),
+    ]
+
+
+def check_answer(g, q, a):
+    if q.kind is QueryKind.LEVELS:
+        np.testing.assert_array_equal(a, bfs_levels(g, q.source))
+    elif q.kind is QueryKind.REACHABILITY:
+        assert a.dtype == bool
+        np.testing.assert_array_equal(a, reachable_mask(g, q.source))
+    elif q.kind is QueryKind.DISTANCE_LIMITED:
+        np.testing.assert_array_equal(
+            a, bfs_levels_limited(g, q.source, q.max_depth))
+    else:
+        assert a == target_depths(g, q.source, q.targets)
+
+
+# ------------------------------------------------------------- descriptors
+def test_query_validation_and_canonicalization():
+    q = Query(3, QueryKind.MULTI_TARGET, targets=(9, 2, 9, 5))
+    assert q.targets == (2, 5, 9)                    # sorted, deduped
+    assert q.params == ("targets", 2, 5, 9)
+    assert Query(3, QueryKind.DISTANCE_LIMITED, max_depth=4).params == \
+        ("max_depth", 4)
+    assert Query(3).params == () == Query(3, QueryKind.REACHABILITY).params
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.DISTANCE_LIMITED)               # missing depth
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.DISTANCE_LIMITED, max_depth=-1)
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.MULTI_TARGET)                   # missing targets
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.LEVELS, max_depth=2)            # stray param
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.REACHABILITY, targets=(1,))
+    with pytest.raises(ValueError):
+        Query(3, QueryKind.MULTI_TARGET,
+              targets=tuple(range(MAX_TARGETS + 1)))
+
+
+def test_query_cache_keys_never_collide():
+    qs = [Query(7), Query(7, QueryKind.REACHABILITY),
+          Query(7, QueryKind.DISTANCE_LIMITED, max_depth=2),
+          Query(7, QueryKind.DISTANCE_LIMITED, max_depth=3),
+          Query(7, QueryKind.MULTI_TARGET, targets=(1,)),
+          Query(7, QueryKind.MULTI_TARGET, targets=(1, 2))]
+    keys = {q.key("g") for q in qs}
+    assert len(keys) == len(qs)
+    assert Query(7).key("g") != Query(8).key("g")
+    assert Query(7).key("g") != Query(7).key("g2")
+
+
+# ---------------------------------------------------- per-kind oracle parity
+@pytest.mark.parametrize("refill", [False, True])
+def test_all_kinds_match_oracle(tailed, refill):
+    """All four kinds, delegate sources/targets and a deep straggler mixed
+    in one engine pass (one refill batch when refill=True)."""
+    core, g, tips = tailed
+    eng = make_engine(g, refill=refill)
+    stream = mixed_stream(g, eng, core, tips)
+    out = eng.submit_many(stream)
+    for q, a in zip(stream, out):
+        check_answer(g, q, a)
+    assert eng.stats.kind_counts == {
+        "levels": 2, "reachability": 2, "distance_limited": 3,
+        "multi_target": 2}
+    assert eng.stats.early_stops >= 4      # caps + covered target sets
+
+
+def test_mixed_kinds_same_source_differ(tailed):
+    """The same source under different kinds gives per-kind answers (and
+    distinct cache entries)."""
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=4)[0])
+    eng = make_engine(g, cache=16)
+    full, capped, mask = eng.submit_many([
+        Query(s), Query(s, QueryKind.DISTANCE_LIMITED, max_depth=1),
+        Query(s, QueryKind.REACHABILITY)])
+    np.testing.assert_array_equal(full, bfs_levels(g, s))
+    np.testing.assert_array_equal(capped, bfs_levels_limited(g, s, 1))
+    np.testing.assert_array_equal(mask, reachable_mask(g, s))
+    assert (capped == INF_LEVEL).sum() > (full == INF_LEVEL).sum()
+    assert len(eng.cache) == 3             # three distinct keys
+    hits0 = eng.stats.cache_hits
+    eng.submit_many([Query(s, QueryKind.DISTANCE_LIMITED, max_depth=1)])
+    assert eng.stats.cache_hits == hits0 + 1
+
+
+def test_distance_limited_cuts_sweeps(tailed):
+    """A depth cap on a deep tail source retires the lane early: far fewer
+    sweeps than the uncapped traversal of the same source."""
+    _, g, tips = tailed
+    tip = int(tips[0])
+    eng_full = make_engine(g, refill=True)
+    eng_full.submit(Query(tip))
+    eng_cap = make_engine(g, refill=True)
+    out = eng_cap.submit(Query(tip, QueryKind.DISTANCE_LIMITED, max_depth=2))
+    np.testing.assert_array_equal(out, bfs_levels_limited(g, tip, 2))
+    assert eng_cap.stats.sweeps < eng_full.stats.sweeps / 3
+    assert eng_cap.stats.early_stops == 1
+
+
+def test_multi_target_early_exit_and_unreachable(tailed):
+    core, g, tips = tailed
+    s = int(pick_sources(core, 1, seed=6)[0])
+    ref = bfs_levels(g, s)
+    near = [int(t) for t in np.nonzero((ref > 0) & (ref <= 2))[0][:2]]
+    unreached = [int(v) for v in np.nonzero(ref == INF_LEVEL)[0][:1]]
+    eng = make_engine(g, refill=True)
+    got = eng.submit(Query(s, QueryKind.MULTI_TARGET, targets=tuple(near)))
+    assert got == target_depths(g, s, near)
+    assert eng.stats.early_stops == 1
+    if unreached:   # unreachable target: lane converges naturally, depth INF
+        got = eng.submit(Query(s, QueryKind.MULTI_TARGET,
+                               targets=tuple(near + unreached)))
+        assert got == target_depths(g, s, near + unreached)
+        assert got[unreached[0]] == INF_LEVEL
+
+
+@pytest.mark.parametrize("refill", [False, True])
+def test_out_of_range_targets_rejected(tailed, refill):
+    """Both scheduling paths refuse out-of-range targets up front (the
+    refill path seeds targets via reseed scatter, so a late check would
+    silently mark the wrong vertex)."""
+    _, g, _ = tailed
+    eng = make_engine(g, refill=refill)
+    for bad in (-3, g.n):
+        with pytest.raises(ValueError):
+            eng.submit(Query(0, QueryKind.MULTI_TARGET, targets=(bad,)))
+    with pytest.raises(ValueError):
+        eng.submit(Query(g.n))
+
+
+def test_results_are_mutation_safe(tailed):
+    """Mutating a returned result never corrupts the cache or duplicate
+    answers in the same call."""
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=13)[0])
+    eng = make_engine(g, cache=8)
+    a, b = eng.submit_many([Query(s), Query(s)])
+    a[:] = -1
+    np.testing.assert_array_equal(b, bfs_levels(g, s))
+    np.testing.assert_array_equal(eng.submit(Query(s)), bfs_levels(g, s))
+    tq = Query(s, QueryKind.MULTI_TARGET, targets=(s,))
+    d = eng.submit(tq)
+    d[s] = -1
+    assert eng.submit(tq) == {s: 0}
+
+
+# ------------------------------------------------- reachability fast path
+@pytest.mark.parametrize("refill", [False, True])
+def test_reachability_levels_free_specialization(tailed, refill):
+    """A homogeneous REACHABILITY batch runs on the track_levels=False
+    variant and matches both the oracle and the unspecialized engine."""
+    core, g, tips = tailed
+    srcs = [int(s) for s in pick_sources(core, 5, seed=7)] + [int(tips[0])]
+    qs = [Query(s, QueryKind.REACHABILITY) for s in srcs]
+    eng = make_engine(g, refill=refill, reuse_components=False)
+    out = eng.submit_many(qs)
+    assert eng.stats.reach_fast_batches >= 1
+    eng_plain = make_engine(g, refill=refill, reuse_components=False,
+                            specialize_reachability=False)
+    out_plain = eng_plain.submit_many(qs)
+    assert eng_plain.stats.reach_fast_batches == 0
+    for q, a, b in zip(qs, out, out_plain):
+        np.testing.assert_array_equal(a, reachable_mask(g, q.source))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_component_reuse_across_calls(tailed):
+    """Reachability answers are reused per connected component across
+    submissions; levels queries never are."""
+    core, g, tips = tailed
+    srcs = [int(s) for s in pick_sources(core, 4, seed=8)] + [int(tips[0])]
+    eng = make_engine(g, refill=True)         # cache off: reuse is separate
+    first = eng.submit(Query(srcs[0], QueryKind.REACHABILITY))
+    sweeps0 = eng.stats.sweeps
+    rest = eng.submit_many(
+        [Query(s, QueryKind.REACHABILITY) for s in srcs[1:]])
+    for s, a in zip(srcs[1:], rest):
+        np.testing.assert_array_equal(a, reachable_mask(g, s))
+    # every later same-component source is a component hit, no new sweeps
+    same_comp = [s for s in srcs[1:] if first[s]]
+    assert eng.stats.component_hits == len(same_comp)
+    if len(same_comp) == len(srcs) - 1:
+        assert eng.stats.sweeps == sweeps0
+    # levels queries on the same sources still traverse
+    eng.submit_many([Query(s) for s in srcs[1:]])
+    assert eng.stats.sweeps > sweeps0
+
+
+def test_component_reuse_cuts_active_stragglers(tailed):
+    """Mid-session reuse: when a shallow lane's component is mapped, a deep
+    same-component straggler lane is cut short -- fewer total sweeps than
+    with reuse disabled."""
+    core, g, tips = tailed
+    srcs = [int(tips[0]), int(tips[1])] + \
+        [int(s) for s in pick_sources(core, 4, seed=9)]
+    qs = [Query(s, QueryKind.REACHABILITY) for s in srcs]
+    eng_off = make_engine(g, refill=True, reuse_components=False)
+    eng_off.submit_many(qs)
+    eng_on = make_engine(g, refill=True)
+    out = eng_on.submit_many(qs)
+    for q, a in zip(qs, out):
+        np.testing.assert_array_equal(a, reachable_mask(g, q.source))
+    assert eng_on.stats.component_hits >= 1
+    assert eng_on.stats.sweeps < eng_off.stats.sweeps
+
+
+# ----------------------------------------------------------- TTL caching
+def test_cache_ttl_expires_entries():
+    now = [0.0]
+    c = LRUCache(8, ttl=10.0, clock=lambda: now[0])
+    c.put("a", 1)
+    c.put("b", 2, ttl=None)        # pinned: never expires
+    assert c.get("a") == 1 and "a" in c
+    now[0] = 10.0
+    assert c.get("a") is None and c.expired == 1
+    assert "a" not in c
+    assert c.get("b") == 2         # ttl=None override survives
+    c.put("c", 3, ttl=5.0)
+    now[0] = 14.0
+    assert c.get("c") == 3
+    now[0] = 15.0
+    assert c.get("c") is None and c.expired == 2
+
+
+def test_engine_cache_ttl(tailed):
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=10)[0])
+    eng = make_engine(g, cache=8)
+    eng.cache.ttl = 10.0
+    now = [0.0]
+    eng.cache._clock = lambda: now[0]
+    eng.submit(Query(s))
+    batches0 = eng.stats.batches
+    eng.submit(Query(s))
+    assert eng.stats.batches == batches0          # fresh: cache hit
+    now[0] = 11.0
+    out = eng.submit(Query(s))
+    assert eng.stats.batches == batches0 + 1      # expired: re-traversed
+    assert eng.cache.expired == 1
+    np.testing.assert_array_equal(out, bfs_levels(g, s))
+
+
+# ------------------------------------------------------- kernel_pull routing
+def test_kernel_pull_dispatch_parity(tailed):
+    """Routing the msBFS pull through ops.ell_pull_multi (ref dispatch)
+    changes no answer on a full mixed-kind engine pass."""
+    core, g, tips = tailed
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=96, kernel_pull="ref")
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, refill=True)
+    stream = mixed_stream(g, eng, core, tips)
+    for q, a in zip(stream, eng.submit_many(stream)):
+        check_answer(g, q, a)
+
+
+def test_kernel_pull_state_parity(tailed):
+    """Native chunked pull vs the ops dispatch: bit-identical level state
+    on a forced-backward traversal (pull actually exercised)."""
+    core, g, _ = tailed
+    pg = partition_graph(g, th=32, p_rank=2, p_gpu=2)
+    plan = E.build_exchange_plan(pg)
+    pgv = B.device_view(pg)
+    srcs = pick_sources(core, 4, seed=12)
+    base = M.MSBFSConfig(n_queries=4, max_iters=96,
+                         factor0=(0.0, 0.0, 0.0),    # any frontier work
+                         factor1=(0.0, 0.0, 0.0))    # -> switch to pull
+    outs = {}
+    for kernel in (None, "ref"):
+        cfg = dataclasses.replace(base, kernel_pull=kernel)
+        out = M.run_msbfs_emulated(pgv, plan,
+                                   M.init_multi_state(pg, srcs, cfg), cfg)
+        outs[kernel] = M.gather_levels_multi(pg, out)
+        assert int(np.asarray(out.work_bwd).sum()) > 0   # pull ran
+    np.testing.assert_array_equal(outs[None], outs["ref"])
+    for q, s in enumerate(srcs):
+        np.testing.assert_array_equal(outs["ref"][q], bfs_levels(g, int(s)))

@@ -148,7 +148,8 @@ def test_lru_eviction_order_is_retirement_order(tailed):
     eng.query(sources)
     assert len(eng.cache) == 3
     assert eng.cache.evictions == 3
-    cached = [k[1] for k in eng.cache._data]         # insertion == retirement order
+    cached = [k[-1] for k in eng.cache._data]        # insertion == retirement order
+                                                     # (key = (graph, kind, params, source))
     sweeps0 = eng.stats.sweeps
     hits0 = eng.stats.cache_hits
     again = eng.query(cached)

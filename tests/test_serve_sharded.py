@@ -17,11 +17,12 @@ import numpy as np
 import pytest
 
 from repro.core import msbfs as M
-from repro.core.oracle import bfs_levels
+from repro.core.oracle import (bfs_levels, bfs_levels_limited, reachable_mask,
+                               target_depths)
 from repro.graphs.rmat import pick_sources, rmat_graph
 from repro.graphs.synthetic import with_tails
 from repro.launch.mesh import make_test_mesh
-from repro.serve import BFSServeEngine
+from repro.serve import BFSServeEngine, Query, QueryKind
 
 needs4 = pytest.mark.skipif(
     len(jax.devices()) < 4,
@@ -39,6 +40,33 @@ def _check_engine(eng, g, stream):
     levels = eng.query(stream)
     for s, lev in zip(stream, levels):
         np.testing.assert_array_equal(lev, bfs_levels(g, int(s)))
+
+
+def _mixed_queries(eng, g, stream):
+    """All four kinds (delegate source included) over the stream sources."""
+    dvid = int(np.asarray(eng.pg.delegate_vids).reshape(-1)[0])
+    srcs = [int(s) for s in stream]
+    tg = tuple(srcs[:2])
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=2),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tg)]
+    return [kinds[i % 4](s) for i, s in enumerate(srcs)] + \
+        [Query(dvid, QueryKind.REACHABILITY)]
+
+
+def _check_mixed(eng, g, stream):
+    qs = _mixed_queries(eng, g, stream)
+    for q, a in zip(qs, eng.submit_many(qs)):
+        if q.kind is QueryKind.LEVELS:
+            np.testing.assert_array_equal(a, bfs_levels(g, q.source))
+        elif q.kind is QueryKind.REACHABILITY:
+            np.testing.assert_array_equal(a, reachable_mask(g, q.source))
+        elif q.kind is QueryKind.DISTANCE_LIMITED:
+            np.testing.assert_array_equal(
+                a, bfs_levels_limited(g, q.source, q.max_depth))
+        else:
+            assert a == target_depths(g, q.source, q.targets)
 
 
 def test_one_device_mesh_degenerates_to_emulated():
@@ -89,6 +117,38 @@ def test_sharded_refill_parity_multidevice():
     assert eng.stats.refills >= len(stream) - 4
 
 
+@needs4
+@pytest.mark.parametrize("refill", [False, True])
+def test_sharded_mixed_kind_parity_multidevice(refill):
+    """All four typed query kinds mixed in one stream (one refill batch
+    when refill=True) on a real 4-device shard_map mesh: oracle-exact."""
+    g, stream = _stream_and_graph()
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=refill)
+    assert eng.sharded
+    _check_mixed(eng, g, stream)
+    assert eng.stats.early_stops > 0
+
+
+@needs4
+def test_sharded_reachability_fast_path_multidevice():
+    """The levels-free reachability variant compiles and stays oracle-exact
+    under shard_map on 4 devices."""
+    g, stream = _stream_and_graph()
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=80)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=True,
+                         reuse_components=False)
+    assert eng.sharded
+    qs = [Query(int(s), QueryKind.REACHABILITY) for s in stream]
+    for q, a in zip(qs, eng.submit_many(qs)):
+        np.testing.assert_array_equal(a, reachable_mask(g, q.source))
+    assert eng.stats.reach_fast_batches >= 1
+
+
 SUBPROCESS_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -110,6 +170,8 @@ eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
 assert eng.sharded
 T._check_engine(eng, g, stream)
 assert eng.stats.refills >= len(stream) - 4
+T._check_mixed(eng, g, stream)
+assert eng.stats.early_stops > 0
 print("sharded refill parity OK")
 """
 
