@@ -44,6 +44,9 @@ def run_bfs_timed(g, pg, sources, cfg: B.BFSConfig, repeats: int = 1):
             "nn_sent": int(np.asarray(out.nn_sent).sum()),
             "overflow": int(np.asarray(out.nn_overflow).sum()),
             "delegate_rounds": int(np.asarray(out.delegate_round)[0].sum()),
+            "wire_delegate": int(np.asarray(out.wire_delegate).sum()),
+            "wire_nn": int(np.asarray(out.wire_nn).sum()),
+            "nn_sparse_sweeps": int(np.asarray(out.nn_sparse)[0].sum()),
             "levels": levels,
         })
     return results

@@ -254,6 +254,13 @@ def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
         "reach_fast_batches": eng_re.stats.reach_fast_batches,
         "mixed_kind_counts": eng_mx.stats.kind_counts,
         "mixed_early_stops": eng_mx.stats.early_stops,
+        "mixed_early_stops_by_kind": eng_mx.stats.early_stops_by_kind,
+        # comm-layer accounting for the mixed run (wire bytes per the
+        # core/comm byte convention; nn_overflow must be 0 for validity)
+        "mixed_wire_delegate_bytes": eng_mx.stats.wire_delegate_bytes,
+        "mixed_wire_nn_bytes": eng_mx.stats.wire_nn_bytes,
+        "mixed_nn_sparse_sweeps": eng_mx.stats.nn_sparse_sweeps,
+        "mixed_nn_overflow": eng_mx.stats.nn_overflow,
     }
     with open(out_json, "w") as f:
         json.dump(summary, f, indent=2)

@@ -9,10 +9,16 @@ answers against the numpy oracle.
 ``--mixed`` serves a typed mixed-kind stream instead: the same skewed
 sources cycled through all four query kinds (full levels, reachability,
 distance-limited, multi-target) via ``BFSServeEngine.submit_many``, with
-per-kind oracle spot-checks and the typed-query counters (early exits,
-component reuse, per-kind tallies) printed.
+per-kind oracle spot-checks and the per-kind ``ServeStats`` printed
+(kind tallies with early exits, component reuse, and the comm layer's
+wire-volume counters -- delegate/nn bytes, sparse-format sweeps, and the
+overflow counter that must stay 0).
 
-    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] [--refill] [--mixed]
+``--delegate`` / ``--adaptive-nn`` swap the communication strategies
+(``repro.core.comm.CommConfig``) the sweeps run under.
+
+    PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] \
+        [--refill] [--mixed] [--delegate ring] [--adaptive-nn]
 """
 import argparse
 import time
@@ -72,9 +78,19 @@ def serve_mixed(eng, g, stream, args):
     st = eng.stats
     print(f"served {len(answers)} typed requests in {dt:.2f}s "
           f"({len(answers) / dt:.0f} req/s)")
-    print(f"kinds={st.kind_counts} early_stops={st.early_stops} "
+    # per-kind ServeStats: every submitted kind with its traffic share and
+    # how many of its lanes retired through a latched early exit
+    for kind in sorted(st.kind_counts):
+        print(f"  kind={kind:17s} queries={st.kind_counts[kind]:4d} "
+              f"early_stops={st.early_stops_by_kind.get(kind, 0)}")
+    print(f"early_stops={st.early_stops} "
           f"component_hits={st.component_hits} "
           f"reach_fast_batches={st.reach_fast_batches}")
+    print(f"wire: delegate={st.wire_delegate_bytes}B "
+          f"nn={st.wire_nn_bytes}B total={st.wire_bytes_total}B "
+          f"sparse_nn_sweeps={st.nn_sparse_sweeps} "
+          f"nn_overflow={st.nn_overflow}")
+    assert st.nn_overflow == 0, "nn exchange dropped slots (grow sparse_cap)"
     print(f"msbfs batches={st.batches} "
           f"cache_hit_rate={st.cache_hits / max(st.queries, 1):.0%}"
           + (f" refill sweeps={st.sweeps} reseeds={st.refills}"
@@ -107,12 +123,22 @@ def main():
                     help="serve through the mid-flight lane-refill pipeline")
     ap.add_argument("--mixed", action="store_true",
                     help="serve a typed mixed-kind query stream")
+    ap.add_argument("--delegate", default="auto",
+                    choices=["auto", "allgather", "ring", "hier"],
+                    help="delegate combine strategy (core.comm)")
+    ap.add_argument("--adaptive-nn", action="store_true",
+                    help="frontier-adaptive sparse/dense nn wire format")
     args = ap.parse_args()
+
+    from repro.core.comm import CommConfig
 
     g = rmat_graph(args.scale, seed=0)
     print(f"graph n={g.n:,} m={g.m:,}")
     eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
-                         refill=args.refill)
+                         refill=args.refill,
+                         comm=CommConfig(
+                             delegate=args.delegate,
+                             nn="adaptive" if args.adaptive_nn else "dense"))
     t0 = time.perf_counter()
     # a mixed stream is never homogeneously-reachability, so only the
     # multi-target variant needs the extra compile

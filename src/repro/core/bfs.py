@@ -61,6 +61,11 @@ class BFSConfig:
     # forward->backward, factor1 switches back. Order: (dd, dn, nd).
     factor0: tuple = (0.5, 0.05, 1e-7)
     factor1: tuple = (1e-3, 1e-4, 1e-9)
+    # communication strategies (repro.core.comm.CommConfig): delegate
+    # combine (auto = the seed's fused pmin/pmax, or allgather / ring /
+    # hierarchical) and the nn wire format of the static exchange (dense
+    # slot bitmask / sparse id list / frontier-adaptive switch)
+    comm: comm.CommConfig = comm.CommConfig()
 
 
 @dataclass
@@ -76,6 +81,11 @@ class BFSState:
     nn_sent: Any      # normal vertices sent (post-binning)
     nn_overflow: Any  # dropped by capacity (must be 0 for a valid run)
     delegate_round: Any  # 1 if the delegate reduction carried updates
+    # wire-volume accounting (per-device bytes per sweep; comm/base.py
+    # byte convention -- summing partition rows gives cluster traffic):
+    wire_delegate: Any
+    wire_nn: Any
+    nn_sparse: Any    # 1 if the static exchange shipped the sparse format
 
 
 jax.tree_util.register_dataclass(
@@ -83,6 +93,7 @@ jax.tree_util.register_dataclass(
     data_fields=(
         "level_n", "level_d", "backward", "it", "done",
         "work_fwd", "work_bwd", "nn_sent", "nn_overflow", "delegate_round",
+        "wire_delegate", "wire_nn", "nn_sparse",
     ),
     meta_fields=(),
 )
@@ -121,6 +132,7 @@ def init_state(pg: PartitionedGraph, source: int, cfg: BFSConfig) -> BFSState:
         done=np.zeros((p,), dtype=bool),
         work_fwd=z(np.int32), work_bwd=z(np.int32), nn_sent=z(np.int32),
         nn_overflow=z(np.int32), delegate_round=z(np.int32),
+        wire_delegate=z(np.int32), wire_nn=z(np.int32), nn_sparse=z(np.int32),
     )
 
 
@@ -201,6 +213,7 @@ def bfs_step(
     p, nl = pgv.p, pgv.n_local
     d = state.level_d.shape[-1]
     it = state.it
+    cplan = comm.plan_for(cfg.comm, axis_names)
 
     unvisited_n = (state.level_n == INF_LEVEL) & pgv.normal_valid
     unvisited_d = state.level_d == INF_LEVEL
@@ -262,26 +275,18 @@ def bfs_step(
     act_nn = _push_active(pgv.nn, frontier_n)
     if cfg.static_exchange:
         # SPerf: 1 bit per unique (owner, local) slot on the static plan --
-        # no runtime sort, uniquification for free, fixed cap_total/8 bytes
-        cw = plan.cap_peer // 32
+        # no runtime sort, uniquification for free, fixed cap_peer/8 bytes
+        # (or the sparse / frontier-adaptive slot-id format per
+        # cfg.comm.nn, chosen inside the comm layer)
         sa = jnp.zeros((plan.cap_total + 1,), jnp.bool_).at[plan.seg_ids].max(
             act_nn[plan.perm])[: plan.cap_total]
         rows = jnp.minimum(plan.seg_owner, p - 1)
         ok = plan.seg_owner < p
         dense = jnp.zeros((p, plan.cap_peer), jnp.bool_).at[rows, plan.seg_pos].max(
             sa & ok, mode="drop")
-        shifts = jnp.arange(32, dtype=jnp.uint32)
-        words = jnp.sum(
-            dense.reshape(p, cw, 32).astype(jnp.uint32) << shifts[None, None, :], axis=-1)
-        rwords = lax.all_to_all(words, axis_names, split_axis=0, concat_axis=0, tiled=True)
-        rbits = ((rwords[..., None] >> shifts[None, None, :]) & jnp.uint32(1)) > 0
-        rbits = rbits.reshape(p, plan.cap_peer)
-        locs = plan.recv_local
-        recv_mask = jnp.zeros((nl,), dtype=jnp.bool_).at[
-            jnp.clip(locs.reshape(-1), 0, nl - 1)
-        ].max((rbits & (locs >= 0)).reshape(-1), mode="drop")
+        recv_mask, nn_bytes, nn_sparse, ovf = comm.nn_exchange_bits(
+            cplan, dense, plan.recv_local, nl)
         sent = jnp.sum(sa.astype(jnp.int32))
-        ovf = jnp.int32(0)
     else:
         if cfg.cap_nn > 0:
             cap = cfg.cap_nn
@@ -297,19 +302,23 @@ def bfs_step(
         recv_mask = jnp.zeros((nl,), dtype=jnp.bool_).at[
             jnp.clip(recv_flat, 0, nl - 1)
         ].max(recv_flat >= 0, mode="drop")
+        nn_bytes = jnp.int32(cplan.a2a_bytes(cap * 4))   # [p, cap] int32 ids
+        nn_sparse = jnp.int32(0)
 
-    # ---- delegate global reduction (the paper's bitmask all-reduce) -------
+    # ---- delegate global reduction (the paper's bitmask all-reduce, via
+    # the pluggable combine strategies of cfg.comm.delegate) ----------------
     cand_d = cand_dd | cand_nd
     if cfg.delegate_u8:
         # 1 B/delegate OR-mask; every partition sets level = it+1 locally.
-        # (pmax over {0,1} == the paper's bitwise OR of visited masks.)
-        delta = lax.pmax((cand_d & unvisited_d).astype(jnp.uint8), axis_names)
+        # (max over {0,1} == the paper's bitwise OR of visited masks.)
+        delta, d_bytes = comm.delegate_combine(
+            cplan, (cand_d & unvisited_d).astype(jnp.uint8), "max")
         newly = (delta > 0) & unvisited_d
         new_level_d = jnp.where(newly, it + 1, state.level_d)
         new_d_any = jnp.any(newly)
     else:
         cand_levels = jnp.where(cand_d & unvisited_d, it + 1, INF_LEVEL).astype(jnp.int32)
-        reduced = comm.delegate_allreduce_min(cand_levels, axis_names)
+        reduced, d_bytes = comm.delegate_combine(cplan, cand_levels, "min")
         new_level_d = jnp.minimum(state.level_d, reduced)
         new_d_any = jnp.any(new_level_d < state.level_d)
 
@@ -342,6 +351,9 @@ def bfs_step(
         nn_sent=state.nn_sent.at[slot].set(sent),
         nn_overflow=state.nn_overflow.at[slot].set(ovf),
         delegate_round=state.delegate_round.at[slot].set(new_d_any.astype(jnp.int32)),
+        wire_delegate=state.wire_delegate.at[slot].add(jnp.int32(d_bytes)),
+        wire_nn=state.wire_nn.at[slot].add(nn_bytes),
+        nn_sparse=state.nn_sparse.at[slot].add(nn_sparse),
     )
 
 

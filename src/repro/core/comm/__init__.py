@@ -1,0 +1,71 @@
+"""Communication subsystem (paper Section V), in JAX collectives.
+
+Two classes of traffic, exactly as the paper prescribes:
+
+* **delegates** -- visited status / levels combined with a *global
+  reduction* (the paper's hierarchical MPI_(I)AllReduce of bitmasks);
+* **normal vertices** -- newly visited vertices of cutting nn edges
+  exchanged *point-to-point* (MPI_Isend/Irecv, adapted to static-shape
+  ``lax.all_to_all`` buffers).
+
+What the seed spelled inline per traversal path is a *pluggable layer*
+here, split by concern:
+
+* :mod:`.base`     -- :class:`CommConfig` (strategy selection) and
+  :class:`CommPlan` (strategies bound to concrete partition axes +
+  the static wire-byte formulas); :func:`plan_for` builds the plan at
+  trace time.
+* :mod:`.wire`     -- the lane-word packing (W query bits per vertex per
+  uint32 word): the wire format itself.
+* :mod:`.reduce`   -- delegate combine strategies: native fused, all-
+  gather + local fold (optionally through the ``mask_reduce`` lane-word
+  kernel), ring allreduce via ``ppermute`` (O(1)-in-p volume), two-level
+  hierarchical over multi-axis meshes.
+* :mod:`.exchange` -- nn exchange formats: dense slot bitmasks / lane
+  words, sparse capped id lists, and the frontier-adaptive per-sweep
+  switch between them; plus the legacy runtime-binned and payload
+  exchanges.
+
+Every function runs identically under ``jax.vmap(axis_name=...)``
+(single-device emulation) and ``jax.shard_map`` (real meshes); strategy
+equivalence and wire accounting are pinned by
+``tests/test_comm_strategies.py``. See README.md in this package for the
+per-strategy wire-format table.
+"""
+from .base import (
+    DELEGATE_STRATEGIES,
+    NN_FORMATS,
+    AxisNames,
+    CommConfig,
+    CommPlan,
+    as_axes,
+    axis_size,
+    plan_for,
+)
+from .exchange import (
+    bin_by_owner,
+    exchange_normal,
+    exchange_payload,
+    exchange_words,
+    nn_exchange_bits,
+    nn_exchange_words,
+)
+from .reduce import (
+    any_reduce,
+    delegate_allreduce_min,
+    delegate_allreduce_or,
+    delegate_allreduce_sum,
+    delegate_combine,
+    lane_any_reduce,
+)
+from .wire import n_words, pack_lanes, unpack_lanes
+
+__all__ = [
+    "DELEGATE_STRATEGIES", "NN_FORMATS", "AxisNames", "CommConfig",
+    "CommPlan", "any_reduce", "as_axes", "axis_size", "bin_by_owner",
+    "delegate_allreduce_min", "delegate_allreduce_or",
+    "delegate_allreduce_sum", "delegate_combine", "exchange_normal",
+    "exchange_payload", "exchange_words", "lane_any_reduce", "n_words",
+    "nn_exchange_bits", "nn_exchange_words", "pack_lanes", "plan_for",
+    "unpack_lanes",
+]

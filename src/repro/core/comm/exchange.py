@@ -1,0 +1,242 @@
+"""Point-to-point frontier exchange (paper Section V-B), with pluggable
+wire formats.
+
+Normal-vertex updates travel peer-to-peer. Three formats over the static
+(owner, local) slot layout of the :class:`~repro.core.engine.ExchangePlan`:
+
+* **dense** -- one bit per (slot, query): lane words for the batched path
+  (:func:`nn_exchange_words`), a slot bitmask for the single-source path
+  (:func:`nn_exchange_bits`). Fixed volume per sweep, optimal for big
+  frontiers.
+* **sparse** -- only *active* slots ship, as (slot id, lane word) pairs /
+  bare slot ids, capped per peer; active slots beyond the cap are dropped
+  and **counted** in the returned overflow (exactly the
+  :func:`bin_by_owner` contract: a valid run requires overflow == 0).
+* **adaptive** -- per sweep, sparse when every peer's active-slot count
+  fits the cap and dense otherwise: the communication analog of
+  direction optimization, decided from the same frontier counters the
+  sweep computes anyway and agreed globally through one scalar reduce so
+  every partition takes the same ``lax.cond`` branch (a diverging branch
+  would deadlock the collective on a real mesh).
+
+The legacy runtime-sorted binned exchange (:func:`bin_by_owner` +
+:func:`exchange_normal`) and the payload exchange of the generalized
+engine are kept here unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .base import AxisNames, CommPlan
+from .wire import n_words, pack_lanes, unpack_lanes
+
+
+def bin_by_owner(
+    owner: jnp.ndarray,
+    local: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    p: int,
+    cap: int,
+    uniquify: bool = False,
+):
+    """Group active destination ids into per-owner-partition bins.
+
+    ``owner``/``local`` are the pre-split int32 destination coordinates
+    (Algorithm 1's layout, computed host-side at partition time -- TPUs have
+    no 64-bit lanes, DESIGN.md Section 3). Returns (buffer [p, cap] int32 of
+    local ids, -1 padded; overflow count; sent count)."""
+    local = local.astype(jnp.int32)
+    key = jnp.where(active, owner.astype(jnp.int32), jnp.int32(p))
+
+    order = jnp.lexsort((local, key))
+    sk = key[order]
+    sl = local[order]
+
+    if uniquify:
+        # drop duplicate (owner, local) pairs after the sort
+        dup = (sk[1:] == sk[:-1]) & (sl[1:] == sl[:-1])
+        keep = jnp.concatenate([jnp.ones((1,), bool), ~dup])
+        sk = jnp.where(keep, sk, jnp.int32(p))
+        # re-sort the dropped entries to the end, preserving run order
+        order2 = jnp.lexsort((sl, sk))
+        sk = sk[order2]
+        sl = sl[order2]
+
+    # position of each element within its owner run
+    run_start = jnp.searchsorted(sk, sk, side="left")
+    pos = jnp.arange(sk.shape[0], dtype=jnp.int32) - run_start.astype(jnp.int32)
+    is_real = sk < p
+    in_cap = is_real & (pos < cap)
+    sent = jnp.sum(in_cap.astype(jnp.int32))
+    overflow = jnp.sum(is_real.astype(jnp.int32)) - sent
+
+    buf = jnp.full((p, cap), -1, dtype=jnp.int32)
+    rows = jnp.where(in_cap, sk, 0)
+    cols = jnp.where(in_cap, pos, 0)
+    vals = jnp.where(in_cap, sl, -1)
+    buf = buf.at[rows, cols].max(vals, mode="drop")
+    return buf, overflow, sent
+
+
+def exchange_normal(
+    buf: jnp.ndarray, axis_names: AxisNames
+) -> jnp.ndarray:
+    """All-to-all of the binned buffers: [p, cap] -> [p, cap] received."""
+    return lax.all_to_all(buf, axis_names, split_axis=0, concat_axis=0, tiled=True)
+
+
+def exchange_payload(
+    buf_ids: jnp.ndarray, buf_vals: jnp.ndarray, axis_names: AxisNames
+):
+    """All-to-all of (ids, payload) pairs, for the generalized engine
+    (feature vectors instead of 1-bit visited status, paper Section VI-D)."""
+    ids = lax.all_to_all(buf_ids, axis_names, split_axis=0, concat_axis=0, tiled=True)
+    vals = lax.all_to_all(buf_vals, axis_names, split_axis=0, concat_axis=0, tiled=True)
+    return ids, vals
+
+
+def exchange_words(words: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """All-to-all of packed lane words: [p, cap, n_words] -> received.
+
+    The static-slot analog of :func:`exchange_normal` for batched queries:
+    each (owner, local) slot of the ExchangePlan carries one uint32 word per
+    32 queries, so total a2a volume is ``cap_total * n_words * 4`` bytes --
+    ~1 bit per query per slot, independent of how many queries are active.
+    """
+    return lax.all_to_all(words, axis_names, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _a2a(x, axes):
+    return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _scatter_recv_words(rlanes, loc, nl):
+    """Scatter received lane words onto local normal ids (-1 loc = dead)."""
+    w = rlanes.shape[-1]
+    return jnp.zeros((nl, w), dtype=jnp.bool_).at[
+        jnp.clip(loc.reshape(-1), 0, nl - 1)
+    ].max((rlanes & (loc >= 0)[..., None]).reshape(-1, w), mode="drop")
+
+
+def _compact_active(act: jnp.ndarray, cap_sparse: int):
+    """Per peer row, the first ``cap_sparse`` active slot positions.
+
+    Returns (ids [p, S] int32 with -1 padding, valid [p, S] bool,
+    overflow scalar int32 = active slots beyond the cap, summed)."""
+    cnt = jnp.sum(act.astype(jnp.int32), axis=-1)               # [p]
+    order = jnp.argsort(jnp.where(act, 0, 1), axis=-1).astype(jnp.int32)
+    take = order[:, :cap_sparse]                                # [p, S]
+    k = jnp.arange(cap_sparse, dtype=jnp.int32)
+    valid = k[None, :] < jnp.minimum(cnt, cap_sparse)[:, None]
+    ids = jnp.where(valid, take, -1)
+    overflow = jnp.sum(jnp.maximum(cnt - cap_sparse, 0))
+    return ids, valid, overflow
+
+
+def nn_exchange_words(plan: CommPlan, dense: jnp.ndarray,
+                      recv_local: jnp.ndarray, nl: int):
+    """Frontier-adaptive lane-word nn exchange.
+
+    ``dense [p, cap_peer, W] bool`` is the sender-side slot occupancy
+    (slot s of row j = "slot s of peer j's bin carries these lanes");
+    ``recv_local [p, cap_peer] int32`` the receiver-side slot -> local id
+    table of the ExchangePlan. Returns ``(recv [nl, W] bool, wire_bytes
+    int32, sparse_used int32 0/1, overflow int32)``. Format selection per
+    :class:`~.base.CommConfig.nn` (see module docstring).
+    """
+    p, cap, w = dense.shape
+    nw = n_words(w)
+    axes = plan.axes if len(plan.axes) > 1 else plan.axes[0]
+    dense_bytes = plan.nn_dense_words_bytes(cap, nw)
+    cap_sparse = plan.sparse_cap_words(cap)
+    sparse_bytes = plan.nn_sparse_words_bytes(cap_sparse, nw)
+
+    def dense_path(dense):
+        rwords = _a2a(pack_lanes(dense), axes)
+        recv = _scatter_recv_words(unpack_lanes(rwords, w), recv_local, nl)
+        return recv, jnp.int32(dense_bytes), jnp.int32(0)
+
+    mode = plan.cfg.nn
+    if mode == "adaptive" and sparse_bytes >= dense_bytes:
+        mode = "dense"                      # sparse can never win: skip it
+    if mode == "dense":
+        recv, bts, ovf = dense_path(dense)
+        return recv, bts, jnp.int32(0), ovf
+
+    act = jnp.any(dense, axis=-1)                               # [p, cap]
+
+    def sparse_path(dense):
+        ids, valid, overflow = _compact_active(act, cap_sparse)
+        sw = pack_lanes(jnp.take_along_axis(
+            dense, jnp.maximum(ids, 0)[..., None], axis=1) & valid[..., None])
+        r_ids = _a2a(ids, axes)                                 # [p, S]
+        rlanes = unpack_lanes(_a2a(sw, axes), w)                # [p, S, W]
+        loc = jnp.take_along_axis(recv_local, jnp.clip(r_ids, 0, cap - 1),
+                                  axis=1)
+        loc = jnp.where(r_ids >= 0, loc, -1)
+        return (_scatter_recv_words(rlanes, loc, nl),
+                jnp.int32(sparse_bytes), overflow.astype(jnp.int32))
+
+    if mode == "sparse":
+        recv, bts, ovf = sparse_path(dense)
+        return recv, bts, jnp.int32(1), ovf
+
+    # adaptive: sparse iff globally feasible (no partition would drop);
+    # one scalar max-reduce makes the branch choice identical everywhere
+    local_max = jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))
+    feasible = lax.pmax(local_max, axes) <= cap_sparse
+    recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, dense)
+    return recv, bts, feasible.astype(jnp.int32), ovf
+
+
+def nn_exchange_bits(plan: CommPlan, active: jnp.ndarray,
+                     recv_local: jnp.ndarray, nl: int):
+    """Frontier-adaptive single-bit nn exchange (the single-source path).
+
+    ``active [p, cap_peer] bool`` marks occupied slots; dense ships the
+    slot bitmask (``cap_peer / 8`` bytes per peer), sparse the active slot
+    ids (4 bytes each, capped). Returns ``(recv_mask [nl] bool,
+    wire_bytes int32, sparse_used int32, overflow int32)``.
+    """
+    p, cap = active.shape
+    axes = plan.axes if len(plan.axes) > 1 else plan.axes[0]
+    dense_bytes = plan.nn_dense_bits_bytes(cap)
+    cap_sparse = plan.sparse_cap_bits(cap)
+    sparse_bytes = plan.nn_sparse_bits_bytes(cap_sparse)
+
+    def scatter(loc):
+        return jnp.zeros((nl,), dtype=jnp.bool_).at[
+            jnp.clip(loc.reshape(-1), 0, nl - 1)
+        ].max(loc.reshape(-1) >= 0, mode="drop")
+
+    def dense_path(active):
+        # the slot axis packs exactly like a lane axis: bit s%32 of word s//32
+        rbits = unpack_lanes(_a2a(pack_lanes(active), axes), cap)
+        loc = jnp.where(rbits, recv_local, -1)
+        return scatter(loc), jnp.int32(dense_bytes), jnp.int32(0)
+
+    mode = plan.cfg.nn
+    if mode == "adaptive" and sparse_bytes >= dense_bytes:
+        mode = "dense"
+    if mode == "dense":
+        recv, bts, ovf = dense_path(active)
+        return recv, bts, jnp.int32(0), ovf
+
+    def sparse_path(active):
+        ids, _, overflow = _compact_active(active, cap_sparse)
+        r_ids = _a2a(ids, axes)
+        loc = jnp.take_along_axis(recv_local, jnp.clip(r_ids, 0, cap - 1),
+                                  axis=1)
+        loc = jnp.where(r_ids >= 0, loc, -1)
+        return scatter(loc), jnp.int32(sparse_bytes), overflow.astype(jnp.int32)
+
+    if mode == "sparse":
+        recv, bts, ovf = sparse_path(active)
+        return recv, bts, jnp.int32(1), ovf
+
+    local_max = jnp.max(jnp.sum(active.astype(jnp.int32), axis=-1))
+    feasible = lax.pmax(local_max, axes) <= cap_sparse
+    recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, active)
+    return recv, bts, feasible.astype(jnp.int32), ovf

@@ -1,0 +1,171 @@
+"""Delegate combine strategies (paper Section V-A, made pluggable).
+
+The paper combines delegate visited status with a hierarchical
+MPI_(I)AllReduce of bitmasks; the seed code hand-rolled one spelling per
+traversal path (``pmin`` over levels, ``pmax`` over u8 masks, an
+all-gather + OR fold over lane words).  This module is the single
+implementation all of them route through: :func:`delegate_combine` takes a
+:class:`~.base.CommPlan` plus a fold op and executes the selected
+strategy --
+
+* ``auto``      -- native fused ``pmin``/``pmax``/``psum`` where one
+                   exists; gather-fold for bitwise OR (seed behavior);
+* ``allgather`` -- ``lax.all_gather`` + local fold, optionally through the
+                   ``kernels.ops.mask_reduce`` lane-word kernel
+                   (``CommConfig.local_fold``);
+* ``ring``      -- reduce-scatter + all-gather rings via ``lax.ppermute``
+                   per partition axis: O(1)-in-p wire volume, the
+                   scalable spelling the all-gather docstring always
+                   promised;
+* ``hier``      -- the gather-fold run per axis group
+                   (``axes[:hier_split]`` then the rest): the paper's
+                   intra-node reduce followed by the inter-node one.
+
+Every strategy is bit-exact with every other (the folds are associative
+and commutative and the result is replicated) -- pinned by
+``tests/test_comm_strategies.py`` on vmap-emulated and shard_map meshes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .base import AxisNames, CommConfig, CommPlan, as_axes, plan_for
+
+# op name -> (elementwise binary fn, gathered-axis fold, native fused)
+_BINARY = {
+    "or": jnp.bitwise_or,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "sum": jnp.add,
+}
+_FOLD = {
+    "or": lambda g: lax.reduce(g, jnp.zeros((), g.dtype), lax.bitwise_or, (0,)),
+    "min": lambda g: jnp.min(g, axis=0),
+    "max": lambda g: jnp.max(g, axis=0),
+    "sum": lambda g: jnp.sum(g, axis=0),
+}
+_NATIVE = {"min": lax.pmin, "max": lax.pmax, "sum": lax.psum}
+
+
+def _allgather_fold(x, axes, op: str, local_fold: str | None):
+    # gather one named axis at a time (a tuple-axis all_gather is not
+    # batchable under nested vmap on the pinned JAX); the sequence moves
+    # exactly the flat gather's (P-1) payloads, so the accounting in
+    # base.delegate_bytes is unchanged
+    gathered = x
+    for a in reversed(axes):
+        gathered = lax.all_gather(gathered, a)
+    gathered = gathered.reshape((-1,) + x.shape)
+    if op == "or" and local_fold is not None and gathered.dtype == jnp.uint32:
+        from repro.kernels import ops as _kops  # lazy: pallas import cost
+
+        k = gathered.shape[0]
+        flat = gathered.reshape(k, -1)
+        force = None if local_fold == "auto" else local_fold
+        or_mask, _ = _kops.mask_reduce(
+            flat, jnp.zeros(flat.shape[1:], jnp.uint32),
+            force=force, with_count=False)
+        return or_mask.reshape(x.shape)
+    return _FOLD[op](gathered)
+
+
+def _ring_allreduce_1axis(x, axis_name: str, p: int, op: str):
+    """Bandwidth-optimal allreduce over one named axis: reduce-scatter then
+    all-gather, both as p-1 ``ppermute`` steps over ``ceil(L/p)``-element
+    chunks (2(p-1)/p payloads per device vs the gather's p-1)."""
+    if p <= 1:
+        return x
+    binop = _BINARY[op]
+    idx = lax.axis_index(axis_name)
+    flat = x.reshape(-1)
+    c = -(-flat.size // p)
+    acc = jnp.pad(flat, (0, p * c - flat.size)).reshape(p, c)
+    fwd = [(i, (i + 1) % p) for i in range(p)]
+    # reduce-scatter: after p-1 hops device i owns fully-reduced chunk
+    # (i+1) % p (chunk k visits devices k, k+1, ... accumulating)
+    for s in range(1, p):
+        send_ix = (idx - s + 1) % p
+        recv_ix = (idx - s) % p
+        blk = lax.ppermute(jnp.take(acc, send_ix, axis=0), axis_name, fwd)
+        acc = acc.at[recv_ix].set(binop(jnp.take(acc, recv_ix, axis=0), blk))
+    # all-gather: circulate the owned chunk p-1 hops; at step s device i
+    # receives chunk (i - s + 1) % p
+    own = (idx + 1) % p
+    blk = jnp.take(acc, own, axis=0)
+    out = acc.at[own].set(blk)
+    for s in range(1, p):
+        blk = lax.ppermute(blk, axis_name, fwd)
+        out = out.at[(idx - s + 1) % p].set(blk)
+    return out.reshape(-1)[: flat.size].reshape(x.shape)
+
+
+def delegate_combine(plan: CommPlan, x, op: str = "or"):
+    """Global elementwise ``op``-allreduce of ``x`` over the plan's axes
+    with the configured strategy. Returns ``(reduced, wire_bytes)`` --
+    bytes is a static Python int (the plan formula for this payload)."""
+    strategy = plan.effective_delegate(op)
+    nbytes = plan.delegate_bytes(x.size, x.dtype.itemsize, op)
+    if strategy == "auto":                      # native fused collective
+        axes = plan.axes if len(plan.axes) > 1 else plan.axes[0]
+        return _NATIVE[op](x, axes), nbytes
+    if strategy == "ring":
+        for a, s in zip(plan.axes, plan.sizes):
+            x = _ring_allreduce_1axis(x, a, s, op)
+        return x, nbytes
+    for group in plan.delegate_groups():        # allgather / hier
+        if group:
+            x = _allgather_fold(x, group, op, plan.cfg.local_fold)
+    return x, nbytes
+
+
+# -----------------------------------------------------------------------------
+# Seed-era entry points (kept: tests and external callers use them)
+
+
+def delegate_allreduce_min(cand: jnp.ndarray, axis_names: AxisNames,
+                           cfg: CommConfig | None = None) -> jnp.ndarray:
+    """Global min-reduction of delegate level candidates (bitmask-OR
+    analog). Default cfg keeps the seed's fused ``pmin``."""
+    return delegate_combine(plan_for(cfg, axis_names), cand, "min")[0]
+
+
+def delegate_allreduce_or(words: jnp.ndarray, axis_names: AxisNames,
+                          cfg: CommConfig | None = None) -> jnp.ndarray:
+    """Global bitwise-OR reduction of packed lane words ``[d, n_words]``
+    uint32 (or any shape) -- the paper's visited-bitmask MPI_AllReduce
+    with BOR, carrying one bit per (delegate, query) in the operand.
+
+    JAX has no OR allreduce primitive, so the default strategy
+    all-gathers the per-partition words and OR-folds locally: p
+    bits/query/delegate on the wire vs the ring strategy's ~2
+    (``CommConfig(delegate="ring")`` restores the O(1)-in-p volume).
+    """
+    return delegate_combine(plan_for(cfg, axis_names), words, "or")[0]
+
+
+def delegate_allreduce_sum(vals: jnp.ndarray, axis_names: AxisNames,
+                           cfg: CommConfig | None = None) -> jnp.ndarray:
+    """Global sum of delegate partials (the payload engine's reduction;
+    default = the seed's fused ``psum``)."""
+    return delegate_combine(plan_for(cfg, axis_names), vals, "sum")[0]
+
+
+def any_reduce(flag: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global OR of a scalar boolean."""
+    return lax.pmax(flag.astype(jnp.int32), axis_names) > 0
+
+
+def lane_any_reduce(lane_flags: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global per-lane OR of ``[W]`` bool flags (elementwise pmax).
+
+    The convergence mask of the lane-refill serving path: lane ``q``'s flag
+    is "query q marked a new vertex somewhere this sweep"; the reduced word
+    going to False is what lets the engine retire the lane mid-flight. The
+    whole reduction is one W-bit word per partition -- it adds no per-vertex
+    wire volume (and is excluded from the wire counters as constant), and
+    the packed formats of :func:`delegate_allreduce_or` and the nn exchange
+    are untouched by refill (a reseeded lane is just a fresh bit pattern in
+    the same words).
+    """
+    return lax.pmax(lane_flags.astype(jnp.int32), axis_names) > 0

@@ -1,0 +1,37 @@
+"""Lane-word wire format: W query bits per vertex packed into uint32 words.
+
+The packing IS the wire format of the batched traversal paths: bools live
+on the compute side (vectorized lane math), uint32 words exactly at the
+communication boundaries, so every byte formula in :mod:`.base` counts
+words of this layout. Kept in the comm package (rather than msbfs) because
+the format belongs to the wire, not to any one traversal algorithm --
+``repro.core.msbfs`` re-exports these names for its callers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_lanes(lanes: jnp.ndarray) -> jnp.ndarray:
+    """bool [..., W] -> uint32 [..., ceil(W/32)]; lane q -> bit q%32 of
+    word q//32."""
+    w = lanes.shape[-1]
+    nw = -(-w // 32)
+    pad = nw * 32 - w
+    if pad:
+        lanes = jnp.concatenate(
+            [lanes, jnp.zeros(lanes.shape[:-1] + (pad,), lanes.dtype)], axis=-1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    grouped = lanes.reshape(lanes.shape[:-1] + (nw, 32)).astype(jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_lanes(words: jnp.ndarray, w: int) -> jnp.ndarray:
+    """uint32 [..., nw] -> bool [..., w] (inverse of :func:`pack_lanes`)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[..., None] >> shifts) & jnp.uint32(1)) > 0
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :w]
+
+
+def n_words(w: int) -> int:
+    return -(-w // 32)

@@ -190,11 +190,15 @@ def propagate(
     x_n: jnp.ndarray,   # [n_local, F] local normal features
     x_d: jnp.ndarray,   # [d, F] replicated delegate features
     axis_names,
+    comm_cfg: comm.CommConfig | None = None,
 ):
     """One aggregation round: returns (out_n [n_local, F], out_d [d, F]).
 
-    out_d is identical on all partitions (psum), mirroring the paper's
-    replicated delegate state.
+    out_d is identical on all partitions (a global sum -- the fused
+    ``psum`` by default, or the allgather / ring / hierarchical combine
+    named by ``comm_cfg.delegate``), mirroring the paper's replicated
+    delegate state. :func:`payload_round_bytes` gives the static wire
+    model of one round under the same config.
     """
     nl = x_n.shape[0]
     d = x_d.shape[0]
@@ -202,7 +206,7 @@ def propagate(
     # delegate destinations: nd + dd partials -> global reduction
     part_d = _segment_to_cols(pgv.nd, _gather_messages(pgv.nd, x_n, weights.nd), d)
     part_d = part_d + _segment_to_cols(pgv.dd, _gather_messages(pgv.dd, x_d, weights.dd), d)
-    out_d = lax.psum(part_d, axis_names)
+    out_d = comm.delegate_allreduce_sum(part_d, axis_names, comm_cfg)
 
     # normal destinations: dn is local by construction
     out_n = _segment_to_cols(pgv.dn, _gather_messages(pgv.dn, x_d, weights.dn), nl)
@@ -279,15 +283,17 @@ def aggregate_messages(
     plan: ExchangePlan,
     msgs: dict,            # {"nn","nd","dn","dd"}: [E_max, F] per-edge messages
     axis_names,
+    comm_cfg: comm.CommConfig | None = None,
 ):
     """Two-class aggregation of arbitrary per-edge messages (the BFS comm
-    model generalized): delegate destinations psum'd, nn remote destinations
-    pre-aggregated + all_to_all'd. Returns (out_n [n_local,F], out_d [d,F])."""
+    model generalized): delegate destinations globally summed (strategy
+    per ``comm_cfg``), nn remote destinations pre-aggregated +
+    all_to_all'd. Returns (out_n [n_local,F], out_d [d,F])."""
     nl = pgv.n_local
     d = max(pgv.d, 1)
     f = msgs["nn"].shape[1]
     part_d = _segment_to_cols(pgv.nd, msgs["nd"], d) + _segment_to_cols(pgv.dd, msgs["dd"], d)
-    out_d = lax.psum(part_d, axis_names)
+    out_d = comm.delegate_allreduce_sum(part_d, axis_names, comm_cfg)
     out_n = _segment_to_cols(pgv.dn, msgs["dn"], nl)
     m = msgs["nn"][plan.perm]
     partials = jax.ops.segment_sum(m, plan.seg_ids, num_segments=plan.cap_total + 1)[:-1]
@@ -305,6 +311,37 @@ def aggregate_messages(
     out_n = out_n.at[jnp.clip(r_ids, 0, nl - 1)].add(
         jnp.where((r_ids >= 0)[:, None], r_vals, 0), mode="drop")
     return out_n, out_d
+
+
+def payload_round_bytes(
+    plan: ExchangePlan,
+    *,
+    axis_sizes,
+    d: int,
+    feat: int,
+    itemsize: int = 4,
+    comm_cfg: comm.CommConfig | None = None,
+) -> dict:
+    """Static per-device wire model of one :func:`propagate` round.
+
+    Payload shapes are graph-static, so -- unlike the traversal paths,
+    whose adaptive formats need traced counters -- the engine's wire
+    volume is a host-side formula: the delegate sum of ``[d, feat]``
+    under the configured combine strategy plus the nn payload
+    all_to_all of ``(id + feat * itemsize)`` bytes per plan slot.
+    ``axis_sizes`` are the partition-axis sizes (e.g. ``mesh.shape``
+    values), matching the byte convention of ``comm/base.py``.
+    """
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    cplan = comm.CommPlan(cfg=comm_cfg or comm.CommConfig(),
+                          axes=tuple(f"ax{i}" for i in range(len(axis_sizes))),
+                          sizes=axis_sizes)
+    return {
+        "delegate_bytes": cplan.delegate_bytes(d * feat, itemsize, "sum"),
+        "nn_payload_bytes": cplan.a2a_bytes(
+            plan.cap_peer * (4 + feat * itemsize)),
+        "p": cplan.p,
+    }
 
 
 def edge_endpoints(

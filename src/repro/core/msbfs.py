@@ -17,12 +17,18 @@ is then amortized over the whole batch:
   drops out of the scan as soon as the accumulated parent word covers all
   of its still-unvisited lanes;
 * **delegate reduction** packs the candidate lanes to ``[d, n_words]``
-  uint32 and runs one global bitwise-OR all-reduce
-  (:func:`repro.core.comm.delegate_allreduce_or`);
+  uint32 and runs one global bitwise-OR combine through the pluggable
+  strategy layer (:func:`repro.core.comm.delegate_combine`: allgather-fold
+  / ppermute ring / two-level hierarchical, per ``MSBFSConfig(comm=...)``);
 * **nn exchange** reuses the static :class:`~repro.core.engine.ExchangePlan`
   slot layout and ships one uint32 word per 32 queries per unique
   (owner, local) slot -- ``cap_total * n_words * 4`` bytes of a2a volume,
-  ~1 bit/query/slot, with no runtime sort;
+  ~1 bit/query/slot, with no runtime sort; small-frontier sweeps can
+  instead ship capped (slot id, word) pairs, switched per sweep by the
+  frontier-adaptive format (``CommConfig(nn="adaptive")``);
+* **wire accounting**: every sweep records the bytes each collective put
+  on the wire (``MSBFSState.wire_delegate`` / ``wire_nn``), threaded up
+  through ``ServeStats`` and ``benchmarks/comm_model.py --strategies``;
 * **direction optimization** is decided *per lane* from per-lane FV/BV
   estimates (frontier out-degree sums and unvisited counts computed by
   masked popcounts), so a query in its high-frontier middle iterations can
@@ -72,33 +78,10 @@ from .types import CSR, INF_LEVEL, PartitionedGraph, PartitionLayout
 # < max_iters << NO_DEPTH_CAP, so the gate `depth < cap` never fires).
 NO_DEPTH_CAP = np.int32(INF_LEVEL)
 
-# -----------------------------------------------------------------------------
-# Lane-word packing
-
-
-def pack_lanes(lanes: jnp.ndarray) -> jnp.ndarray:
-    """bool [..., W] -> uint32 [..., ceil(W/32)]; lane q -> bit q%32 of
-    word q//32."""
-    w = lanes.shape[-1]
-    nw = -(-w // 32)
-    pad = nw * 32 - w
-    if pad:
-        lanes = jnp.concatenate(
-            [lanes, jnp.zeros(lanes.shape[:-1] + (pad,), lanes.dtype)], axis=-1)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    grouped = lanes.reshape(lanes.shape[:-1] + (nw, 32)).astype(jnp.uint32)
-    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
-
-
-def unpack_lanes(words: jnp.ndarray, w: int) -> jnp.ndarray:
-    """uint32 [..., nw] -> bool [..., w] (inverse of :func:`pack_lanes`)."""
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = ((words[..., None] >> shifts) & jnp.uint32(1)) > 0
-    return bits.reshape(words.shape[:-1] + (-1,))[..., :w]
-
-
-def n_words(w: int) -> int:
-    return -(-w // 32)
+# Lane-word packing lives with the wire formats in the comm package;
+# re-exported here because every msBFS caller packs/unpacks through this
+# module's namespace.
+from .comm import n_words, pack_lanes, unpack_lanes  # noqa: E402,F401
 
 
 # -----------------------------------------------------------------------------
@@ -127,6 +110,13 @@ class MSBFSConfig:
     # the native bool-lane gather. None = native; "ref" / "pallas" pin the
     # dispatch target; "auto" lets the wrapper pick per backend.
     kernel_pull: str | None = None
+    # Communication strategies (repro.core.comm.CommConfig): how the
+    # delegate lane words are combined (allgather-fold / ring / two-level
+    # hierarchical, optionally folding through the mask_reduce kernel) and
+    # which wire format the nn exchange ships (dense slot words / sparse
+    # capped id+word pairs / the per-sweep frontier-adaptive switch). The
+    # default reproduces the seed behavior bit-for-bit.
+    comm: comm.CommConfig = comm.CommConfig()
 
 
 @dataclass
@@ -166,6 +156,15 @@ class MSBFSState:
     work_bwd: Any    # parent-word checks by pulls
     nn_sent: Any     # active (slot, lane) pairs signalled in the nn exchange
     delegate_round: Any  # 1 if the delegate reduction carried updates
+    # wire-volume accounting [p, max_iters] int32 (accumulated with .add,
+    # so refill sessions running past max_iters keep exact totals in the
+    # last slot). Per-device bytes put on the wire; summing the partition
+    # rows gives total cluster traffic (comm/base.py byte convention):
+    wire_delegate: Any   # delegate-combine bytes per sweep
+    wire_nn: Any         # nn-exchange bytes per sweep
+    nn_sparse: Any       # 1 if the sweep shipped the sparse nn format
+    nn_overflow: Any     # active slots dropped by a pinned-sparse cap
+                         # (must be 0 for a valid run; adaptive never drops)
 
 
 jax.tree_util.register_dataclass(
@@ -174,7 +173,8 @@ jax.tree_util.register_dataclass(
                  "lane_active", "base_it",
                  "lane_stop", "depth_cap", "has_targets",
                  "target_n", "target_d", "frontier_n", "frontier_d",
-                 "work_fwd", "work_bwd", "nn_sent", "delegate_round"),
+                 "work_fwd", "work_bwd", "nn_sent", "delegate_round",
+                 "wire_delegate", "wire_nn", "nn_sparse", "nn_overflow"),
     meta_fields=(),
 )
 
@@ -283,6 +283,7 @@ def init_multi_state(
         target_n=target_n, target_d=target_d,
         frontier_n=frontier_n, frontier_d=frontier_d,
         work_fwd=z(), work_bwd=z(), nn_sent=z(), delegate_round=z(),
+        wire_delegate=z(), wire_nn=z(), nn_sparse=z(), nn_overflow=z(),
     )
 
 
@@ -401,6 +402,8 @@ def msbfs_step(
     w = cfg.n_queries
     d = state.level_d.shape[-2]
     it = state.it
+    # strategies bound to this step's partition axes (static at trace time)
+    cplan = comm.plan_for(cfg.comm, axis_names)
 
     # Typed-query liveness gate: a lane with a latched stop (all targets
     # hit) or at its depth cap contributes no frontier this sweep, so its
@@ -486,7 +489,9 @@ def msbfs_step(
         frontier_d, cfg.pull_chunk, cfg.kernel_pull)
     cand_dn = push_dn | pull_dn
 
-    # ---- nn: normal -> normal, forward only, packed-word static exchange --
+    # ---- nn: normal -> normal, forward only, static slot exchange ---------
+    # format (dense lane words / sparse id+word pairs / per-sweep adaptive
+    # switch) selected by cfg.comm.nn inside the comm layer
     act_nn = _push_active_multi(pgv.nn, frontier_n)          # [E, W]
     sa = jnp.zeros((plan.cap_total + 1, w), jnp.bool_).at[plan.seg_ids].max(
         act_nn[plan.perm])[: plan.cap_total]                 # unique slots
@@ -494,18 +499,15 @@ def msbfs_step(
     ok = plan.seg_owner < p
     dense = jnp.zeros((p, plan.cap_peer, w), jnp.bool_).at[rows, plan.seg_pos].max(
         sa & ok[:, None], mode="drop")
-    words = pack_lanes(dense)                                # [p, cap_peer, nw]
-    rwords = comm.exchange_words(words, axis_names)
-    rlanes = unpack_lanes(rwords, w)                         # [p, cap_peer, W]
-    locs = plan.recv_local                                   # [p, cap_peer]
-    recv = jnp.zeros((nl, w), dtype=jnp.bool_).at[
-        jnp.clip(locs.reshape(-1), 0, nl - 1)
-    ].max((rlanes & (locs >= 0)[..., None]).reshape(-1, w), mode="drop")
+    recv, nn_bytes, nn_sparse, nn_ovf = comm.nn_exchange_words(
+        cplan, dense, plan.recv_local, nl)
     sent = jnp.sum(sa.astype(jnp.int32))
 
-    # ---- delegate global reduction: packed-word bitwise-OR all-reduce -----
+    # ---- delegate global reduction: packed-word bitwise-OR combine --------
+    # (allgather-fold / ring / hierarchical per cfg.comm.delegate; the
+    # local fold optionally runs through the mask_reduce lane-word kernel)
     cand_d_words = pack_lanes(cand_dd | cand_nd)             # [d, nw]
-    reduced = comm.delegate_allreduce_or(cand_d_words, axis_names)
+    reduced, d_bytes = comm.delegate_combine(cplan, cand_d_words, "or")
     newly_d = unpack_lanes(reduced, w) & unvis_d
     new_d_any = jnp.any(newly_d)
 
@@ -573,6 +575,10 @@ def msbfs_step(
         work_bwd=state.work_bwd.at[slot].set(w_bwd),
         nn_sent=state.nn_sent.at[slot].set(sent),
         delegate_round=state.delegate_round.at[slot].set(new_d_any.astype(jnp.int32)),
+        wire_delegate=state.wire_delegate.at[slot].add(jnp.int32(d_bytes)),
+        wire_nn=state.wire_nn.at[slot].add(nn_bytes),
+        nn_sparse=state.nn_sparse.at[slot].add(nn_sparse),
+        nn_overflow=state.nn_overflow.at[slot].add(nn_ovf),
     )
 
 

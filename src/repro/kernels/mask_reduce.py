@@ -32,27 +32,55 @@ def _kernel(parts_ref, prev_ref, or_ref, newcnt_ref):
     newcnt_ref[...] = _popcount32(combined & ~prev)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_words", "interpret"))
+def _kernel_fold(parts_ref, prev_ref, or_ref):
+    """Fold-only variant: the delegate-combine local fold wants just the
+    OR'd mask, so the popcount VPU pass (and its output buffer) is
+    compiled away."""
+    parts = parts_ref[...]
+    combined = prev_ref[...]
+    for k in range(parts.shape[0]):
+        combined = combined | parts[k]
+    or_ref[...] = combined
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_words", "interpret", "with_count"))
 def mask_reduce(
     partials: jnp.ndarray,   # [K, NW] uint32 -- per-peer partial masks
     prev: jnp.ndarray,       # [NW] uint32 -- mask from the previous iteration
     *,
     tile_words: int = 512,
     interpret: bool = True,
+    with_count: bool = True,
 ):
-    """Returns (or_mask [NW] uint32, new_bits_per_word [NW] int32)."""
+    """Returns (or_mask [NW] uint32, new_bits_per_word [NW] int32).
+
+    ``with_count=False`` skips the popcount of newly set bits (the second
+    element is then ``None``) -- the shape the comm layer's local fold
+    uses, where only the combined mask goes back on the wire."""
     k, nw = partials.shape
     nw_pad = -(-nw // tile_words) * tile_words
     partials = jnp.pad(partials, ((0, 0), (0, nw_pad - nw)))
     prev = jnp.pad(prev, (0, nw_pad - nw))
     grid = (nw_pad // tile_words,)
+    in_specs = [
+        pl.BlockSpec((k, tile_words), lambda i: (0, i)),
+        pl.BlockSpec((tile_words,), lambda i: (i,)),
+    ]
+    if not with_count:
+        or_mask = pl.pallas_call(
+            _kernel_fold,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((tile_words,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((nw_pad,), jnp.uint32),
+            interpret=interpret,
+        )(partials, prev)
+        return or_mask[:nw], None
     or_mask, newcnt = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((k, tile_words), lambda i: (0, i)),
-            pl.BlockSpec((tile_words,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((tile_words,), lambda i: (i,)),
             pl.BlockSpec((tile_words,), lambda i: (i,)),

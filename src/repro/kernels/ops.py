@@ -53,7 +53,9 @@ def cin_fused(x0, xk, w, *, force: str | None = None, **kw):
     return ref.cin_fused_ref(x0, xk, w)
 
 
-def mask_reduce(partials, prev, *, force: str | None = None, **kw):
+def mask_reduce(partials, prev, *, force: str | None = None,
+                with_count: bool = True, **kw):
     if _use_pallas(force):
-        return _mask_pallas(partials, prev, interpret=jax.default_backend() != "tpu", **kw)
-    return ref.mask_reduce_ref(partials, prev)
+        return _mask_pallas(partials, prev, with_count=with_count,
+                            interpret=jax.default_backend() != "tpu", **kw)
+    return ref.mask_reduce_ref(partials, prev, with_count=with_count)

@@ -44,15 +44,22 @@ def cin_fused_ref(x0, xk, w):
     return jnp.einsum("hf,bfd->bhd", w, outer.reshape(b, f0 * fk, d))
 
 
-def mask_reduce_ref(partials, prev):
+def mask_reduce_ref(partials, prev, with_count: bool = True):
+    """Traceable (pure-jnp) oracle: it also runs *inside* jitted traversal
+    steps as the local OR fold of the delegate combine
+    (``CommConfig(local_fold="ref")``), so no host-side numpy here."""
     combined = prev
     for k in range(partials.shape[0]):
         combined = combined | partials[k]
-    new = np.asarray(combined & ~prev)
-    cnt = np.zeros(new.shape, np.int32)
-    for i in range(32):
-        cnt += ((new >> np.uint32(i)) & np.uint32(1)).astype(np.int32)
-    return combined, jnp.asarray(cnt)
+    if not with_count:
+        return combined, None
+    new = combined & ~prev
+    # SWAR popcount (same bit-twiddling as the Pallas kernel)
+    x = new - ((new >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    cnt = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    return combined, cnt
 
 
 def pack_bitmask(flags: np.ndarray) -> np.ndarray:

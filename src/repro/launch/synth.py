@@ -102,4 +102,7 @@ def synth_bfs_state(pg, cfg: BFSConfig, mesh, part_axes) -> BFSState:
         nn_sent=arr((mi,), np.int32),
         nn_overflow=arr((mi,), np.int32),
         delegate_round=arr((mi,), np.int32),
+        wire_delegate=arr((mi,), np.int32),
+        wire_nn=arr((mi,), np.int32),
+        nn_sparse=arr((mi,), np.int32),
     )

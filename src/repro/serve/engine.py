@@ -35,7 +35,7 @@ from dataclasses import dataclass, field, replace as _dc_replace
 
 import numpy as np
 
-from repro.core import bfs as B, engine as E, msbfs as M
+from repro.core import bfs as B, comm as C, engine as E, msbfs as M
 from repro.core.partition import partition_graph
 from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
 
@@ -63,8 +63,19 @@ class ServeStats:
     Typed-query counters: ``kind_counts`` tallies submissions per kind
     (cache hits included), ``early_stops`` counts lanes retired through a
     latched early exit (depth cap reached / all targets hit) rather than
-    natural frontier exhaustion, and ``reach_fast_batches`` counts batches
+    natural frontier exhaustion -- attributed per kind in
+    ``early_stops_by_kind`` -- and ``reach_fast_batches`` counts batches
     or drain sessions served by the levels-free reachability variant.
+
+    Wire-volume counters (the comm layer's per-sweep accounting summed
+    over every traversal this engine ran; ``comm/base.py`` byte
+    convention, partition rows included, so these are total cluster
+    traffic): ``wire_delegate_bytes`` for the delegate combine,
+    ``wire_nn_bytes`` for the nn frontier exchange, ``nn_sparse_sweeps``
+    counting sweeps that shipped the sparse nn format, and
+    ``nn_overflow`` surfacing active slots dropped by a pinned-sparse
+    cap (always 0 under the dense and adaptive formats; a nonzero value
+    means answers may be wrong and the cap must grow).
     """
 
     queries: int = 0
@@ -80,13 +91,37 @@ class ServeStats:
     reach_fast_batches: int = 0
     component_hits: int = 0   # reachability answers reused across sources
     kind_counts: dict = field(default_factory=dict)
+    early_stops_by_kind: dict = field(default_factory=dict)
+    wire_delegate_bytes: int = 0
+    wire_nn_bytes: int = 0
+    nn_sparse_sweeps: int = 0
+    nn_overflow: int = 0
 
     @property
     def lane_utilization(self) -> float:
         return self.lane_sweeps_busy / max(self.lane_sweeps_total, 1)
 
+    @property
+    def wire_bytes_total(self) -> int:
+        return self.wire_delegate_bytes + self.wire_nn_bytes
+
     def note_kind(self, kind: QueryKind) -> None:
         self.kind_counts[kind.value] = self.kind_counts.get(kind.value, 0) + 1
+
+    def note_early_stop(self, kind: QueryKind) -> None:
+        self.early_stops += 1
+        self.early_stops_by_kind[kind.value] = (
+            self.early_stops_by_kind.get(kind.value, 0) + 1)
+
+    def note_traversal(self, state) -> None:
+        """Fold one finished traversal state's comm counters in (batch
+        runs and refill drain sessions alike)."""
+        self.wire_delegate_bytes += int(np.asarray(state.wire_delegate).sum())
+        self.wire_nn_bytes += int(np.asarray(state.wire_nn).sum())
+        # the format flag is a global decision (replicated): row 0 only;
+        # overflow is per-device send-side drops: sum every partition
+        self.nn_sparse_sweeps += int(np.asarray(state.nn_sparse)[0].sum())
+        self.nn_overflow += int(np.asarray(state.nn_overflow).sum())
 
     def as_dict(self) -> dict:
         return {
@@ -100,6 +135,12 @@ class ServeStats:
             "reach_fast_batches": self.reach_fast_batches,
             "component_hits": self.component_hits,
             "kind_counts": dict(self.kind_counts),
+            "early_stops_by_kind": dict(self.early_stops_by_kind),
+            "wire_delegate_bytes": self.wire_delegate_bytes,
+            "wire_nn_bytes": self.wire_nn_bytes,
+            "wire_bytes_total": self.wire_bytes_total,
+            "nn_sparse_sweeps": self.nn_sparse_sweeps,
+            "nn_overflow": self.nn_overflow,
         }
 
 
@@ -111,6 +152,11 @@ class BFSServeEngine:
     graph / pg : give either the raw ``COOGraph`` (partitioned here with
         ``th``/``p_rank``/``p_gpu``) or an already-partitioned graph.
     cfg : msBFS config; ``cfg.n_queries`` is the lane width W.
+    comm : communication strategies (``repro.core.comm.CommConfig``) --
+        delegate combine (allgather / ring / hierarchical) and nn wire
+        format (dense / sparse / frontier-adaptive); sugar for passing a
+        cfg with ``comm=`` set. Wire volumes land in the ``stats``
+        counters either way.
     cache_capacity : LRU entries (query-descriptor keyed); 0 disables.
     cache_ttl : default per-entry time-to-live in seconds (None = entries
         never expire -- the immutable-graph default).
@@ -144,6 +190,7 @@ class BFSServeEngine:
         p_rank: int = 1,
         p_gpu: int = 2,
         cfg: M.MSBFSConfig | None = None,
+        comm: C.CommConfig | None = None,
         cache_capacity: int = 256,
         cache_ttl: float | None = None,
         graph_id: str | None = None,
@@ -159,6 +206,10 @@ class BFSServeEngine:
             pg = partition_graph(graph, th=th, p_rank=p_rank, p_gpu=p_gpu)
         self.pg = pg
         self.cfg = cfg or M.MSBFSConfig()
+        if comm is not None:
+            # sugar: swap the comm strategies without rebuilding the whole
+            # msBFS config (every derived per-batch variant inherits them)
+            self.cfg = _dc_replace(self.cfg, comm=comm)
         if not self.cfg.track_levels or not self.cfg.enable_targets:
             raise ValueError(
                 "pass a track_levels=True, enable_targets=True cfg; the "
@@ -300,7 +351,10 @@ class BFSServeEngine:
         self.stats.batches += 1
         self.stats.lanes_used += len(queries)
         self.stats.lanes_padded += w - len(queries)
-        self.stats.early_stops += int(stops[: len(queries)].sum())
+        self.stats.note_traversal(out)
+        for i, q in enumerate(queries):
+            if stops[i]:
+                self.stats.note_early_stop(q.kind)
         return {q: unpack_result(q, rows[i], packed_reach=reach_fast)
                 for i, q in enumerate(queries)}
 
@@ -417,7 +471,8 @@ class BFSServeEngine:
                 results[item] = unpack_result(item, rows[i],
                                               packed_reach=reach_fast)
                 self._register_component(item, results[item])
-                self.stats.early_stops += int(stops[q])
+                if stops[q]:
+                    self.stats.note_early_stop(item.kind)
             if self.reuse_components:
                 # a freshly mapped component may cover other reachability
                 # queries: answer pending ones without a lane, and cut
@@ -449,6 +504,7 @@ class BFSServeEngine:
                 self.stats.lanes_used += len(fresh)
                 for a in fresh:
                     expected[a.item] = (a.lane, a.generation)
+        self.stats.note_traversal(state)
         return results
 
     # -- public API ---------------------------------------------------------
