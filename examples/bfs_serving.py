@@ -14,11 +14,19 @@ per-kind oracle spot-checks and the per-kind ``ServeStats`` printed
 wire-volume counters -- delegate/nn bytes, sparse-format sweeps, and the
 overflow counter that must stay 0).
 
+``--overlap`` (with ``--refill``) serves through the overlapped
+host/device pipeline: sweeps run in fused blocks with a speculative next
+block in flight while the host unpacks retired lanes -- same traversal
+schedule (``sweeps`` and wire counters are bit-identical to the per-sweep
+driver), fewer host round trips. ``--stream`` feeds the same traffic
+incrementally through ``submit_stream``/``poll`` instead of one big
+``submit_many`` call, draining results as they retire.
+
 ``--delegate`` / ``--adaptive-nn`` swap the communication strategies
 (``repro.core.comm.CommConfig``) the sweeps run under.
 
     PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] \
-        [--refill] [--mixed] [--delegate ring] [--adaptive-nn]
+        [--refill] [--overlap] [--stream] [--mixed] [--delegate ring] [--adaptive-nn]
 """
 import argparse
 import time
@@ -52,11 +60,43 @@ def serve_classic(eng, g, stream, args):
     if args.refill:
         print(f"refill sweeps={st.sweeps} reseeds={st.refills} "
               f"busy_lane_sweeps={st.lane_utilization:.0%}")
+    if args.overlap:
+        print(f"overlap blocks={st.sweep_blocks} "
+              f"fusion={st.sweeps / max(st.sweep_blocks, 1):.1f} sweeps/block")
 
     for t in list(answers)[:: max(len(answers) // 5, 1)]:
         ref = bfs_levels(g, tickets[t])
         assert np.array_equal(answers[t], ref), f"mismatch for source {tickets[t]}"
     print("spot-checked answers against the oracle: OK")
+
+
+def serve_stream(eng, g, stream, args):
+    """Incremental feed/drain through the streaming API: submit in small
+    chunks, poll for retired results between submissions."""
+    from repro.core.oracle import bfs_levels
+    from repro.serve import Query
+
+    t0 = time.perf_counter()
+    answers = {}
+    chunk = max(1, eng.cfg.n_queries // 2)
+    for i in range(0, len(stream), chunk):
+        eng.submit_stream([Query(int(s)) for s in stream[i : i + chunk]])
+        answers.update(eng.poll())          # drain whatever has retired
+    answers.update(eng.drain_stream())
+    dt = time.perf_counter() - t0
+
+    st = eng.stats
+    uniq = len({int(s) for s in stream})
+    print(f"streamed {len(stream)} requests ({uniq} unique) in {dt:.2f}s "
+          f"({len(stream) / dt:.0f} req/s)")
+    print(f"results={len(answers)} sweeps={st.sweeps} blocks={st.sweep_blocks} "
+          f"reseeds={st.refills} dedup_hits={st.dedup_hits} "
+          f"cache_hits={st.cache_hits}")
+    assert len(answers) == uniq
+    for q in list(answers)[:: max(len(answers) // 5, 1)]:
+        ref = bfs_levels(g, q.source)
+        assert np.array_equal(answers[q], ref), f"mismatch for {q}"
+    print("spot-checked streamed answers against the oracle: OK")
 
 
 def serve_mixed(eng, g, stream, args):
@@ -121,6 +161,10 @@ def main():
     ap.add_argument("--hot", type=int, default=16, help="hot landmark count")
     ap.add_argument("--refill", action="store_true",
                     help="serve through the mid-flight lane-refill pipeline")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped host/device pipeline (implies --refill)")
+    ap.add_argument("--stream", action="store_true",
+                    help="feed/drain incrementally via submit_stream/poll")
     ap.add_argument("--mixed", action="store_true",
                     help="serve a typed mixed-kind query stream")
     ap.add_argument("--delegate", default="auto",
@@ -132,10 +176,12 @@ def main():
 
     from repro.core.comm import CommConfig
 
+    if args.overlap or args.stream:
+        args.refill = True   # the pipelined drivers ride the refill path
     g = rmat_graph(args.scale, seed=0)
     print(f"graph n={g.n:,} m={g.m:,}")
     eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
-                         refill=args.refill,
+                         refill=args.refill, overlap=args.overlap,
                          comm=CommConfig(
                              delegate=args.delegate,
                              nn="adaptive" if args.adaptive_nn else "dense"))
@@ -156,6 +202,8 @@ def main():
 
     if args.mixed:
         serve_mixed(eng, g, stream, args)
+    elif args.stream:
+        serve_stream(eng, g, stream, args)
     else:
         serve_classic(eng, g, stream, args)
 

@@ -196,9 +196,11 @@ def locate_source(pg: PartitionedGraph, layout: PartitionLayout,
     position ``dpos`` of the replicated delegate levels; a normal source
     seeds ``(part, local)`` of the owner partition. Shared by
     :func:`init_multi_state` and the serve engine's refill reseeding so the
-    delegate classification can never diverge between the two."""
+    delegate classification can never diverge between the two. ``dvids``
+    must hold exactly the ``pg.d`` real delegate ids (empty on a
+    delegate-free graph) -- padded entries here would misclassify."""
     pos = int(np.searchsorted(dvids, src))
-    if pg.d and pos < pg.d and dvids[pos] == src:
+    if pos < dvids.size and dvids[pos] == src:
         return True, 0, 0, pos
     return (False, int(layout.part_of(np.int64(src))),
             int(layout.local_of(np.int64(src))), 0)
@@ -223,7 +225,11 @@ def init_multi_state(
     layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
     p, nl = pg.p, pg.n_local
     d = max(pg.d, 1)
-    dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+    # exactly pg.d real delegate ids: on a delegate-free graph this must be
+    # *empty*, never one bogus padded id (the replicated delegate arrays
+    # still pad to max(d, 1) for static shapes, but classification may only
+    # ever consult real ids)
+    dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
     if cfg.track_levels:
         level_n = np.full((p, nl, w), INF_LEVEL, dtype=np.int32)
         level_d = np.full((p, d, w), INF_LEVEL, dtype=np.int32)
@@ -586,8 +592,7 @@ def msbfs_step(
 # Lane retirement / refill
 
 
-@jax.jit
-def reseed_lanes(
+def _reseed_lanes_impl(
     state: MSBFSState,
     lane_mask: jnp.ndarray,       # [W] bool: lanes to retire + reseed
     src_part: jnp.ndarray,        # [W] int32: owner partition (normal source)
@@ -681,6 +686,15 @@ def reseed_lanes(
     )
 
 
+# The public jitted entry point, plus an input-donating sibling for the
+# overlapped serving pipeline: at a retirement boundary the pre-reseed state
+# has already been gathered from, so its buffers can be reused in place.
+# (XLA:CPU ignores donation; the serve engine only picks the donating
+# variant on accelerator backends to avoid per-call warnings.)
+reseed_lanes = jax.jit(_reseed_lanes_impl)
+reseed_lanes_donated = jax.jit(_reseed_lanes_impl, donate_argnums=(0,))
+
+
 # -----------------------------------------------------------------------------
 # Drivers
 
@@ -764,6 +778,71 @@ def make_sharded_msbfs_step(mesh, partition_axes, cfg: MSBFSConfig):
     """Jitted single shard_map superstep: ``step(pgv, plan, state) -> state``
     (the mesh analog of :func:`msbfs_step_emulated`, for the refill engine)."""
     return jax.jit(_make_sharded_step(mesh, tuple(partition_axes), cfg))
+
+
+# -----------------------------------------------------------------------------
+# Fused k-sweep blocks (the overlapped serving pipeline's device step)
+
+
+def _block_loop(step_fn, args, state: MSBFSState, watch: jnp.ndarray, k: int):
+    """Run up to ``k`` fused sweeps, stopping *at the exact sweep* any
+    watched lane converges.
+
+    ``watch [W] bool`` is the set of lanes the host is waiting on (the
+    scheduler's busy mask). The loop condition re-checks it after every
+    sweep, so the state the host sees at a block boundary is bit-identical
+    to what the per-sweep driver would have produced: a retirement is never
+    overshot, reseeds land at the same iteration, and the per-sweep
+    statistics and wire counters (accumulated inside the carried state --
+    ``work_*``, ``wire_*``, ``nn_*``) stay exact despite the fusion.
+
+    A corollary that the pipelined engine leans on: dispatching a block
+    whose ``watch`` already has a converged lane runs **zero** sweeps and
+    returns the state unchanged -- a speculative next block dispatched
+    before the host has examined the previous block's ``lane_active`` word
+    freezes itself instead of corrupting the schedule.
+    """
+
+    def cond(carry):
+        s, i = carry
+        return (i < k) & ~jnp.any(watch[None, :] & ~s.lane_active)
+
+    def body(carry):
+        s, i = carry
+        return step_fn(args, s), i + jnp.int32(1)
+
+    s, _ = lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return s
+
+
+def make_msbfs_block_emulated(cfg: MSBFSConfig, k: int, donate: bool = False):
+    """Jitted fused block for the vmap-emulated path:
+    ``block(pgv_stacked, plan_stacked, state, watch) -> state`` runs up to
+    ``k`` supersteps on device per host round trip (see :func:`_block_loop`
+    for the exact-stop semantics). ``donate=True`` donates the input
+    state's buffers to the output (in-place sweeps on backends that
+    support it; XLA:CPU silently ignores donation)."""
+    step = _vmapped_step(cfg)
+
+    def block(pgv_stacked, plan_stacked, state, watch):
+        return _block_loop(lambda a, s: step(a[0], a[1], s),
+                           (pgv_stacked, plan_stacked), state, watch, k)
+
+    return jax.jit(block, donate_argnums=(2,) if donate else ())
+
+
+def make_sharded_msbfs_block(mesh, partition_axes, cfg: MSBFSConfig, k: int,
+                             donate: bool = False):
+    """The shard_map sibling of :func:`make_msbfs_block_emulated`: up to
+    ``k`` fused supersteps over a real device mesh per dispatch, with the
+    same stop-at-retirement contract."""
+    step = _make_sharded_step(mesh, tuple(partition_axes), cfg)
+
+    def block(pgv, plan, state, watch):
+        return _block_loop(lambda a, s: step(a[0], a[1], s),
+                           (pgv, plan), state, watch, k)
+
+    return jax.jit(block, donate_argnums=(2,) if donate else ())
 
 
 def _gather_lane_columns(pg: PartitionedGraph, state: MSBFSState, lanes):

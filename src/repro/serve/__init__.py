@@ -11,10 +11,11 @@ Section V communication classes and for the query taxonomy.
 from .batcher import LaneAssignment, LaneScheduler, QueryBatcher, pack_sources
 from .cache import LRUCache
 from .engine import BFSServeEngine, ServeStats
-from .queries import MAX_TARGETS, Query, QueryKind, as_query, unpack_result
+from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
+                      oracle_check, unpack_result)
 
 __all__ = [
     "BFSServeEngine", "LRUCache", "LaneAssignment", "LaneScheduler",
     "MAX_TARGETS", "Query", "QueryBatcher", "QueryKind", "ServeStats",
-    "as_query", "pack_sources", "unpack_result",
+    "as_query", "dedupe", "oracle_check", "pack_sources", "unpack_result",
 ]

@@ -119,6 +119,27 @@ class LaneScheduler:
         """Queue a source vertex id or a typed query descriptor."""
         self.pending.append(item)
 
+    def submit_stream(self, items) -> int:
+        """Queue many items at once (the streaming feed API); returns the
+        number enqueued. Items become lane tenants at the next
+        :meth:`fill_idle` boundary -- submission never touches lanes."""
+        n = 0
+        for item in items:
+            self.pending.append(item)
+            n += 1
+        return n
+
+    def poll(self) -> dict:
+        """Snapshot of the in-flight lanes: {lane: (item, generation)}.
+
+        Pure introspection for streaming callers (which queries are still
+        being traversed right now); retirement stays explicit via
+        :meth:`retire`.
+        """
+        return {int(lane): (self.lane_item[lane],
+                            int(self.lane_generation[lane]))
+                for lane in np.nonzero(self.busy)[0]}
+
     @property
     def n_busy(self) -> int:
         return int(self.busy.sum())

@@ -11,7 +11,9 @@ across engine instances / graph reloads so a stale graph never answers.
 Entries may carry a time-to-live: for mutable graphs the engine sets a
 default TTL and every ``get`` past an entry's deadline treats it as a miss
 (counted in ``expired``). ``ttl=None`` entries never expire (the classic
-immutable-graph behavior).
+immutable-graph behavior). ``len(cache)`` and ``key in cache`` share
+``get``'s view of expiry: expired entries are purged (and counted) rather
+than reported live.
 """
 from __future__ import annotations
 
@@ -43,15 +45,34 @@ class LRUCache:
         self.expired = 0
 
     def __len__(self) -> int:
+        """Live entries only: expired entries are purged (and counted in
+        ``expired``) first, so ``len`` always agrees with what ``get``
+        would actually serve."""
+        self._purge_expired()
         return len(self._data)
 
     def __contains__(self, key) -> bool:
+        """Membership with ``get`` semantics: an expired entry is purged
+        (counted in ``expired``) and reported absent -- ``k in cache`` can
+        never promise a value that ``get`` would then refuse."""
         entry = self._data.get(key)
-        return entry is not None and not self._is_expired(entry)
+        if entry is None:
+            return False
+        if self._is_expired(entry):
+            del self._data[key]
+            self.expired += 1
+            return False
+        return True
 
     def _is_expired(self, entry) -> bool:
         deadline = entry[1]
         return deadline is not None and self._clock() >= deadline
+
+    def _purge_expired(self) -> None:
+        dead = [k for k, e in self._data.items() if self._is_expired(e)]
+        for k in dead:
+            del self._data[k]
+            self.expired += 1
 
     def get(self, key):
         """Value for key, refreshing recency; None on miss or expiry."""

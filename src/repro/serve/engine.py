@@ -28,11 +28,23 @@ Three execution dimensions, the first two picked at construction:
   (``track_levels=False``): pure lane words, no level scatter, no per-edge
   work counters. Mixed batches keep levels for everyone and unpack per
   kind.
+
+On top of refill scheduling, ``overlap=True`` drives sessions through the
+overlapped host/device pipeline (fused ``sweep_block``-sweep device blocks
+that stop exactly at lane-retirement boundaries + a speculative next block
+in flight while the host unpacks -- bit-identical schedule and counters,
+fewer round trips), and ``submit_stream`` / ``poll`` / ``drain_stream``
+feed and drain the same lane word incrementally instead of batch-at-a-time
+(see README.md, "Overlapped host/device pipeline").
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field, replace as _dc_replace
+from typing import Any
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bfs as B, comm as C, engine as E, msbfs as M
@@ -41,7 +53,16 @@ from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
 
 from .batcher import LaneScheduler
 from .cache import LRUCache
-from .queries import MAX_TARGETS, Query, QueryKind, as_query, unpack_result
+from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
+                      unpack_result)
+
+
+def _is_ready(x) -> bool:
+    """True once a device array's value is available (non-blocking); arrays
+    without readiness introspection report ready and the caller falls back
+    to a blocking fetch."""
+    probe = getattr(x, "is_ready", None)
+    return True if probe is None else bool(probe())
 
 
 @dataclass
@@ -66,6 +87,16 @@ class ServeStats:
     natural frontier exhaustion -- attributed per kind in
     ``early_stops_by_kind`` -- and ``reach_fast_batches`` counts batches
     or drain sessions served by the levels-free reachability variant.
+    ``dedup_hits`` counts queries dropped as exact duplicates by the
+    refill/stream entry points (both :meth:`run_refill` and
+    :meth:`run_refill_queries` dedup-with-stats; duplicate submissions
+    collapse onto the surviving query's result).
+
+    Overlapped-pipeline counters (``overlap=True`` engines and the
+    streaming API): ``sweep_blocks`` counts fused device dispatches --
+    ``sweeps / sweep_blocks`` is the realized fusion factor. The pipeline
+    never changes the traversal schedule, so ``sweeps`` and every wire
+    counter stay bit-identical to the per-sweep driver.
 
     Wire-volume counters (the comm layer's per-sweep accounting summed
     over every traversal this engine ran; ``comm/base.py`` byte
@@ -90,6 +121,8 @@ class ServeStats:
     early_stops: int = 0      # lanes retired via depth-cap/target latch
     reach_fast_batches: int = 0
     component_hits: int = 0   # reachability answers reused across sources
+    dedup_hits: int = 0       # duplicate submissions detected (refill/stream)
+    sweep_blocks: int = 0     # fused device dispatches (pipelined driver)
     kind_counts: dict = field(default_factory=dict)
     early_stops_by_kind: dict = field(default_factory=dict)
     wire_delegate_bytes: int = 0
@@ -134,6 +167,8 @@ class ServeStats:
             "early_stops": self.early_stops,
             "reach_fast_batches": self.reach_fast_batches,
             "component_hits": self.component_hits,
+            "dedup_hits": self.dedup_hits,
+            "sweep_blocks": self.sweep_blocks,
             "kind_counts": dict(self.kind_counts),
             "early_stops_by_kind": dict(self.early_stops_by_kind),
             "wire_delegate_bytes": self.wire_delegate_bytes,
@@ -142,6 +177,65 @@ class ServeStats:
             "nn_sparse_sweeps": self.nn_sparse_sweeps,
             "nn_overflow": self.nn_overflow,
         }
+
+
+@dataclass
+class _Session:
+    """Host-side bookkeeping for one refill drain / stream session.
+
+    Shared by the synchronous per-sweep driver, the overlapped pipelined
+    driver, and the streaming API -- retirement-boundary processing
+    (:meth:`BFSServeEngine._process_boundary`) is one code path, which is
+    what guarantees the pipelined schedule (and therefore every
+    ``ServeStats`` counter) is bit-identical to the per-sweep driver's.
+    """
+
+    cfg: M.MSBFSConfig
+    reach_fast: bool
+    sched: LaneScheduler
+    state: Any                       # device MSBFSState (latest processed)
+    step_once: Any                   # per-sweep runner (sync driver)
+    block: Any = None                # fused k-sweep runner (pipelined)
+    block_donated: Any = None        # same, donating its input state
+    stream: bool = False
+    results: dict = field(default_factory=dict)
+    expected: dict = field(default_factory=dict)  # item -> (lane, generation)
+    seen: set = field(default_factory=set)        # stream dedup identity
+    undelivered: deque = field(default_factory=deque)  # stream delivery queue
+    cached: set = field(default_factory=set)      # already in (or exempt
+                                                  # from) the engine LRU --
+                                                  # never re-put, so a
+                                                  # delivery can't slide a
+                                                  # TTL deadline forward
+    cur: Any = None         # pipelined: in-flight block to process next
+    head: Any = None        # pipelined: speculative successor block
+    has_reach: bool = False  # session saw a REACHABILITY query (gates defer)
+    busy_at_dispatch: int = 0
+    exclusive: bool = False  # state is exclusively owned (safe to donate)
+    it_prev: int = 0        # device `it` at the last processed boundary
+    sweeps: int = 0         # session sweep count (guard)
+    n_queries_seen: int = 0  # guard scaling (grows with stream submits)
+    lanes_seeded: int = 0   # stream padding accounting at close
+
+    @property
+    def guard(self) -> int:
+        return (self.cfg.max_iters * max(1, self.n_queries_seen)
+                + self.sched.width)
+
+    def complete(self, q, res, skip_cache: bool = False) -> None:
+        """Record a finished result. Stream sessions also queue it for the
+        next delivery. ``skip_cache`` marks results resolved from an
+        existing memo at submit time (LRU hits, already-mapped components)
+        which must not be (re)written to the engine LRU -- a delivery must
+        never slide a TTL deadline forward. Results computed (or first
+        materialized) by this session -- traversals and boundary-time
+        component answers -- are cached once, exactly like
+        ``submit_many``'s served dict."""
+        self.results[q] = res
+        if self.stream:
+            self.undelivered.append(q)
+            if skip_cache:
+                self.cached.add(q)
 
 
 class BFSServeEngine:
@@ -169,6 +263,18 @@ class BFSServeEngine:
         degenerate to the classic engine.
     refill : serve misses through the continuously-fed lane-refill pipeline
         instead of batch-at-a-time traversals.
+    overlap : drive refill sessions through the overlapped host/device
+        pipeline: sweeps run in fused ``sweep_block``-sized device blocks
+        that stop *exactly* at lane-retirement boundaries, and a
+        speculative next block is kept in flight while the host processes
+        the previous block's ``lane_active`` word, retired-lane gathers,
+        and reseed descriptors (the host only ever blocks on the lagging
+        handle, never the pipeline head). The traversal schedule -- and so
+        ``ServeStats.sweeps`` and the wire-byte counters -- is
+        bit-identical to the per-sweep driver. Implies nothing unless
+        ``refill=True`` (batch mode already runs one fused device loop).
+    sweep_block : sweeps fused per device dispatch when ``overlap=True``
+        (the convergence-poll cadence k; retirements still land exactly).
     specialize_reachability : compile homogeneous REACHABILITY batches to
         the levels-free msBFS variant (lazily, on first use).
     reuse_components : memoize reachability answers *per connected
@@ -197,6 +303,8 @@ class BFSServeEngine:
         mesh=None,
         partition_axes=None,
         refill: bool = False,
+        overlap: bool = False,
+        sweep_block: int = 8,
         specialize_reachability: bool = True,
         reuse_components: bool = True,
     ):
@@ -215,6 +323,14 @@ class BFSServeEngine:
                 "pass a track_levels=True, enable_targets=True cfg; the "
                 "engine derives the specialized per-batch variants itself")
         self.refill = bool(refill)
+        self.overlap = bool(overlap)
+        if int(sweep_block) < 1:
+            raise ValueError(f"sweep_block must be >= 1, got {sweep_block}")
+        self.sweep_block = int(sweep_block)
+        # XLA:CPU ignores buffer donation (and warns); only donate where it
+        # actually buys in-place sweeps
+        self._donate = jax.default_backend() != "cpu"
+        self._stream: _Session | None = None
         self.specialize_reachability = bool(specialize_reachability)
         self.reuse_components = bool(reuse_components)
         self._comp_id = np.full(pg.n, -1, dtype=np.int32)
@@ -228,7 +344,10 @@ class BFSServeEngine:
         self.cache = LRUCache(cache_capacity, ttl=cache_ttl)
         self.stats = ServeStats()
         self._layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
-        self._dvids = np.asarray(pg.delegate_vids).reshape(-1)[: max(pg.d, 1)]
+        # exactly the pg.d real delegate ids -- *empty* on a delegate-free
+        # graph (the replicated arrays pad to max(d, 1) for static shapes,
+        # but a padded id here would misclassify a source as a delegate)
+        self._dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
 
         self.mesh = mesh
         self.sharded = False
@@ -242,7 +361,6 @@ class BFSServeEngine:
                     raise ValueError(
                         f"mesh axes {axes} span {ndev} devices but the graph "
                         f"has p={pg.p} partitions")
-                import jax
                 from jax.sharding import NamedSharding, PartitionSpec as P
 
                 def put(tree):
@@ -263,6 +381,9 @@ class BFSServeEngine:
         # lazily on first use -- target-free batches compile the target
         # bookkeeping away, homogeneous REACHABILITY batches the levels
         self._runners: dict[M.MSBFSConfig, tuple] = {}
+        # fused k-sweep block runners for the overlapped pipeline, keyed the
+        # same way: (block, block_donated)
+        self._block_runners: dict[M.MSBFSConfig, tuple] = {}
 
     # -- runner construction ------------------------------------------------
     def _build_runners(self, cfg: M.MSBFSConfig) -> tuple:
@@ -286,6 +407,20 @@ class BFSServeEngine:
         if cfg not in self._runners:
             self._runners[cfg] = self._build_runners(cfg)
         return self._runners[cfg]
+
+    def _block_pair(self, cfg: M.MSBFSConfig) -> tuple:
+        """(block, block_donated) fused k-sweep runners for ``cfg``."""
+        if cfg not in self._block_runners:
+            k = self.sweep_block
+            if self.sharded:
+                mk = lambda don: M.make_sharded_msbfs_block(
+                    self.mesh, self._axes, cfg, k, donate=don)
+            else:
+                mk = lambda don: M.make_msbfs_block_emulated(
+                    cfg, k, donate=don)
+            blk = mk(False)
+            self._block_runners[cfg] = (blk, mk(True) if self._donate else blk)
+        return self._block_runners[cfg]
 
     def _reach_fast(self, queries) -> bool:
         return (self.specialize_reachability
@@ -392,120 +527,459 @@ class BFSServeEngine:
 
     def run_refill(self, sources: np.ndarray) -> dict:
         """Classic full-levels drain (kept for direct callers): dedups
-        ``sources`` and returns {source: levels [n] int32}."""
+        ``sources`` (counted in ``stats.dedup_hits``) and returns
+        {source: levels [n] int32}."""
         sources = M.validate_sources(self.pg, sources)
-        qs = [as_query(int(s))
-              for s in dict.fromkeys(sources.tolist())]
+        qs = [as_query(int(s)) for s in sources.tolist()]
         return {q.source: lev
                 for q, lev in self.run_refill_queries(qs).items()}
 
     def run_refill_queries(self, queries) -> dict:
-        """Drain deduped typed ``queries`` through the continuously-fed lane
+        """Drain typed ``queries`` through the continuously-fed lane
         pipeline: {query: per-kind result}.
+
+        Exact duplicate descriptors are dropped up front (counted in
+        ``stats.dedup_hits``; queries of different kinds or params on the
+        same source are distinct) -- the same dedup-with-stats semantics as
+        :meth:`run_refill`, so the two entry points can never disagree.
 
         Lanes are retired the sweep their early-exit latches or their
         frontier empties, and reseeded from the pending queue at the next
         sweep boundary; results are attributed through the scheduler's
         (lane, generation) bookkeeping. Kinds mix freely across refill
         generations; a homogeneously-REACHABILITY session runs on the
-        levels-free variant.
+        levels-free variant. ``overlap=True`` engines drain through the
+        pipelined driver (same schedule, same counters, fewer host
+        round trips).
         """
-        queries = list(queries)
+        queries, dups = dedupe([as_query(q) for q in queries])
+        self.stats.dedup_hits += dups
         if not queries:
             return {}
-        if len(set(queries)) != len(queries):
-            raise ValueError("run_refill_queries needs deduped queries")
         self._validate_queries(queries)
-        reach_fast = self._reach_fast(queries)
-        cfg = self._session_cfg(queries)
-        _, step_once = self._runner_pair(cfg)
+        sess = self._open_session(queries)
+        if self.overlap:
+            while sess.sched.n_busy:
+                self._pipeline_advance(sess)
+        else:
+            self._drain_sync(sess)
+        self._close_session(sess)
+        return sess.results
+
+    # -- session machinery (shared by sync / pipelined / streaming) ---------
+    def _open_session(self, queries, stream: bool = False) -> _Session:
+        """Build the per-session state: pick the static msBFS variant from
+        the opening query set, seed the initial lane fill, and account the
+        session-open stats exactly as the classic drain did. A stream
+        session opens with an empty lane word (queries are enqueued by
+        ``submit_stream`` after cache/dedup filtering and seeded by
+        ``poll``). A homogeneously-REACHABILITY opening set compiles the
+        levels-free fast path (and the session then only accepts that
+        kind); any other stream opening compiles the fully-general variant
+        -- a stream feed is open-ended, so later MULTI_TARGET submissions
+        must be seedable without a retrace."""
         w = self.cfg.n_queries
-        sched = LaneScheduler(w, pending=queries)
-        state = self._put(M.init_multi_state(self.pg, [], cfg))
+        reach_fast = self._reach_fast(queries)
+        if stream and not reach_fast:
+            cfg = self.cfg
+        else:
+            cfg = self._session_cfg(queries)
+        _, step_once = self._runner_pair(cfg)
+        sess = _Session(
+            cfg=cfg, reach_fast=reach_fast,
+            sched=LaneScheduler(w, pending=() if stream else queries),
+            state=self._put(M.init_multi_state(self.pg, [], cfg)),
+            step_once=step_once, stream=stream,
+            n_queries_seen=0 if stream else len(queries), exclusive=True,
+            has_reach=any(q.kind is QueryKind.REACHABILITY for q in queries),
+        )
+        if self.overlap or stream:
+            sess.block, sess.block_donated = self._block_pair(cfg)
         if reach_fast:
             self.stats.reach_fast_batches += 1
-
-        import jax.numpy as jnp
-
-        def reseed(state, assignments):
-            desc = self._seed_descriptors(assignments)
-            return M.reseed_lanes(state, *map(jnp.asarray, desc))
-
-        state = reseed(state, sched.fill_idle())
+        self._fill(sess, initial=True)
         self.stats.batches += 1
-        self.stats.lanes_used += sched.n_busy
-        self.stats.lanes_padded += max(0, w - len(queries))
+        if not stream:
+            self.stats.lanes_padded += max(0, w - len(queries))
+        return sess
 
-        results: dict = {}
-        expected: dict = {
-            sched.lane_item[q]: (q, int(sched.lane_generation[q]))
-            for q in np.nonzero(sched.busy)[0]}
-        sweeps = 0
-        guard = self.cfg.max_iters * max(1, len(queries)) + w
+    def _reseed(self, sess: _Session, assignments):
+        desc = self._seed_descriptors(assignments)
+        reseed = (M.reseed_lanes_donated if self._donate and sess.exclusive
+                  else M.reseed_lanes)
+        return reseed(sess.state, *map(jnp.asarray, desc))
+
+    def _fill(self, sess: _Session, initial: bool = False) -> list:
+        """Assign pending queries to idle lanes and reseed them on device;
+        ``initial`` fills count toward ``lanes_used`` only, later ones are
+        mid-flight ``refills``."""
+        fresh = sess.sched.fill_idle()
+        if fresh:
+            sess.state = self._reseed(sess, fresh)
+            sess.exclusive = True
+            self.stats.lanes_used += len(fresh)
+            sess.lanes_seeded += len(fresh)
+            if not initial:
+                self.stats.refills += len(fresh)
+            for a in fresh:
+                sess.expected[a.item] = (a.lane, a.generation)
+        return fresh
+
+    def _process_boundary(self, sess: _Session, active: np.ndarray,
+                          defer: bool = False):
+        """Retirement-boundary processing on ``sess.state`` (whose
+        ``lane_active`` word is ``active``): retire every newly converged
+        lane, attribute results through the (lane, generation) bookkeeping,
+        apply per-component reachability reuse, and refill idle lanes from
+        the pending queue. Returns ``(changed, deferred)``: ``changed`` is
+        True iff the scheduler changed (the pipelined driver must then
+        discard its frozen speculative block); ``deferred`` carries the
+        retired lanes' gather/unpack work when ``defer=True`` so the
+        pipelined driver can dispatch the next block *before* the host
+        touches the level columns (finish with :meth:`_finish_boundary`).
+
+        Deferral is only requested when per-component reuse cannot observe
+        this boundary (``reuse_components`` off, or no REACHABILITY query
+        in the session): reuse must register the freshly gathered mask
+        before the cut/pending/refill decisions, so those boundaries keep
+        the eager order and stay schedule-identical to the sync driver.
+        """
+        sched, results = sess.sched, sess.results
+        finished = sched.busy & ~active
+        if not finished.any():
+            return False, None
+        fin_lanes = np.nonzero(finished)[0]
+        pre_state = sess.state
+        if not defer:
+            # only the retired lanes' columns leave the device: [k, n]
+            if sess.reach_fast:
+                rows = M.gather_reachable_multi(self.pg, pre_state,
+                                                lanes=fin_lanes)
+            else:
+                rows = M.gather_levels_multi(self.pg, pre_state,
+                                             lanes=fin_lanes)
+        stops = np.asarray(pre_state.lane_stop)[0]
+        fins = []
+        for i, q in enumerate(fin_lanes):
+            item, gen = sched.retire(int(q))
+            assert sess.expected.pop(item) == (int(q), gen), (
+                "lane generation bookkeeping out of sync")
+            fins.append(item)
+            if not defer:
+                sess.complete(item, unpack_result(
+                    item, rows[i], packed_reach=sess.reach_fast))
+                self._register_component(item, results[item])
+            if stops[q]:
+                self.stats.note_early_stop(item.kind)
+        if self.reuse_components:
+            # a freshly mapped component may cover other reachability
+            # queries: answer pending ones without a lane, and cut
+            # *active* lanes short -- their traversal result is already
+            # known, so a deep straggler stops costing sweeps the
+            # moment any same-component lane retires
+            for lane in np.nonzero(sched.busy)[0]:
+                mask = self._component_of(as_query(sched.lane_item[lane]))
+                if mask is not None:
+                    item, _ = sched.retire(int(lane))
+                    sess.expected.pop(item)
+                    sess.complete(item, np.array(mask))
+                    self.stats.component_hits += 1
+            if sched.pending:
+                keep = []
+                for item in sched.pending:
+                    mask = self._component_of(as_query(item))
+                    if mask is None:
+                        keep.append(item)
+                    else:
+                        sess.complete(item, np.array(mask))
+                        self.stats.component_hits += 1
+                sched.pending.clear()
+                sched.pending.extend(keep)
+        self._fill(sess)
+        return True, ((pre_state, fin_lanes, fins) if defer else None)
+
+    def _finish_boundary(self, sess: _Session, deferred) -> None:
+        """The deferred half of a retirement boundary: gather the retired
+        lanes' columns from the *pre-reseed* state and unpack per kind --
+        run after the next block is already in flight, so the host-side
+        unpacking overlaps the device's next sweeps."""
+        pre_state, fin_lanes, fins = deferred
+        if sess.reach_fast:
+            rows = M.gather_reachable_multi(self.pg, pre_state, lanes=fin_lanes)
+        else:
+            rows = M.gather_levels_multi(self.pg, pre_state, lanes=fin_lanes)
+        for i, item in enumerate(fins):
+            sess.complete(item, unpack_result(item, rows[i],
+                                              packed_reach=sess.reach_fast))
+            self._register_component(item, sess.results[item])
+
+    def _close_session(self, sess: _Session) -> None:
+        self.stats.note_traversal(sess.state)
+        if sess.stream:
+            self.stats.lanes_padded += max(
+                0, self.cfg.n_queries - sess.lanes_seeded)
+
+    # -- synchronous per-sweep driver ---------------------------------------
+    def _drain_sync(self, sess: _Session) -> None:
+        """One host round trip per sweep: step, poll ``lane_active``,
+        process retirements (the pre-pipeline driver, kept as the
+        ground-truth schedule the overlapped driver must reproduce)."""
+        sched = sess.sched
+        w = self.cfg.n_queries
         while sched.n_busy:
             busy_now = sched.n_busy
-            state = step_once(self.pgv, self.plan, state)
-            sweeps += 1
+            sess.state = sess.step_once(self.pgv, self.plan, sess.state)
+            sess.exclusive = False
+            sess.sweeps += 1
             self.stats.sweeps += 1
             self.stats.lane_sweeps_busy += busy_now
             self.stats.lane_sweeps_total += w
-            if sweeps > guard:
+            if sess.sweeps > sess.guard:
                 raise RuntimeError(
-                    f"refill pipeline exceeded {guard} sweeps with "
+                    f"refill pipeline exceeded {sess.guard} sweeps with "
                     f"{sched.n_busy} lanes still busy")
-            active = np.asarray(state.lane_active)[0]
-            finished = sched.busy & ~active
-            if not finished.any():
+            active = np.asarray(sess.state.lane_active)[0]
+            self._process_boundary(sess, active)
+
+    # -- overlapped pipelined driver ----------------------------------------
+    def _pipeline_advance(self, sess: _Session, wait: bool = True) -> bool:
+        """Advance the overlapped pipeline by one block boundary.
+
+        Dispatches a fused ``sweep_block``-sweep block (plus a speculative
+        successor chained behind it), then ready-checks the *lagging*
+        handle -- the earlier block's output -- never the pipeline head.
+        While the host unpacks retired lanes and builds reseed descriptors,
+        the successor keeps the device busy. The fused block stops at the
+        exact sweep any watched lane converges, and a speculative block
+        dispatched across a retirement boundary freezes itself (zero
+        sweeps), so the traversal schedule is bit-identical to
+        :meth:`_drain_sync`.
+
+        Returns False without processing when ``wait=False`` and the
+        lagging handle isn't ready yet (the streaming ``poll(wait=False)``
+        path); True after a boundary was processed.
+        """
+        sched = sess.sched
+        w = self.cfg.n_queries
+        if sess.cur is None:
+            if not sched.n_busy:
+                if not sched.pending:
+                    return False
+                self._fill(sess, initial=sess.sweeps == 0)
+            watch = np.ascontiguousarray(sched.busy)
+            blockfn = (sess.block_donated if self._donate and sess.exclusive
+                       else sess.block)
+            sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
+            sess.exclusive = False
+            # no speculation on a fresh dispatch: this site is only reached
+            # right after a scheduler change (or at session start), where a
+            # head would be a doomed (frozen) dispatch if another
+            # retirement lands. The quiet-boundary branch below starts
+            # speculating once a no-retirement streak begins -- deep-tail
+            # stretches, exactly where a chained head keeps the device
+            # busy through the host's fetch.
+            sess.head = None
+            sess.busy_at_dispatch = sched.n_busy
+        if not wait and not _is_ready(sess.cur.lane_active):
+            return False
+        cur = sess.cur
+        jax.block_until_ready(cur.lane_active)   # the lagging handle only
+        active = np.asarray(cur.lane_active)[0]
+        if (sched.busy & ~active).any():
+            # the block early-stopped at the retirement sweep: read the
+            # executed count off the device iteration counter
+            it_cur = int(np.asarray(cur.it)[0])
+        else:
+            # no watched lane retired, so the fused loop ran its full k
+            # sweeps -- no second device fetch needed
+            it_cur = sess.it_prev + self.sweep_block
+        ran = it_cur - sess.it_prev
+        busy_now = sess.busy_at_dispatch
+        sess.it_prev = it_cur
+        sess.sweeps += ran
+        self.stats.sweeps += ran
+        self.stats.lane_sweeps_busy += busy_now * ran
+        self.stats.lane_sweeps_total += w * ran
+        self.stats.sweep_blocks += 1
+        if sess.sweeps > sess.guard:
+            raise RuntimeError(
+                f"refill pipeline exceeded {sess.guard} sweeps with "
+                f"{sched.n_busy} lanes still busy")
+        sess.state = cur
+        defer = not (self.reuse_components and sess.has_reach)
+        changed, deferred = self._process_boundary(sess, active, defer=defer)
+        if (not changed and sess.stream and sched.pending
+                and sched.n_busy < w):
+            # a stream session may have been fed mid-flight while lanes sat
+            # idle: seed them at this (quiet) block boundary instead of
+            # letting new queries starve behind a deep straggler. Batch
+            # drains never hit this (their pending queue only outlives a
+            # fill when every lane is busy), so the sync-schedule parity of
+            # run_refill_queries is untouched.
+            changed = bool(self._fill(sess))
+        if changed:
+            # a speculative head (if any) saw a converged watched lane at
+            # entry and froze (zero sweeps): drop it and redispatch from
+            # the post-reseed state *before* unpacking the retired lanes,
+            # so the host-side gathers run under the next block's sweeps
+            sess.cur = None
+            sess.head = None
+            if sched.n_busy:
+                watch = np.ascontiguousarray(sched.busy)
+                blockfn = (sess.block_donated
+                           if self._donate and sess.exclusive else sess.block)
+                sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
+                sess.exclusive = False
+                sess.busy_at_dispatch = sched.n_busy
+            if deferred is not None:
+                self._finish_boundary(sess, deferred)
+        else:
+            if ran == 0:
+                raise RuntimeError(
+                    "overlapped pipeline made no progress (no sweeps ran "
+                    "and no lane retired)")
+            # no retirement: the head (when speculated) is the true
+            # continuation; chain the next speculative block behind it
+            watch = np.ascontiguousarray(sched.busy)
+            nxt = sess.head
+            if nxt is None:
+                nxt = sess.block(self.pgv, self.plan, cur, watch)
+            sess.cur = nxt
+            sess.head = sess.block(self.pgv, self.plan, nxt, watch)
+            sess.busy_at_dispatch = sched.n_busy
+        return True
+
+    # -- streaming API ------------------------------------------------------
+    def submit_stream(self, queries) -> int:
+        """Feed typed queries into the continuously-fed serving stream.
+
+        Opens a stream session on first use (the static msBFS variant --
+        levels-free reachability, target support -- is picked from this
+        first submission's kinds; a later submission needing a different
+        variant raises, ``drain_stream`` first). Cache, component and exact
+        in-session duplicate hits are resolved immediately without a lane
+        (counted in ``cache_hits`` / ``component_hits`` / ``dedup_hits``)
+        and delivered by the next :meth:`poll`. Returns the number of
+        queries enqueued for traversal.
+
+        Unlike :meth:`submit_many`, this never blocks on a traversal:
+        lanes are seeded and sweeps dispatched by :meth:`poll` /
+        :meth:`drain_stream`, so callers interleave feeding and draining.
+        """
+        qs = [as_query(q) for q in queries]
+        if not qs:
+            return 0
+        self._validate_queries(qs)
+        if self._stream is not None:
+            sess = self._stream
+            if sess.reach_fast and any(q.kind is not QueryKind.REACHABILITY
+                                       for q in qs):
+                raise ValueError(
+                    "stream session is specialized to levels-free "
+                    "REACHABILITY; drain_stream() before submitting other "
+                    "kinds")
+            if not sess.cfg.enable_targets and any(
+                    q.kind is QueryKind.MULTI_TARGET for q in qs):
+                raise ValueError(
+                    "stream session was compiled without target support; "
+                    "drain_stream() before submitting MULTI_TARGET queries")
+        else:
+            self._stream = self._open_session(qs, stream=True)
+            sess = self._stream
+        self.stats.queries += len(qs)
+        for q in qs:
+            self.stats.note_kind(q.kind)
+        enqueued = 0
+        for q in qs:
+            if q in sess.seen:
+                # duplicate within the session. Completed-but-undelivered
+                # and in-flight/pending twins deliver once on their own; a
+                # result already handed out (and released -- the session
+                # keeps no delivered arrays) is re-answered from the LRU,
+                # or re-enqueued when nothing holds it anymore
+                self.stats.dedup_hits += 1
+                if q in sess.results:
+                    sess.undelivered.append(q)
+                elif q in sess.expected or q in sess.sched.pending:
+                    pass
+                else:
+                    hit = self.cache.get(q.key(self.graph_id))
+                    if hit is not None:
+                        self.stats.cache_hits += 1
+                        sess.complete(q, hit, skip_cache=True)
+                    else:
+                        sess.cached.discard(q)   # fresh traversal recaches
+                        sess.sched.submit_stream([q])
+                        sess.n_queries_seen += 1
+                        enqueued += 1
                 continue
-            fin_lanes = np.nonzero(finished)[0]
-            # only the retired lanes' columns leave the device: [k, n]
-            if reach_fast:
-                rows = M.gather_reachable_multi(self.pg, state, lanes=fin_lanes)
-            else:
-                rows = M.gather_levels_multi(self.pg, state, lanes=fin_lanes)
-            stops = np.asarray(state.lane_stop)[0]
-            for i, q in enumerate(fin_lanes):
-                item, gen = sched.retire(int(q))
-                assert expected.pop(item) == (int(q), gen), (
-                    "lane generation bookkeeping out of sync")
-                results[item] = unpack_result(item, rows[i],
-                                              packed_reach=reach_fast)
-                self._register_component(item, results[item])
-                if stops[q]:
-                    self.stats.note_early_stop(item.kind)
-            if self.reuse_components:
-                # a freshly mapped component may cover other reachability
-                # queries: answer pending ones without a lane, and cut
-                # *active* lanes short -- their traversal result is already
-                # known, so a deep straggler stops costing sweeps the
-                # moment any same-component lane retires
-                for lane in np.nonzero(sched.busy)[0]:
-                    mask = self._component_of(as_query(sched.lane_item[lane]))
-                    if mask is not None:
-                        item, _ = sched.retire(int(lane))
-                        expected.pop(item)
-                        results[item] = np.array(mask)
-                        self.stats.component_hits += 1
-                if sched.pending:
-                    keep = []
-                    for item in sched.pending:
-                        mask = self._component_of(as_query(item))
-                        if mask is None:
-                            keep.append(item)
-                        else:
-                            results[item] = np.array(mask)
-                            self.stats.component_hits += 1
-                    sched.pending.clear()
-                    sched.pending.extend(keep)
-            fresh = sched.fill_idle()
-            if fresh:
-                state = reseed(state, fresh)
-                self.stats.refills += len(fresh)
-                self.stats.lanes_used += len(fresh)
-                for a in fresh:
-                    expected[a.item] = (a.lane, a.generation)
-        self.stats.note_traversal(state)
-        return results
+            sess.seen.add(q)
+            hit = self.cache.get(q.key(self.graph_id))
+            if hit is not None:
+                self.stats.cache_hits += 1
+                sess.complete(q, hit, skip_cache=True)
+                continue
+            mask = self._component_of(q)
+            if mask is not None:
+                self.stats.component_hits += 1
+                sess.complete(q, np.array(mask), skip_cache=True)
+                continue
+            if q.kind is QueryKind.REACHABILITY:
+                sess.has_reach = True
+            sess.sched.submit_stream([q])
+            sess.n_queries_seen += 1
+            enqueued += 1
+        return enqueued
+
+    def poll(self, wait: bool = True) -> dict:
+        """Advance the stream by (at most) one pipeline boundary and return
+        the newly completed results: {query: per-kind result}.
+
+        ``wait=False`` never blocks: if the lagging block handle isn't
+        ready yet, only already-completed results (cache/component/dedup
+        hits, earlier retirements) are returned. Returned arrays are owned
+        copies; completed results are cached under the engine's LRU keys.
+        """
+        sess = self._stream
+        if sess is None:
+            return {}
+        if sess.sched.n_busy or sess.sched.pending:
+            self._pipeline_advance(sess, wait=wait)
+        return self._deliver(sess)
+
+    def drain_stream(self) -> dict:
+        """Run the stream to completion, close the session, and return
+        every result not yet handed out by :meth:`poll`."""
+        sess = self._stream
+        if sess is None:
+            return {}
+        while sess.sched.n_busy or sess.sched.pending:
+            self._pipeline_advance(sess)
+        self._stream = None
+        self._close_session(sess)
+        return self._deliver(sess)
+
+    def _deliver(self, sess: _Session) -> dict:
+        """Drain the undelivered queue: O(newly completed), not O(session
+        history). Each session-computed result is written to the LRU
+        exactly once (submit-time memo hits never refresh a TTL), then
+        *released* from the session -- a long-lived stream stays
+        O(in-flight) in host memory, not O(every query ever streamed);
+        later re-submissions are answered from the LRU or re-traversed."""
+        own = lambda r: dict(r) if isinstance(r, dict) else np.array(r)
+        out = {}
+        while sess.undelivered:
+            q = sess.undelivered.popleft()
+            if q in out:
+                continue
+            res = sess.results.pop(q, None)
+            if res is None:
+                continue            # stale queue entry: delivered earlier
+            if q not in sess.cached:
+                self.cache.put(q.key(self.graph_id), res)
+                sess.cached.add(q)
+            out[q] = own(res)
+        return out
 
     # -- public API ---------------------------------------------------------
     def submit_many(self, queries) -> list:
@@ -605,8 +1079,14 @@ class BFSServeEngine:
             st = self._put(M.init_multi_state(self.pg, [0], cfg))
             if self.refill:
                 step_once(self.pgv, self.plan, st)
-                import jax.numpy as jnp
                 desc = self._seed_descriptors([])
                 M.reseed_lanes(st, *map(jnp.asarray, desc))
+                if self.overlap:
+                    # all-ones watch with only lane 0 active: the block's
+                    # stop condition fires at entry, so this compiles the
+                    # fused loop without running sweeps
+                    block, _ = self._block_pair(cfg)
+                    block(self.pgv, self.plan, st,
+                          np.ones(self.cfg.n_queries, dtype=bool))
             else:
                 run_full(self.pgv, self.plan, st)

@@ -102,6 +102,42 @@ def as_query(q) -> Query:
     return Query(source=int(q))
 
 
+def dedupe(queries) -> tuple:
+    """Order-preserving exact-descriptor dedup: ``(unique, n_dropped)``.
+
+    Identity is the full descriptor (kind + params + source), so two kinds
+    on the same source never collapse -- only byte-identical repeats do.
+    Every refill/stream entry point routes duplicates through this one
+    helper and accounts ``n_dropped`` in ``ServeStats.dedup_hits``, so the
+    engine's dedup semantics can never diverge between entry points.
+    """
+    unique = list(dict.fromkeys(queries))
+    return unique, len(queries) - len(unique)
+
+
+def oracle_check(g, q: Query, answer) -> None:
+    """Assert ``answer`` matches the numpy oracle for ``q`` on graph ``g``.
+
+    The one per-kind oracle dispatch shared by benchmarks and tests --
+    adding a :class:`QueryKind` means extending this (and the oracle), not
+    hunting down per-file copies of the same if/elif ladder.
+    """
+    from repro.core import oracle as O
+
+    if q.kind is QueryKind.LEVELS:
+        np.testing.assert_array_equal(answer, O.bfs_levels(g, q.source))
+    elif q.kind is QueryKind.REACHABILITY:
+        np.testing.assert_array_equal(answer, O.reachable_mask(g, q.source))
+    elif q.kind is QueryKind.DISTANCE_LIMITED:
+        np.testing.assert_array_equal(
+            answer, O.bfs_levels_limited(g, q.source, q.max_depth))
+    elif q.kind is QueryKind.MULTI_TARGET:
+        assert answer == O.target_depths(g, q.source, q.targets), (
+            q, answer)
+    else:  # pragma: no cover - new kinds must extend this dispatch
+        raise NotImplementedError(q.kind)
+
+
 def unpack_result(q: Query, row: np.ndarray, *, packed_reach: bool = False):
     """Per-kind result from one unpacked lane column ``row`` [n].
 

@@ -73,7 +73,13 @@ def test_lm_prefill_smoke(arch):
     assert logits.shape[0] == 4 and bool(jnp.isfinite(logits).all())
 
 
-@pytest.mark.parametrize("arch", ["gcn-cora", "meshgraphnet", "graphcast", "mace"])
+@pytest.mark.parametrize("arch", [
+    "gcn-cora", "meshgraphnet", "graphcast",
+    # the mace variant is the suite's single most expensive test (~13s) and
+    # its dist-engine coverage is duplicated by
+    # test_gnn_dist.py::test_dist_mace_matches_local, so it rides -m slow
+    pytest.param("mace", marks=pytest.mark.slow),
+])
 def test_gnn_dist_full_smoke(arch):
     """Degree-separated engine cell on the 1x1 mesh (p=1 partition)."""
     fn, args = build_cell(arch, "full_graph_sm", mesh1(), smoke=True)

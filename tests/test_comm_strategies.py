@@ -79,7 +79,10 @@ def test_delegate_or_strategies_two_axis_emulated(rows, nw, seed):
             np.testing.assert_array_equal(got[i], want), cfg
 
 
-@settings(max_examples=10, deadline=None)
+# 4 examples keep the shape diversity (p and n both vary) while capping the
+# per-example recompilation bill (3 ops x 4 strategies jitted per draw made
+# this the slowest comm test at max_examples=10)
+@settings(max_examples=4, deadline=None)
 @given(p=st.integers(2, 5), n=st.integers(1, 33), seed=st.integers(0, 10_000))
 def test_delegate_min_max_sum_strategies_vmap(p, n, seed):
     """The same strategy layer carries the single-source path's folds:

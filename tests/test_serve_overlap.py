@@ -1,0 +1,486 @@
+"""Overlapped host/device serving pipeline + streaming API + the serving
+correctness sweep: fused-block exactness at lane-retirement boundaries,
+sync/pipelined counter bit-identity, submit_stream/poll semantics,
+empty/single/W-exact-fit boundary pins, delegate-free source
+classification, and dedup-with-stats unification."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import msbfs as M
+from repro.core.oracle import bfs_levels, reachable_mask
+from repro.core.types import PartitionLayout
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.graphs.synthetic import with_tails
+from repro.launch.mesh import make_test_mesh
+from repro.serve import (BFSServeEngine, Query, QueryKind, dedupe,
+                         oracle_check)
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 host devices (run under the multi-device CI job)")
+
+
+@pytest.fixture(scope="module")
+def tailed():
+    core = rmat_graph(8, seed=11)
+    g, tips = with_tails(core, n_tails=2, length=24, seed=2)
+    return core, g, tips
+
+
+def make_engine(g, *, w=4, cache=0, **kw):
+    cfg = M.MSBFSConfig(n_queries=w, max_iters=96)
+    return BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                          cache_capacity=cache, refill=True, **kw)
+
+
+def mixed_queries(srcs):
+    tg = tuple(srcs[:2])
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=2),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tg)]
+    return [kinds[i % 4](int(s)) for i, s in enumerate(srcs)]
+
+
+# the per-kind oracle dispatch lives in repro.serve.queries.oracle_check
+check_answer = oracle_check
+
+
+def skewed_stream(core, g, tips, n_shallow=10):
+    shallow = pick_sources(core, n_shallow, seed=3)
+    return np.concatenate(
+        [[tips[0]], shallow[: n_shallow // 2], [tips[1]],
+         shallow[n_shallow // 2:]])
+
+
+# --------------------------------------------------- fused block exactness
+def test_block_step_stops_at_retirement(tailed):
+    """The fused k-sweep block must stop at the exact sweep a watched lane
+    converges: stepping the per-sweep driver to the same point produces a
+    bit-identical state."""
+    core, g, tips = tailed
+    eng = make_engine(g)
+    cfg = eng._session_cfg([Query(0)])
+    srcs = [int(tips[0]), int(pick_sources(core, 1, seed=5)[0]), 3]
+    st = M.init_multi_state(eng.pg, srcs, cfg)
+    block = M.make_msbfs_block_emulated(cfg, 64)
+    watch = np.zeros(4, dtype=bool)
+    watch[: len(srcs)] = True
+    out_block = block(eng.pgv, eng.plan, st, watch)
+    # a shallow lane converges long before the tail lane: the block stops
+    # at the first watched retirement, with the tail lane still active
+    active = np.asarray(out_block.lane_active)[0]
+    assert not active[watch].all() and active[0]
+    # replay per-sweep to the same iteration: states must match bit-for-bit
+    ran = int(np.asarray(out_block.it)[0])
+    assert 0 < ran < 64
+    st_ref = st
+    for _ in range(ran):
+        st_ref = M.msbfs_step_emulated(eng.pgv, eng.plan, st_ref, cfg)
+    for name in ("level_n", "level_d", "lane_active", "it", "lane_stop",
+                 "wire_delegate", "wire_nn"):
+        np.testing.assert_array_equal(np.asarray(getattr(out_block, name)),
+                                      np.asarray(getattr(st_ref, name)))
+    # one more per-sweep step would NOT have retired anything new earlier:
+    # the previous sweep still had every watched lane active
+    st_prev = st
+    for _ in range(ran - 1):
+        st_prev = M.msbfs_step_emulated(eng.pgv, eng.plan, st_prev, cfg)
+    assert np.asarray(st_prev.lane_active)[0][watch].all()
+
+
+def test_block_step_freezes_on_pre_retired_watch(tailed):
+    """A block dispatched with an already-converged watched lane runs zero
+    sweeps (the speculative-dispatch safety the pipelined engine relies
+    on)."""
+    core, g, _ = tailed
+    eng = make_engine(g)
+    cfg = eng._session_cfg([Query(0)])
+    st = M.init_multi_state(eng.pg, [3], cfg)
+    block = M.make_msbfs_block_emulated(cfg, 8)
+    watch = np.ones(4, dtype=bool)          # lanes 1..3 were never seeded
+    out = block(eng.pgv, eng.plan, st, watch)
+    assert int(np.asarray(out.it)[0]) == 0
+    np.testing.assert_array_equal(np.asarray(out.level_n),
+                                  np.asarray(st.level_n))
+
+
+# ------------------------------------------- sync/pipelined bit-identity
+@pytest.mark.parametrize("sweep_block", [1, 4, 8])
+def test_overlap_counters_bit_identical_to_sync(tailed, sweep_block):
+    """Same skewed mixed-kind stream through the per-sweep driver and the
+    overlapped pipeline: identical answers and identical ServeStats (the
+    pipeline may only change *how often the host looks*, never the
+    traversal schedule)."""
+    core, g, tips = tailed
+    qs = mixed_queries(skewed_stream(core, g, tips))
+    eng_s = make_engine(g)
+    eng_o = make_engine(g, overlap=True, sweep_block=sweep_block)
+    for q, a in zip(qs, eng_s.submit_many(qs)):
+        check_answer(g, q, a)
+    for q, a in zip(qs, eng_o.submit_many(qs)):
+        check_answer(g, q, a)
+    ds, do = eng_s.stats.as_dict(), eng_o.stats.as_dict()
+    for key in ds:
+        if key == "sweep_blocks":
+            continue
+        assert ds[key] == do[key], f"{key}: sync {ds[key]} != overlap {do[key]}"
+    assert do["sweep_blocks"] > 0
+    assert eng_o.stats.sweeps >= eng_o.stats.sweep_blocks
+
+
+def test_overlap_reach_fast_and_component_reuse(tailed):
+    """Reachability serving through the pipelined driver: the levels-free
+    variant and per-component reuse both survive, counters equal sync."""
+    core, g, tips = tailed
+    qs = [Query(int(s), QueryKind.REACHABILITY)
+          for s in skewed_stream(core, g, tips)]
+    eng_s, eng_o = make_engine(g), make_engine(g, overlap=True)
+    for q, a in zip(qs, eng_s.submit_many(qs)):
+        check_answer(g, q, a)
+    for q, a in zip(qs, eng_o.submit_many(qs)):
+        check_answer(g, q, a)
+    ds, do = eng_s.stats.as_dict(), eng_o.stats.as_dict()
+    assert ds["component_hits"] == do["component_hits"] > 0
+    assert ds["reach_fast_batches"] == do["reach_fast_batches"] >= 1
+    assert ds["sweeps"] == do["sweeps"]
+    assert ds["wire_delegate_bytes"] == do["wire_delegate_bytes"]
+    assert ds["wire_nn_bytes"] == do["wire_nn_bytes"]
+
+
+# ------------------------------------------------------------ streaming API
+def test_stream_incremental_submit_poll(tailed):
+    core, g, tips = tailed
+    stream = skewed_stream(core, g, tips)
+    eng = make_engine(g, overlap=True)
+    assert eng.poll() == {}                       # no session yet
+    assert eng.submit_stream([]) == 0
+    n = eng.submit_stream([Query(int(s)) for s in stream[:4]])
+    assert n == 4
+    got = {}
+    for _ in range(2000):
+        got.update(eng.poll())
+        if len(got) >= 4:
+            break
+    assert len(got) == 4
+    eng.submit_stream([Query(int(s)) for s in stream[4:]])
+    got.update(eng.drain_stream())
+    assert len(got) == len({int(s) for s in stream})
+    for q, a in got.items():
+        check_answer(g, q, a)
+    # drained: the session is closed and a new stream can open
+    assert eng._stream is None
+    assert eng.poll() == {}
+
+
+def test_stream_poll_nonblocking(tailed):
+    """poll(wait=False) never blocks on the pipeline head; repeated calls
+    eventually drain everything."""
+    core, g, tips = tailed
+    eng = make_engine(g, overlap=True)
+    eng.submit_stream([Query(int(s)) for s in skewed_stream(core, g, tips)])
+    got = {}
+    for _ in range(100000):
+        got.update(eng.poll(wait=False))
+        if not (eng._stream.sched.n_busy or eng._stream.sched.pending):
+            break
+    got.update(eng.drain_stream())
+    for q, a in got.items():
+        check_answer(g, q, a)
+
+
+def test_stream_dedup_cache_component_hits(tailed):
+    core, g, tips = tailed
+    s0, s1 = int(tips[0]), int(pick_sources(core, 1, seed=3)[0])
+    eng = make_engine(g, cache=32, overlap=True)
+    eng.submit_stream([Query(s0), Query(s0), Query(s1)])
+    assert eng.stats.dedup_hits == 1
+    res = eng.drain_stream()
+    assert len(res) == 2
+    # a second stream session: the first session's results now hit the LRU
+    sweeps0 = eng.stats.sweeps
+    eng.submit_stream([Query(s0)])
+    assert eng.stats.cache_hits == 1
+    out = eng.drain_stream()
+    np.testing.assert_array_equal(out[Query(s0)], res[Query(s0)])
+    assert eng.stats.sweeps == sweeps0          # pure cache traffic
+    # component reuse answers a same-component reachability without a lane
+    eng2 = make_engine(g, overlap=True)
+    eng2.submit_stream([Query(s0, QueryKind.REACHABILITY)])
+    eng2.drain_stream()
+    sweeps0 = eng2.stats.sweeps
+    eng2.submit_stream([Query(s1, QueryKind.REACHABILITY)])
+    out2 = eng2.drain_stream()
+    if reachable_mask(g, s0)[s1]:               # same component
+        assert eng2.stats.component_hits == 1
+        assert eng2.stats.sweeps == sweeps0
+    check_answer(g, Query(s1, QueryKind.REACHABILITY),
+                 out2[Query(s1, QueryKind.REACHABILITY)])
+
+
+def test_stream_redelivers_resubmitted_duplicate(tailed):
+    """A query resubmitted after its result was already handed out must be
+    answered again by the next poll, not swallowed by the dedup check."""
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=12)[0])
+    eng = make_engine(g, overlap=True)
+    eng.submit_stream([Query(s)])
+    got = {}                                      # poll keeps the session open
+    for _ in range(2000):
+        got.update(eng.poll())
+        if got:
+            break
+    assert Query(s) in got
+    eng.submit_stream([Query(s)])                 # resubmit, same session
+    assert eng.stats.dedup_hits == 1
+    again = {}
+    for _ in range(2000):
+        again.update(eng.poll())
+        if again:
+            break
+    np.testing.assert_array_equal(again[Query(s)], got[Query(s)])
+    eng.drain_stream()
+
+
+def test_stream_releases_delivered_results(tailed):
+    """Delivered results leave the session (long-lived streams stay
+    O(in-flight), not O(history)); a later re-submission is answered from
+    the LRU without a new traversal."""
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=14)[0])
+    eng = make_engine(g, cache=8, overlap=True)
+    eng.submit_stream([Query(s)])
+    got = {}
+    for _ in range(2000):
+        got.update(eng.poll())
+        if got:
+            break
+    assert not eng._stream.results            # delivered arrays released
+    sweeps0 = eng.stats.sweeps
+    eng.submit_stream([Query(s)])             # same session, warm LRU
+    out = eng.drain_stream()
+    assert eng.stats.sweeps == sweeps0        # no new traversal
+    assert eng.stats.cache_hits == 1
+    np.testing.assert_array_equal(out[Query(s)], got[Query(s)])
+
+
+def test_stream_mid_session_submit_fills_idle_lanes(tailed):
+    """Queries fed mid-session must be seeded onto idle lanes at the next
+    quiet block boundary instead of starving behind a deep straggler."""
+    core, g, tips = tailed
+    w = 4
+    eng = make_engine(g, w=w, overlap=True)
+    eng.submit_stream([Query(int(tips[0]))])      # deep tail: 1 busy lane
+    eng.poll()                                    # pipeline under way
+    shallow = [Query(int(s)) for s in pick_sources(core, 3, seed=13)]
+    eng.submit_stream(shallow)                    # 3 idle lanes available
+    sess = eng._stream
+    eng.poll()                                    # next boundary seeds them
+    assert sess.sched.n_busy + len(sess.results) >= 4 or not sess.sched.pending
+    assert not sess.sched.pending                 # nothing starving
+    out = eng.drain_stream()
+    for q in [Query(int(tips[0]))] + shallow:
+        check_answer(g, q, out[q])
+
+
+def test_stream_variant_mismatch_and_generality(tailed):
+    """A reach_fast stream session (homogeneous REACHABILITY opening)
+    rejects other kinds until drained; any other opening compiles the
+    general variant, so later MULTI_TARGET submissions just work."""
+    core, g, _ = tailed
+    srcs = pick_sources(core, 3, seed=4)
+    eng = make_engine(g, reuse_components=False)
+    eng.submit_stream([Query(int(srcs[0]), QueryKind.REACHABILITY)])
+    with pytest.raises(ValueError, match="REACHABILITY"):
+        eng.submit_stream([Query(int(srcs[1]))])
+    eng.drain_stream()
+    # fresh LEVELS-opened session: open-ended, accepts MULTI_TARGET later
+    eng.submit_stream([Query(int(srcs[1]))])
+    mt = Query(int(srcs[2]), QueryKind.MULTI_TARGET,
+               targets=(int(srcs[0]),))
+    eng.submit_stream([mt])
+    out = eng.drain_stream()
+    check_answer(g, mt, out[mt])
+    check_answer(g, Query(int(srcs[1])), out[Query(int(srcs[1]))])
+
+
+# ------------------------------------ batch/stream boundary pins (satellite)
+@pytest.mark.parametrize("overlap", [False, True])
+def test_run_batch_queries_boundaries(tailed, overlap):
+    """Empty batch, single query, and exactly-W-fit batches of
+    run_batch_queries, including the reach_fast specialization."""
+    core, g, _ = tailed
+    w = 4
+    eng = make_engine(g, w=w, overlap=overlap)
+    eng.refill = False
+    assert eng.run_batch_queries([]) == {}
+    srcs = [int(s) for s in pick_sources(core, w, seed=6)]
+    one = eng.run_batch_queries([Query(srcs[0])])
+    check_answer(g, Query(srcs[0]), one[Query(srcs[0])])
+    exact = [Query(s) for s in srcs]            # exactly W queries
+    res = eng.run_batch_queries(exact)
+    assert len(res) == w and eng.stats.lanes_padded == w - 1
+    for q in exact:
+        check_answer(g, q, res[q])
+    with pytest.raises(ValueError):
+        eng.run_batch_queries([Query(s) for s in srcs] + [Query(3)])
+    # reach_fast single + exact-fit
+    reach = [Query(s, QueryKind.REACHABILITY) for s in srcs]
+    res_r = eng.run_batch_queries(reach)
+    assert eng.stats.reach_fast_batches == 1
+    for q in reach:
+        check_answer(g, q, res_r[q])
+
+
+def test_stream_boundaries(tailed):
+    """Empty submits, a single streamed query, and an exactly-W first
+    submission through the streaming path (reach_fast variant included)."""
+    core, g, _ = tailed
+    w = 4
+    srcs = [int(s) for s in pick_sources(core, w, seed=6)]
+    eng = make_engine(g, w=w, overlap=True)
+    assert eng.drain_stream() == {}
+    eng.submit_stream([Query(srcs[0])])
+    out = eng.drain_stream()
+    assert list(out) == [Query(srcs[0])]
+    check_answer(g, Query(srcs[0]), out[Query(srcs[0])])
+    assert eng.stats.lanes_padded == w - 1      # session accounting rule
+    # exactly-W submission fills the whole word: no padding accounted
+    exact = [Query(s, QueryKind.REACHABILITY) for s in srcs]
+    eng2 = make_engine(g, w=w, reuse_components=False)
+    eng2.submit_stream(exact)
+    res = eng2.drain_stream()
+    assert len(res) == w and eng2.stats.lanes_padded == 0
+    assert eng2.stats.reach_fast_batches == 1
+    for q in exact:
+        check_answer(g, q, res[q])
+
+
+def test_run_refill_queries_boundaries(tailed):
+    core, g, _ = tailed
+    for overlap in (False, True):
+        eng = make_engine(g, overlap=overlap)
+        assert eng.run_refill_queries([]) == {}
+        s = int(pick_sources(core, 1, seed=7)[0])
+        res = eng.run_refill_queries([Query(s)])
+        check_answer(g, Query(s), res[Query(s)])
+
+
+# ------------------------------------------- dedup unification (satellite)
+def test_refill_entry_points_dedup_with_stats(tailed):
+    """run_refill_queries no longer raises on duplicates: both entry points
+    dedup and count dedup_hits identically."""
+    core, g, _ = tailed
+    s0, s1 = (int(s) for s in pick_sources(core, 2, seed=8))
+    eng = make_engine(g)
+    res = eng.run_refill_queries([Query(s0), Query(s0), Query(s1), Query(s0)])
+    assert len(res) == 2 and eng.stats.dedup_hits == 2
+    assert eng.stats.lanes_used == 2
+    np.testing.assert_array_equal(res[Query(s0)], bfs_levels(g, s0))
+    eng2 = make_engine(g)
+    got = eng2.run_refill(np.asarray([s0, s1, s0, s1]))
+    assert sorted(got) == sorted([s0, s1]) and eng2.stats.dedup_hits == 2
+    assert eng2.stats.lanes_used == 2
+
+
+def test_dedup_keeps_mixed_duplicate_kinds(tailed):
+    """Same source under different kinds must NOT collapse; identical
+    descriptors must."""
+    core, g, _ = tailed
+    s = int(pick_sources(core, 1, seed=8)[0])
+    qs = [Query(s), Query(s, QueryKind.REACHABILITY),
+          Query(s), Query(s, QueryKind.DISTANCE_LIMITED, max_depth=2),
+          Query(s, QueryKind.REACHABILITY)]
+    unique, dropped = dedupe(qs)
+    assert dropped == 2 and len(unique) == 3
+    eng = make_engine(g)
+    res = eng.run_refill_queries(qs)
+    assert len(res) == 3 and eng.stats.dedup_hits == 2
+    for q in unique:
+        check_answer(g, q, res[q])
+
+
+# --------------------------------------- delegate-free graphs (satellite)
+def test_locate_source_delegate_free():
+    """With th above every degree the graph has no delegates: _dvids must
+    be empty and locate_source must never classify a source as one."""
+    g = rmat_graph(7, seed=1)
+    eng = BFSServeEngine(g, th=10 ** 6, p_rank=2, p_gpu=2,
+                         cfg=M.MSBFSConfig(n_queries=4, max_iters=64))
+    assert eng.pg.d == 0
+    assert eng._dvids.size == 0
+    layout = PartitionLayout(eng.pg.n, eng.pg.p_rank, eng.pg.p_gpu)
+    for s in range(0, g.n, 13):
+        isd, part, local, dpos = M.locate_source(eng.pg, layout,
+                                                 eng._dvids, s)
+        assert not isd
+
+
+def test_delegate_free_serving_end_to_end():
+    """A star-free path graph (max degree 2 < th) end to end through batch,
+    refill and overlap engines: delegate-free classification everywhere."""
+    from repro.core.types import COOGraph
+    n = 96
+    src = np.arange(n - 1, dtype=np.int64)
+    dst = src + 1
+    g = COOGraph(n, np.concatenate([src, dst]), np.concatenate([dst, src]))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=n + 8)
+    for kw in (dict(refill=False), dict(refill=True),
+               dict(refill=True, overlap=True)):
+        eng = BFSServeEngine(g, th=64, p_rank=2, p_gpu=2, cfg=cfg,
+                             cache_capacity=0, **kw)
+        assert eng.pg.d == 0 and eng._dvids.size == 0
+        for s, lev in zip([0, n // 2, n - 1], eng.query([0, n // 2, n - 1])):
+            np.testing.assert_array_equal(lev, bfs_levels(g, int(s)))
+
+
+# ----------------------------------------------------- sharded (4 devices)
+@needs4
+@pytest.mark.parametrize("overlap", [False, True])
+def test_sharded_stream_and_boundaries_multidevice(tailed, overlap):
+    """Streaming API + single/exact-fit boundaries on a real 4-device
+    shard_map mesh, oracle-exact, sync/overlap counter parity."""
+    core, g, tips = tailed
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=96)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                         cache_capacity=0, mesh=mesh, refill=True,
+                         overlap=overlap)
+    assert eng.sharded
+    srcs = [int(s) for s in pick_sources(core, 4, seed=9)]
+    qs = mixed_queries([int(tips[0])] + srcs)
+    eng.submit_stream(qs[:1])                   # single-query session start
+    got = eng.poll()
+    eng.submit_stream(qs[1:])
+    got.update(eng.drain_stream())
+    assert len(got) == len(qs)
+    for q, a in got.items():
+        check_answer(g, q, a)
+    # exact-fit batch path on the mesh
+    eng.refill = False
+    exact = [Query(s) for s in srcs]
+    res = eng.run_batch_queries(exact)
+    for q in exact:
+        check_answer(g, q, res[q])
+
+
+@needs4
+def test_sharded_overlap_counters_match_sync_multidevice(tailed):
+    core, g, tips = tailed
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=96)
+    mk = lambda ov: BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                                   cache_capacity=0, mesh=mesh, refill=True,
+                                   overlap=ov)
+    qs = mixed_queries(skewed_stream(core, g, tips, n_shallow=6))
+    eng_s, eng_o = mk(False), mk(True)
+    for q, a in zip(qs, eng_s.submit_many(qs)):
+        check_answer(g, q, a)
+    for q, a in zip(qs, eng_o.submit_many(qs)):
+        check_answer(g, q, a)
+    ds, do = eng_s.stats.as_dict(), eng_o.stats.as_dict()
+    for key in ds:
+        if key != "sweep_blocks":
+            assert ds[key] == do[key], f"{key}: {ds[key]} != {do[key]}"

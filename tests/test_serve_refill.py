@@ -179,3 +179,35 @@ def test_lru_put_refreshes_existing_key():
     c.put("a", 3)                                    # refresh + overwrite
     c.put("c", 4)                                    # evicts b, not a
     assert c.get("a") == 3 and "b" not in c and "c" in c
+
+
+def test_lru_len_and_contains_agree_with_get_on_expiry():
+    """``len`` and ``in`` must never report an entry ``get`` would refuse:
+    expired entries are purged (and counted) by every observer."""
+    t = [0.0]
+    c = LRUCache(8, ttl=10.0, clock=lambda: t[0])
+    c.put("a", 1)
+    c.put("b", 2, ttl=None)                          # never expires
+    c.put("c", 3, ttl=30.0)
+    assert len(c) == 3 and "a" in c and c.expired == 0
+    t[0] = 10.0                                      # a's deadline hits
+    assert "a" not in c                              # purged via __contains__
+    assert c.expired == 1
+    assert len(c) == 2                               # and stays purged
+    assert c.get("a") is None and c.misses == 1
+    t[0] = 40.0                                      # c expires too
+    assert len(c) == 1                               # purged via __len__
+    assert c.expired == 2
+    assert "b" in c and c.get("b") == 2              # ttl=None never expires
+    c.put("a", 9)                                    # re-inserting is fresh
+    assert len(c) == 2 and "a" in c and c.get("a") == 9
+
+
+def test_lru_expired_entry_counted_once():
+    t = [0.0]
+    c = LRUCache(4, ttl=5.0, clock=lambda: t[0])
+    c.put("k", 1)
+    t[0] = 6.0
+    assert "k" not in c and "k" not in c             # second probe: plain miss
+    assert c.expired == 1
+    assert len(c) == 0 and c.expired == 1
