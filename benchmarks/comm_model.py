@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
 import numpy as np
 
@@ -35,7 +34,7 @@ from repro.core.oracle import bfs_levels
 from repro.core.partition import partition_graph
 from repro.graphs.rmat import pick_sources, rmat_graph
 
-from .common import emit, run_bfs_timed
+from .common import emit, run_bfs_timed, write_bench
 
 
 def run(scale: int = 12, th: int = 64, p: int = 4):
@@ -128,8 +127,7 @@ def run_strategies(scale: int = 10, th: int = 64, p_rank: int = 2,
         "n_queries": n_queries, "cap_peer": plan.cap_peer,
         "strategies": rows,
     }
-    with open(out_path, "w") as f:
-        json.dump(summary, f, indent=2, sort_keys=True)
+    write_bench(out_path, "comm_strategies", summary)
     print(f"wrote {out_path}")
     return summary
 

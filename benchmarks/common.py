@@ -1,6 +1,25 @@
-"""Shared benchmark utilities: timed emulated BFS runs + CSV emission."""
+"""Shared benchmark utilities: timed emulated BFS runs, CSV emission, and
+the one JSON schema every ``BENCH_*.json`` artifact is written in.
+
+The schema (``repro-bench/1``) wraps each benchmark's payload in a named
+section next to shared run metadata::
+
+    {
+      "schema": "repro-bench/1",
+      "meta": {"backend": ..., "device_count": ..., "jax_version": ...},
+      "benchmarks": {"mixed": {...}, "overlap": {...},
+                     "comm_strategies": {...}}
+    }
+
+``write_bench`` merges one section at a time (re-running a single
+benchmark never clobbers the others), and ``load_bench`` also accepts the
+pre-schema flat files so ``scripts/bench_gate.py`` can diff old baselines
+-- one parser for every producer and consumer.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -55,3 +74,64 @@ def run_bfs_timed(g, pg, sources, cfg: B.BFSConfig, repeats: int = 1):
 def gmean(xs):
     xs = [x for x in xs if x > 0]
     return float(np.exp(np.mean(np.log(xs)))) if xs else 0.0
+
+
+# -- shared BENCH_*.json schema ---------------------------------------------
+
+BENCH_SCHEMA = "repro-bench/1"
+
+
+def bench_meta() -> dict:
+    """Run metadata stamped on every benchmark artifact: where the numbers
+    came from, so the gate can tell cross-machine perf noise from a real
+    schedule change."""
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+    }
+
+
+def load_bench(path: str) -> dict:
+    """Read a benchmark artifact, normalizing to the ``repro-bench/1``
+    shape. Pre-schema flat files are wrapped best-effort (their top-level
+    payload becomes the obvious section, with empty ``meta``) so old
+    committed baselines stay diffable."""
+    with open(path) as f:
+        raw = json.load(f)
+    if isinstance(raw, dict) and raw.get("schema") == BENCH_SCHEMA:
+        raw.setdefault("meta", {})
+        raw.setdefault("benchmarks", {})
+        return raw
+    # legacy flat layouts: comm_model wrote {"strategies": ...}; the
+    # throughput bench wrote the mixed summary with an optional "overlap"
+    # sibling merged in.
+    sections: dict = {}
+    if isinstance(raw, dict) and "strategies" in raw:
+        sections["comm_strategies"] = raw
+    elif isinstance(raw, dict):
+        overlap = raw.pop("overlap", None)
+        if overlap is not None:
+            sections["overlap"] = overlap
+        if raw:
+            sections["mixed"] = raw
+    return {"schema": BENCH_SCHEMA, "meta": {}, "benchmarks": sections}
+
+
+def write_bench(path: str, section: str, payload: dict) -> dict:
+    """Merge one benchmark ``section`` into the artifact at ``path`` and
+    rewrite it in the shared schema (meta refreshed to this run). Other
+    sections already present are preserved, so each benchmark owns its
+    section without clobbering siblings."""
+    doc = {"schema": BENCH_SCHEMA, "meta": bench_meta(), "benchmarks": {}}
+    if os.path.exists(path):
+        try:
+            doc["benchmarks"] = load_bench(path)["benchmarks"]
+        except (ValueError, OSError):
+            pass                         # unreadable artifact: start fresh
+    doc["benchmarks"][section] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

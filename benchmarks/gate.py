@@ -1,0 +1,187 @@
+"""Benchmark regression gate: diff candidate runs against baselines.
+
+The gate reads two sets of ``BENCH_*.json`` artifacts in the shared
+``repro-bench/1`` schema (:mod:`benchmarks.common`) and classifies every
+leaf metric of every section they have in common:
+
+* **exact** metrics -- sweep counts, wire bytes, overflow/early-stop
+  counters, oracle flags, workload shape. These are deterministic given
+  the same graph parameters and schedule, so any difference is a real
+  schedule change (``drift``), not noise. They are only compared when the
+  two sections describe the same workload shape (graph/request params
+  match); otherwise the whole section is reported ``shape-mismatch`` and
+  skipped, because comparing sweep counts across different graphs is
+  meaningless.
+* **perf** metrics -- qps / speedup / teps / time / fusion numbers. These
+  move with machine load, so they get a ratio tolerance band
+  (``perf_tolerance``, default 0.5: a candidate may be up to 50% worse
+  before it counts as a ``regression``). Direction-aware: throughput-like
+  metrics regress downward, time-like metrics regress upward.
+
+Findings carry a ``status`` of ``ok`` / ``drift`` / ``regression`` /
+``missing`` / ``new`` / ``skip``; the report's top-level ``status`` is
+``pass`` unless any fatal finding (``drift``, ``regression``,
+``missing``) exists. Diffing a file set against itself is always a
+``pass`` -- the CI invocation on the committed baselines.
+"""
+from __future__ import annotations
+
+import math
+
+from .common import load_bench
+
+#: leaf-name substrings that mark a metric as perf (noise-tolerant)
+PERF_MARKERS = ("qps", "speedup", "teps", "time", "latency", "fusion")
+#: perf metrics where *lower* is better (regress upward)
+LOWER_BETTER_MARKERS = ("time", "latency")
+#: leaf paths (prefixes) that define the workload shape of a section --
+#: exact comparison only happens when all of these agree
+SHAPE_KEYS = ("graph", "requests", "n_queries", "sweep_block", "scale",
+              "p", "d", "n", "cap_peer")
+
+FATAL_STATUSES = frozenset({"drift", "regression", "missing"})
+
+_MISSING = object()
+
+
+def classify(path: str) -> str:
+    """``perf`` or ``exact`` for a dotted leaf path."""
+    low = path.lower()
+    return "perf" if any(m in low for m in PERF_MARKERS) else "exact"
+
+
+def iter_leaves(node, prefix=()):
+    """Yield (dotted_path, scalar) for every scalar leaf of a nested dict."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from iter_leaves(v, prefix + (str(k),))
+    elif isinstance(node, (int, float, str, bool)) or node is None:
+        yield ".".join(prefix), node
+    else:                                   # lists: compare as opaque values
+        yield ".".join(prefix), repr(node)
+
+
+def _is_shape(path: str) -> bool:
+    head = path.split(".", 1)[0]
+    return head in SHAPE_KEYS
+
+
+def _perf_finding(path, bval, cval, tolerance):
+    lower_better = any(m in path.lower() for m in LOWER_BETTER_MARKERS)
+    try:
+        ratio = float(cval) / float(bval) if float(bval) != 0 else math.inf
+    except (TypeError, ValueError):
+        return {"metric": path, "class": "perf", "status": "drift",
+                "baseline": bval, "candidate": cval,
+                "detail": "non-numeric perf metric changed"}
+    worse = ratio > 1 + tolerance if lower_better else ratio < 1 - tolerance
+    return {"metric": path, "class": "perf",
+            "status": "regression" if worse else "ok",
+            "baseline": bval, "candidate": cval, "ratio": ratio,
+            "tolerance": tolerance}
+
+
+def compare_section(name, base, cand, perf_tolerance=0.5):
+    """Findings for one benchmark section present in both documents."""
+    findings = []
+    bleaves = dict(iter_leaves(base))
+    cleaves = dict(iter_leaves(cand))
+
+    shape_mismatch = any(
+        cleaves.get(p, _MISSING) != v
+        for p, v in bleaves.items() if _is_shape(p))
+    if shape_mismatch:
+        # different workload: exact counters are incomparable; perf numbers
+        # doubly so. Report the whole section as skipped, not as drift.
+        findings.append({
+            "metric": name, "class": "section", "status": "skip",
+            "detail": "workload shape differs between baseline and "
+                      "candidate; section not compared"})
+        return findings
+
+    for path, bval in bleaves.items():
+        cval = cleaves.get(path, _MISSING)
+        if cval is _MISSING:
+            findings.append({"metric": path, "class": classify(path),
+                             "status": "missing", "baseline": bval,
+                             "detail": "metric absent from candidate"})
+            continue
+        if classify(path) == "perf" and isinstance(bval, (int, float)) \
+                and not isinstance(bval, bool):
+            findings.append(_perf_finding(path, bval, cval, perf_tolerance))
+        else:
+            findings.append({
+                "metric": path, "class": "exact",
+                "status": "ok" if bval == cval else "drift",
+                "baseline": bval, "candidate": cval})
+    for path, cval in cleaves.items():
+        if path not in bleaves:
+            findings.append({"metric": path, "class": classify(path),
+                             "status": "new", "candidate": cval})
+    return findings
+
+
+def gate(baseline_doc, candidate_doc, perf_tolerance=0.5):
+    """Compare two ``repro-bench/1`` documents; returns the report dict."""
+    findings = []
+    bsec = baseline_doc.get("benchmarks", {})
+    csec = candidate_doc.get("benchmarks", {})
+    for name, base in bsec.items():
+        if name not in csec:
+            findings.append({"metric": name, "class": "section",
+                             "status": "missing",
+                             "detail": "section absent from candidate"})
+            continue
+        for f in compare_section(name, base, csec[name], perf_tolerance):
+            f["metric"] = f"{name}.{f['metric']}" \
+                if f["class"] != "section" else f["metric"]
+            findings.append(f)
+    for name in csec:
+        if name not in bsec:
+            findings.append({"metric": name, "class": "section",
+                             "status": "new",
+                             "detail": "section absent from baseline"})
+    counts: dict = {}
+    for f in findings:
+        counts[f["status"]] = counts.get(f["status"], 0) + 1
+    status = "fail" if any(f["status"] in FATAL_STATUSES
+                           for f in findings) else "pass"
+    return {"status": status, "counts": counts,
+            "perf_tolerance": perf_tolerance,
+            "baseline_meta": baseline_doc.get("meta", {}),
+            "candidate_meta": candidate_doc.get("meta", {}),
+            "findings": findings}
+
+
+def gate_files(baseline_paths, candidate_paths, perf_tolerance=0.5):
+    """Gate a list of artifact files pairwise (zipped in order). Each pair
+    produces one sub-report; the combined report fails if any pair does."""
+    reports = []
+    for bpath, cpath in zip(baseline_paths, candidate_paths):
+        rep = gate(load_bench(bpath), load_bench(cpath), perf_tolerance)
+        rep["baseline_path"] = str(bpath)
+        rep["candidate_path"] = str(cpath)
+        reports.append(rep)
+    status = "fail" if any(r["status"] == "fail" for r in reports) else "pass"
+    counts: dict = {}
+    for r in reports:
+        for k, v in r["counts"].items():
+            counts[k] = counts.get(k, 0) + v
+    return {"status": status, "counts": counts, "reports": reports}
+
+
+def render_text(report) -> str:
+    """Human-readable summary of a ``gate_files`` report."""
+    lines = [f"bench_gate: {report['status'].upper()}  "
+             f"({', '.join(f'{k}={v}' for k, v in sorted(report['counts'].items())) or 'no findings'})"]
+    for rep in report["reports"]:
+        lines.append(f"  {rep['baseline_path']} vs {rep['candidate_path']}: "
+                     f"{rep['status']}")
+        for f in rep["findings"]:
+            if f["status"] in ("ok", "new"):
+                continue
+            detail = f.get("detail") or (
+                f"baseline={f.get('baseline')} candidate={f.get('candidate')}"
+                + (f" ratio={f['ratio']:.3f}" if "ratio" in f else ""))
+            lines.append(f"    [{f['status']}] {f['metric']}: {detail}")
+    return "\n".join(lines)

@@ -52,7 +52,7 @@ from repro.core.partition import partition_graph
 from repro.core.types import INF_LEVEL
 from repro.graphs.rmat import pick_sources, rmat_graph
 
-from .common import emit
+from .common import emit, write_bench
 
 
 def run(scale: int = 12, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
@@ -185,9 +185,6 @@ def run_overlap(scale: int = 7, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
     overhead is a stable fraction of a sweep regardless of how loaded the
     host is (big-graph sweeps drown it in device compute on CPU emulation;
     on real accelerators the round-trip/sweep ratio grows, not shrinks)."""
-    import json
-    import os
-
     from repro.graphs.synthetic import with_tails
     from repro.serve import BFSServeEngine, Query, QueryKind, oracle_check
 
@@ -262,11 +259,7 @@ def run_overlap(scale: int = 7, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
         f"overlapped pipeline {qps_o:.2f} q/s < {min_speedup}x synchronous "
         f"refill {qps_s:.2f} q/s (median per-pair speedup {speedup:.2f}x)")
 
-    summary = {}
-    if os.path.exists(out_json):
-        with open(out_json) as f:
-            summary = json.load(f)
-    summary["overlap"] = {
+    section = {
         "graph": {"n": int(g.n), "m": int(g.m), "scale": scale,
                   "n_tails": n_tails, "tail_len": tail_len},
         "requests": int(len(stream)), "n_queries": n_queries,
@@ -279,19 +272,17 @@ def run_overlap(scale: int = 7, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
         "wire_bytes_total": eng_o.stats.wire_bytes_total,
         "counters_bit_identical": True,
     }
-    with open(out_json, "w") as f:
-        json.dump(summary, f, indent=2)
-    return summary["overlap"]
+    write_bench(out_json, "overlap", section)
+    return section
 
 
 def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
               p_rank: int = 2, p_gpu: int = 2, n_queries: int = 32,
               requests: int = 40, n_tails: int = 4, tail_len: int = 48,
               max_depth: int = 3, min_reach_speedup: float = 1.3,
+              min_raw_reach: float = 0.6,
               out_json: str = "BENCH_queries.json"):
     """Typed-query serving: one skewed stream, four query kinds."""
-    import json
-
     from repro.core.oracle import bfs_levels, bfs_levels_limited
     from repro.graphs.synthetic import with_tails
     from repro.serve import BFSServeEngine, Query, QueryKind
@@ -379,8 +370,7 @@ def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
         "mixed_nn_sparse_sweeps": eng_mx.stats.nn_sparse_sweeps,
         "mixed_nn_overflow": eng_mx.stats.nn_overflow,
     }
-    with open(out_json, "w") as f:
-        json.dump(summary, f, indent=2)
+    write_bench(out_json, "mixed", summary)
 
     emit("msbfs/serve_levels", 1e6 / qps_levels,
          f"qps={qps_levels:.2f} sweeps={eng_lv.stats.sweeps}")
@@ -401,7 +391,7 @@ def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
     # The levels-free variant's per-sweep edge (no level scatter, no [E, W]
     # work counters) is a few percent on CPU emulation -- within run-to-run
     # noise -- so raw is reported, with only a generous regression floor.
-    assert qps_reach_raw >= 0.6 * qps_levels, (
+    assert qps_reach_raw >= min_raw_reach * qps_levels, (
         f"levels-free reachability path {qps_reach_raw:.2f} q/s regressed "
         f"far below full-levels {qps_levels:.2f} q/s")
     return summary

@@ -25,8 +25,16 @@ incrementally through ``submit_stream``/``poll`` instead of one big
 ``--delegate`` / ``--adaptive-nn`` swap the communication strategies
 (``repro.core.comm.CommConfig``) the sweeps run under.
 
+``--trace`` attaches the observability plane (``repro.obs``): the run
+writes a Chrome/Perfetto trace (``--trace-out``, default
+``serve_trace.json`` -- open at https://ui.perfetto.dev) and a metrics
+snapshot (``--metrics-out``) with per-kind submit->deliver latency
+percentiles, and prints the latency/hit-rate summary. Tracing never
+changes the traversal schedule: the same sweeps, the same wire bytes.
+
     PYTHONPATH=src python examples/bfs_serving.py [--scale 11] [--requests 400] \
-        [--refill] [--overlap] [--stream] [--mixed] [--delegate ring] [--adaptive-nn]
+        [--refill] [--overlap] [--stream] [--mixed] [--delegate ring] \
+        [--adaptive-nn] [--trace]
 """
 import argparse
 import time
@@ -172,19 +180,29 @@ def main():
                     help="delegate combine strategy (core.comm)")
     ap.add_argument("--adaptive-nn", action="store_true",
                     help="frontier-adaptive sparse/dense nn wire format")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach the observability plane; export a "
+                         "Chrome/Perfetto trace + metrics snapshot")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="trace JSON path (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="serve_metrics.json",
+                    help="metrics snapshot JSON path")
     args = ap.parse_args()
 
     from repro.core.comm import CommConfig
+    from repro.obs import Observability
 
     if args.overlap or args.stream:
         args.refill = True   # the pipelined drivers ride the refill path
+    obs = Observability() if args.trace else None
     g = rmat_graph(args.scale, seed=0)
     print(f"graph n={g.n:,} m={g.m:,}")
     eng = BFSServeEngine(g, th=args.th, p_rank=2, p_gpu=2, cache_capacity=512,
                          refill=args.refill, overlap=args.overlap,
                          comm=CommConfig(
                              delegate=args.delegate,
-                             nn="adaptive" if args.adaptive_nn else "dense"))
+                             nn="adaptive" if args.adaptive_nn else "dense"),
+                         obs=obs)
     t0 = time.perf_counter()
     # a mixed stream is never homogeneously-reachability, so only the
     # multi-target variant needs the extra compile
@@ -206,6 +224,20 @@ def main():
         serve_stream(eng, g, stream, args)
     else:
         serve_classic(eng, g, stream, args)
+
+    if obs is not None:
+        obs.export(args.trace_out, args.metrics_out)
+        snap = obs.metrics.snapshot()
+        print(f"trace: {len(obs.trace.events())} events "
+              f"({obs.trace.dropped} dropped) -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
+        print(f"metrics: {len(snap['counters']) + len(snap['gauges']) + len(snap['histograms'])} "
+              f"instruments -> {args.metrics_out}")
+        for name, h in sorted(snap["histograms"].items()):
+            if name.startswith("serve.latency_s."):
+                kind = name.rsplit(".", 1)[1]
+                print(f"  latency[{kind}]: n={h['count']} "
+                      f"p50={h['p50'] * 1e3:.1f}ms p99={h['p99'] * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

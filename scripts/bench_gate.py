@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed benchmark baselines.
+
+Default invocation diffs the committed ``BENCH_queries.json`` /
+``BENCH_comm.json`` against themselves -- a schema/parse check that always
+passes, suitable as a CI smoke step::
+
+    PYTHONPATH=src python scripts/bench_gate.py
+
+``--run`` regenerates fresh candidate artifacts (into ``--workdir``) by
+actually running the benchmarks with their hard perf asserts disarmed --
+the *gate* owns regression policy, with tolerance bands instead of
+in-benchmark asserts -- then diffs them against the committed baselines::
+
+    PYTHONPATH=src python scripts/bench_gate.py --run
+
+Exact metrics (sweep counts, wire bytes, counters) must match bit-for-bit
+when the workload shape matches; perf metrics (qps/speedup/fusion) get a
+ratio tolerance band (``--perf-tolerance``, default 0.5). The
+machine-readable report is written to ``--out`` (default
+``bench_gate_report.json``). Exit code 0 on pass, 1 on fail (``--no-fail``
+forces 0 for non-blocking CI report steps).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.gate import gate_files, render_text  # noqa: E402
+
+
+def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
+    """Regenerate candidate artifacts by running the benchmarks with perf
+    asserts disarmed (correctness asserts -- oracle exactness, counter
+    bit-identicality, wire-volume orderings -- stay armed). Returns
+    {basename: error-or-None}."""
+    from benchmarks import comm_model, msbfs_throughput
+
+    os.makedirs(workdir, exist_ok=True)
+    qpath = os.path.join(workdir, "BENCH_queries.json")
+    cpath = os.path.join(workdir, "BENCH_comm.json")
+    kw = {} if scale_override is None else {"scale": scale_override}
+    errors: dict = {}
+    for name, fn in (
+        ("mixed", lambda: msbfs_throughput.run_mixed(
+            out_json=qpath, min_reach_speedup=0.0, min_raw_reach=0.0, **kw)),
+        ("overlap", lambda: msbfs_throughput.run_overlap(
+            out_json=qpath, min_speedup=0.0, **kw)),
+        ("comm_strategies", lambda: comm_model.run_strategies(
+            out_path=cpath, **kw)),
+    ):
+        try:
+            fn()
+            errors[name] = None
+        except Exception as exc:  # noqa: BLE001 -- report, don't crash the gate
+            errors[name] = f"{type(exc).__name__}: {exc}"
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", nargs="+",
+                    default=[os.path.join(_REPO, "BENCH_queries.json"),
+                             os.path.join(_REPO, "BENCH_comm.json")],
+                    help="baseline artifact files (committed BENCH_*.json)")
+    ap.add_argument("--candidate", nargs="+", default=None,
+                    help="candidate artifact files, paired with --baseline "
+                         "in order (default: the baselines themselves)")
+    ap.add_argument("--run", action="store_true",
+                    help="regenerate candidates by running the benchmarks "
+                         "(perf asserts disarmed) before diffing")
+    ap.add_argument("--workdir", default=os.path.join(_REPO, ".bench_gate"),
+                    help="where --run writes candidate artifacts")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="override benchmark graph scale for --run")
+    ap.add_argument("--perf-tolerance", type=float, default=0.5,
+                    help="allowed fractional perf regression (0.5 = 50%%)")
+    ap.add_argument("--out", default="bench_gate_report.json",
+                    help="machine-readable report path")
+    ap.add_argument("--no-fail", action="store_true",
+                    help="always exit 0 (non-blocking CI report step)")
+    args = ap.parse_args(argv)
+
+    run_errors: dict = {}
+    candidates = args.candidate
+    if args.run:
+        run_errors = run_fresh(args.workdir, args.scale)
+        candidates = [os.path.join(args.workdir, os.path.basename(b))
+                      for b in args.baseline]
+    elif candidates is None:
+        candidates = list(args.baseline)
+    if len(candidates) != len(args.baseline):
+        ap.error("--candidate must pair one file per --baseline file")
+
+    # a --run benchmark that died before writing its artifact must fail
+    # the gate (unless --no-fail), not crash the diff
+    pairs = [(b, c) for b, c in zip(args.baseline, candidates)
+             if os.path.exists(c)]
+    report = gate_files([b for b, _ in pairs], [c for _, c in pairs],
+                        args.perf_tolerance)
+    for b, c in zip(args.baseline, candidates):
+        if not os.path.exists(c):
+            report["status"] = "fail"
+            report["counts"]["missing"] = report["counts"].get("missing", 0) + 1
+            report["reports"].append({
+                "status": "fail", "baseline_path": b, "candidate_path": c,
+                "counts": {"missing": 1},
+                "findings": [{"metric": os.path.basename(c),
+                              "class": "artifact", "status": "missing",
+                              "detail": "candidate artifact was not "
+                                        "produced"}]})
+    if any(run_errors.values()):
+        report["status"] = "fail"
+    report["run_errors"] = run_errors
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(render_text(report))
+    for name, err in run_errors.items():
+        if err:
+            print(f"  [run-error] {name}: {err}")
+    print(f"report written to {args.out}")
+    if args.no_fail:
+        return 0
+    return 0 if report["status"] == "pass" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

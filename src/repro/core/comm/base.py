@@ -112,6 +112,13 @@ class CommConfig:
                 f"local_fold={self.local_fold!r} not in "
                 "(None, 'ref', 'pallas', 'auto')")
 
+    def as_dict(self) -> dict:
+        """JSON-serializable strategy description (what the observability
+        plane stamps on traces and bench reports)."""
+        return {"delegate": self.delegate, "hier_split": self.hier_split,
+                "local_fold": self.local_fold, "nn": self.nn,
+                "sparse_cap": self.sparse_cap}
+
 
 @dataclass(frozen=True)
 class CommPlan:
@@ -180,6 +187,12 @@ class CommPlan:
         """Per-device bytes of an all_to_all with ``per_peer_nbytes`` per
         peer row (the p-1 non-self rows leave the device)."""
         return (self.p - 1) * per_peer_nbytes
+
+    def as_dict(self) -> dict:
+        """The bound plan as JSON-serializable accounting metadata: the
+        strategy config plus the concrete axes it was bound to."""
+        return {"axes": list(self.axes), "sizes": list(self.sizes),
+                "p": self.p, **self.cfg.as_dict()}
 
 
 def plan_for(cfg: CommConfig | None, axis_names: AxisNames) -> CommPlan:

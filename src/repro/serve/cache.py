@@ -20,6 +20,8 @@ from __future__ import annotations
 import time
 from collections import OrderedDict
 
+from repro.obs import NULL_OBS
+
 _USE_DEFAULT = object()
 
 
@@ -31,18 +33,25 @@ class LRUCache:
     the default time-to-live stamped on entries at ``put`` time; pass
     ``ttl=`` to ``put`` to override per entry (``None`` = never expires).
     ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    ``obs`` (an :class:`repro.obs.Observability`) mirrors the hit/miss/
+    eviction/expiry counters into its metrics registry under
+    ``serve.cache.*``; the default disabled plane costs nothing.
     """
 
     def __init__(self, capacity: int = 256, ttl: float | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, obs=None):
         self.capacity = int(capacity)
         self.ttl = ttl
         self._clock = clock
+        self._obs = obs if obs is not None else NULL_OBS
         self._data: OrderedDict = OrderedDict()   # key -> (value, deadline)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.expired = 0
+
+    def _bump(self, which: str) -> None:
+        self._obs.metrics.counter(f"serve.cache.{which}").inc()
 
     def __len__(self) -> int:
         """Live entries only: expired entries are purged (and counted in
@@ -61,6 +70,7 @@ class LRUCache:
         if self._is_expired(entry):
             del self._data[key]
             self.expired += 1
+            self._bump("expired")
             return False
         return True
 
@@ -73,19 +83,24 @@ class LRUCache:
         for k in dead:
             del self._data[k]
             self.expired += 1
+            self._bump("expired")
 
     def get(self, key):
         """Value for key, refreshing recency; None on miss or expiry."""
         entry = self._data.get(key)
         if entry is None:
             self.misses += 1
+            self._bump("misses")
             return None
         if self._is_expired(entry):
             del self._data[key]
             self.expired += 1
+            self._bump("expired")
             self.misses += 1
+            self._bump("misses")
             return None
         self.hits += 1
+        self._bump("hits")
         self._data.move_to_end(key)
         return entry[0]
 
@@ -101,6 +116,7 @@ class LRUCache:
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
             self.evictions += 1
+            self._bump("evictions")
 
     def clear(self) -> None:
         self._data.clear()

@@ -40,7 +40,8 @@ feed and drain the same lane word incrementally instead of batch-at-a-time
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field, replace as _dc_replace
+from dataclasses import dataclass, field, fields as _dc_fields, \
+    replace as _dc_replace
 from typing import Any
 
 import jax
@@ -50,6 +51,7 @@ import numpy as np
 from repro.core import bfs as B, comm as C, engine as E, msbfs as M
 from repro.core.partition import partition_graph
 from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
+from repro.obs import BYTES_BUCKETS, NULL_OBS, RATIO_BUCKETS, Observability
 
 from .batcher import LaneScheduler
 from .cache import LRUCache
@@ -157,26 +159,16 @@ class ServeStats:
         self.nn_overflow += int(np.asarray(state.nn_overflow).sum())
 
     def as_dict(self) -> dict:
-        return {
-            "queries": self.queries, "batches": self.batches,
-            "cache_hits": self.cache_hits, "lanes_used": self.lanes_used,
-            "lanes_padded": self.lanes_padded, "refills": self.refills,
-            "sweeps": self.sweeps,
-            "lane_sweeps_busy": self.lane_sweeps_busy,
-            "lane_sweeps_total": self.lane_sweeps_total,
-            "early_stops": self.early_stops,
-            "reach_fast_batches": self.reach_fast_batches,
-            "component_hits": self.component_hits,
-            "dedup_hits": self.dedup_hits,
-            "sweep_blocks": self.sweep_blocks,
-            "kind_counts": dict(self.kind_counts),
-            "early_stops_by_kind": dict(self.early_stops_by_kind),
-            "wire_delegate_bytes": self.wire_delegate_bytes,
-            "wire_nn_bytes": self.wire_nn_bytes,
-            "wire_bytes_total": self.wire_bytes_total,
-            "nn_sparse_sweeps": self.nn_sparse_sweeps,
-            "nn_overflow": self.nn_overflow,
-        }
+        """Every counter field plus the derived ``wire_bytes_total``.
+
+        Derived from ``dataclasses.fields`` so a newly added counter can
+        never be silently dropped from exports (dict-valued fields are
+        copied; tests/test_obs.py pins the exactness)."""
+        out = {f.name: (dict(v) if isinstance(v := getattr(self, f.name),
+                                              dict) else v)
+               for f in _dc_fields(self)}
+        out["wire_bytes_total"] = self.wire_bytes_total
+        return out
 
 
 @dataclass
@@ -209,6 +201,7 @@ class _Session:
                                                   # TTL deadline forward
     cur: Any = None         # pipelined: in-flight block to process next
     head: Any = None        # pipelined: speculative successor block
+    t_submit: dict = field(default_factory=dict)  # obs: query -> submit ts
     has_reach: bool = False  # session saw a REACHABILITY query (gates defer)
     busy_at_dispatch: int = 0
     exclusive: bool = False  # state is exclusively owned (safe to donate)
@@ -277,6 +270,13 @@ class BFSServeEngine:
         (the convergence-poll cadence k; retirements still land exactly).
     specialize_reachability : compile homogeneous REACHABILITY batches to
         the levels-free msBFS variant (lazily, on first use).
+    obs : an :class:`repro.obs.Observability` plane; every pipeline stage
+        becomes a trace span (sweep blocks, boundaries, reseeds, gathers,
+        cache/component/dedup resolutions as instants) and every
+        ``ServeStats`` counter a metric, including per-kind
+        submit->deliver latency histograms. Tracing is host-side only --
+        the traversal schedule (and every counter) is bit-identical with
+        ``obs`` on or off. Default: the shared disabled plane (free).
     reuse_components : memoize reachability answers *per connected
         component*: on an undirected graph the reachable set is the
         source's component, so every later REACHABILITY query from an
@@ -307,7 +307,9 @@ class BFSServeEngine:
         sweep_block: int = 8,
         specialize_reachability: bool = True,
         reuse_components: bool = True,
+        obs: Observability | None = None,
     ):
+        self.obs = obs if obs is not None else NULL_OBS
         if pg is None:
             if graph is None:
                 raise ValueError("need graph= or pg=")
@@ -341,8 +343,18 @@ class BFSServeEngine:
             m = np.asarray(pg.nn.m).sum() + np.asarray(pg.dd.m).sum()
             graph_id = f"pg-n{pg.n}-p{pg.p}-d{pg.d}-th{pg.th}-m{int(m)}"
         self.graph_id = graph_id
-        self.cache = LRUCache(cache_capacity, ttl=cache_ttl)
+        self.cache = LRUCache(cache_capacity, ttl=cache_ttl, obs=self.obs)
         self.stats = ServeStats()
+        if self.obs.enabled:
+            # one metadata event anchoring the trace: graph shape + the
+            # comm plan's static strategy/byte model (core/comm/base.py)
+            self.obs.trace.instant(
+                "engine.init", graph_id=self.graph_id, n=int(pg.n),
+                p=int(pg.p), d=int(pg.d), th=int(pg.th),
+                n_queries=int(self.cfg.n_queries),
+                refill=self.refill, overlap=self.overlap,
+                sweep_block=self.sweep_block,
+                comm=self.cfg.comm.as_dict())
         self._layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
         # exactly the pg.d real delegate ids -- *empty* on a delegate-free
         # graph (the replicated arrays pad to max(d, 1) for static shapes,
@@ -426,6 +438,39 @@ class BFSServeEngine:
         return (self.specialize_reachability
                 and all(q.kind is QueryKind.REACHABILITY for q in queries))
 
+    # -- observability hooks ------------------------------------------------
+    def _record_latency(self, kind: QueryKind, dt: float) -> None:
+        """One submit->deliver latency sample, bucketed per query kind."""
+        self.obs.metrics.histogram(f"serve.latency_s.{kind.value}").record(dt)
+
+    def _note_traversal(self, state, sweeps: int) -> None:
+        """``stats.note_traversal`` plus the metrics mirror: the finished
+        traversal's wire volume as a per-sweep histogram sample."""
+        pre = self.stats.wire_bytes_total
+        self.stats.note_traversal(state)
+        if self.obs.enabled and sweeps > 0:
+            self.obs.metrics.histogram(
+                "serve.wire_bytes_per_sweep", BYTES_BUCKETS).record(
+                    (self.stats.wire_bytes_total - pre) / sweeps)
+
+    def _export_stats(self) -> None:
+        """Mirror every ``ServeStats`` counter into the metrics registry
+        (``as_dict`` is fields-derived, so a newly added counter shows up
+        here automatically)."""
+        if not self.obs.enabled:
+            return
+        m = self.obs.metrics
+        for k, v in self.stats.as_dict().items():
+            if isinstance(v, dict):
+                for kk, vv in v.items():
+                    m.gauge(f"serve.stats.{k}.{kk}").set(vv)
+            else:
+                m.gauge(f"serve.stats.{k}").set(v)
+        m.gauge("serve.lane_utilization").set(self.stats.lane_utilization)
+        if self.stats.sweep_blocks:
+            m.gauge("serve.fusion_factor").set(
+                self.stats.sweeps / self.stats.sweep_blocks)
+
     def _validate_queries(self, queries) -> None:
         """Range-check every source *and* target before any lane is seeded
         (the refill path seeds targets through ``_seed_descriptors``, which
@@ -472,21 +517,31 @@ class BFSServeEngine:
         reach_fast = self._reach_fast(queries)
         cfg = self._session_cfg(queries)
         run_full, _ = self._runner_pair(cfg)
-        st = self._put(M.init_multi_state(
-            self.pg, [q.source for q in queries], cfg,
-            depth_caps=[q.depth_cap for q in queries],
-            targets=[q.targets for q in queries]))
-        out = run_full(self.pgv, self.plan, st)
+        sweeps = 0
+        with self.obs.trace.span("serve.batch", n=len(queries),
+                                 reach_fast=reach_fast) as sp:
+            st = self._put(M.init_multi_state(
+                self.pg, [q.source for q in queries], cfg,
+                depth_caps=[q.depth_cap for q in queries],
+                targets=[q.targets for q in queries]))
+            out = run_full(self.pgv, self.plan, st)
+            with self.obs.trace.span("serve.gather", lanes=len(queries)):
+                if reach_fast:
+                    rows = M.gather_reachable_multi(self.pg, out)
+                else:
+                    rows = M.gather_levels_multi(self.pg, out)
+            if self.obs.enabled:
+                # host-side introspection only (the run already finished):
+                # never changes the traversal schedule or any counter
+                sweeps = int(np.asarray(out.it)[0])
+                sp.set(sweeps=sweeps)
         if reach_fast:
-            rows = M.gather_reachable_multi(self.pg, out)
             self.stats.reach_fast_batches += 1
-        else:
-            rows = M.gather_levels_multi(self.pg, out)
         stops = np.asarray(out.lane_stop)[0]
         self.stats.batches += 1
         self.stats.lanes_used += len(queries)
         self.stats.lanes_padded += w - len(queries)
-        self.stats.note_traversal(out)
+        self._note_traversal(out, sweeps)
         for i, q in enumerate(queries):
             if stops[i]:
                 self.stats.note_early_stop(q.kind)
@@ -554,16 +609,20 @@ class BFSServeEngine:
         """
         queries, dups = dedupe([as_query(q) for q in queries])
         self.stats.dedup_hits += dups
+        if dups and self.obs.enabled:
+            self.obs.trace.instant("serve.dedup", dropped=dups)
         if not queries:
             return {}
         self._validate_queries(queries)
-        sess = self._open_session(queries)
-        if self.overlap:
-            while sess.sched.n_busy:
-                self._pipeline_advance(sess)
-        else:
-            self._drain_sync(sess)
-        self._close_session(sess)
+        with self.obs.trace.span("serve.refill_drain", n=len(queries),
+                                 overlap=self.overlap):
+            sess = self._open_session(queries)
+            if self.overlap:
+                while sess.sched.n_busy:
+                    self._pipeline_advance(sess)
+            else:
+                self._drain_sync(sess)
+            self._close_session(sess)
         return sess.results
 
     # -- session machinery (shared by sync / pipelined / streaming) ---------
@@ -584,20 +643,24 @@ class BFSServeEngine:
             cfg = self.cfg
         else:
             cfg = self._session_cfg(queries)
-        _, step_once = self._runner_pair(cfg)
-        sess = _Session(
-            cfg=cfg, reach_fast=reach_fast,
-            sched=LaneScheduler(w, pending=() if stream else queries),
-            state=self._put(M.init_multi_state(self.pg, [], cfg)),
-            step_once=step_once, stream=stream,
-            n_queries_seen=0 if stream else len(queries), exclusive=True,
-            has_reach=any(q.kind is QueryKind.REACHABILITY for q in queries),
-        )
-        if self.overlap or stream:
-            sess.block, sess.block_donated = self._block_pair(cfg)
-        if reach_fast:
-            self.stats.reach_fast_batches += 1
-        self._fill(sess, initial=True)
+        with self.obs.trace.span("serve.session.open", n=len(queries),
+                                 stream=stream, reach_fast=reach_fast):
+            _, step_once = self._runner_pair(cfg)
+            sess = _Session(
+                cfg=cfg, reach_fast=reach_fast,
+                sched=LaneScheduler(w, pending=() if stream else queries,
+                                    obs=self.obs),
+                state=self._put(M.init_multi_state(self.pg, [], cfg)),
+                step_once=step_once, stream=stream,
+                n_queries_seen=0 if stream else len(queries), exclusive=True,
+                has_reach=any(q.kind is QueryKind.REACHABILITY
+                              for q in queries),
+            )
+            if self.overlap or stream:
+                sess.block, sess.block_donated = self._block_pair(cfg)
+            if reach_fast:
+                self.stats.reach_fast_batches += 1
+            self._fill(sess, initial=True)
         self.stats.batches += 1
         if not stream:
             self.stats.lanes_padded += max(0, w - len(queries))
@@ -615,7 +678,9 @@ class BFSServeEngine:
         mid-flight ``refills``."""
         fresh = sess.sched.fill_idle()
         if fresh:
-            sess.state = self._reseed(sess, fresh)
+            with self.obs.trace.span("serve.reseed", lanes=len(fresh),
+                                     initial=initial):
+                sess.state = self._reseed(sess, fresh)
             sess.exclusive = True
             self.stats.lanes_used += len(fresh)
             sess.lanes_seeded += len(fresh)
@@ -650,52 +715,60 @@ class BFSServeEngine:
             return False, None
         fin_lanes = np.nonzero(finished)[0]
         pre_state = sess.state
-        if not defer:
-            # only the retired lanes' columns leave the device: [k, n]
-            if sess.reach_fast:
-                rows = M.gather_reachable_multi(self.pg, pre_state,
-                                                lanes=fin_lanes)
-            else:
-                rows = M.gather_levels_multi(self.pg, pre_state,
-                                             lanes=fin_lanes)
-        stops = np.asarray(pre_state.lane_stop)[0]
-        fins = []
-        for i, q in enumerate(fin_lanes):
-            item, gen = sched.retire(int(q))
-            assert sess.expected.pop(item) == (int(q), gen), (
-                "lane generation bookkeeping out of sync")
-            fins.append(item)
+        with self.obs.trace.span("serve.boundary", retired=len(fin_lanes),
+                                 defer=defer):
             if not defer:
-                sess.complete(item, unpack_result(
-                    item, rows[i], packed_reach=sess.reach_fast))
-                self._register_component(item, results[item])
-            if stops[q]:
-                self.stats.note_early_stop(item.kind)
-        if self.reuse_components:
-            # a freshly mapped component may cover other reachability
-            # queries: answer pending ones without a lane, and cut
-            # *active* lanes short -- their traversal result is already
-            # known, so a deep straggler stops costing sweeps the
-            # moment any same-component lane retires
-            for lane in np.nonzero(sched.busy)[0]:
-                mask = self._component_of(as_query(sched.lane_item[lane]))
-                if mask is not None:
-                    item, _ = sched.retire(int(lane))
-                    sess.expected.pop(item)
-                    sess.complete(item, np.array(mask))
-                    self.stats.component_hits += 1
-            if sched.pending:
-                keep = []
-                for item in sched.pending:
-                    mask = self._component_of(as_query(item))
-                    if mask is None:
-                        keep.append(item)
+                # only the retired lanes' columns leave the device: [k, n]
+                with self.obs.trace.span("serve.gather",
+                                         lanes=len(fin_lanes)):
+                    if sess.reach_fast:
+                        rows = M.gather_reachable_multi(self.pg, pre_state,
+                                                        lanes=fin_lanes)
                     else:
+                        rows = M.gather_levels_multi(self.pg, pre_state,
+                                                     lanes=fin_lanes)
+            stops = np.asarray(pre_state.lane_stop)[0]
+            fins = []
+            for i, q in enumerate(fin_lanes):
+                item, gen = sched.retire(int(q))
+                assert sess.expected.pop(item) == (int(q), gen), (
+                    "lane generation bookkeeping out of sync")
+                fins.append(item)
+                if not defer:
+                    sess.complete(item, unpack_result(
+                        item, rows[i], packed_reach=sess.reach_fast))
+                    self._register_component(item, results[item])
+                if stops[q]:
+                    self.stats.note_early_stop(item.kind)
+            if self.reuse_components:
+                # a freshly mapped component may cover other reachability
+                # queries: answer pending ones without a lane, and cut
+                # *active* lanes short -- their traversal result is already
+                # known, so a deep straggler stops costing sweeps the
+                # moment any same-component lane retires
+                for lane in np.nonzero(sched.busy)[0]:
+                    mask = self._component_of(as_query(sched.lane_item[lane]))
+                    if mask is not None:
+                        item, _ = sched.retire(int(lane))
+                        sess.expected.pop(item)
                         sess.complete(item, np.array(mask))
                         self.stats.component_hits += 1
-                sched.pending.clear()
-                sched.pending.extend(keep)
-        self._fill(sess)
+                        if self.obs.enabled:
+                            self.obs.trace.instant(
+                                "serve.component.cut",
+                                source=getattr(item, "source", item))
+                if sched.pending:
+                    keep = []
+                    for item in sched.pending:
+                        mask = self._component_of(as_query(item))
+                        if mask is None:
+                            keep.append(item)
+                        else:
+                            sess.complete(item, np.array(mask))
+                            self.stats.component_hits += 1
+                    sched.pending.clear()
+                    sched.pending.extend(keep)
+            self._fill(sess)
         return True, ((pre_state, fin_lanes, fins) if defer else None)
 
     def _finish_boundary(self, sess: _Session, deferred) -> None:
@@ -704,20 +777,31 @@ class BFSServeEngine:
         run after the next block is already in flight, so the host-side
         unpacking overlaps the device's next sweeps."""
         pre_state, fin_lanes, fins = deferred
-        if sess.reach_fast:
-            rows = M.gather_reachable_multi(self.pg, pre_state, lanes=fin_lanes)
-        else:
-            rows = M.gather_levels_multi(self.pg, pre_state, lanes=fin_lanes)
-        for i, item in enumerate(fins):
-            sess.complete(item, unpack_result(item, rows[i],
-                                              packed_reach=sess.reach_fast))
-            self._register_component(item, sess.results[item])
+        with self.obs.trace.span("serve.gather.deferred",
+                                 lanes=len(fin_lanes)):
+            if sess.reach_fast:
+                rows = M.gather_reachable_multi(self.pg, pre_state,
+                                                lanes=fin_lanes)
+            else:
+                rows = M.gather_levels_multi(self.pg, pre_state,
+                                             lanes=fin_lanes)
+            for i, item in enumerate(fins):
+                sess.complete(item, unpack_result(
+                    item, rows[i], packed_reach=sess.reach_fast))
+                self._register_component(item, sess.results[item])
 
     def _close_session(self, sess: _Session) -> None:
-        self.stats.note_traversal(sess.state)
+        self._note_traversal(sess.state, sess.sweeps)
         if sess.stream:
             self.stats.lanes_padded += max(
                 0, self.cfg.n_queries - sess.lanes_seeded)
+        if self.obs.enabled:
+            self.obs.metrics.histogram(
+                "serve.session_sweeps", RATIO_BUCKETS).record(sess.sweeps)
+            self.obs.trace.instant("serve.session.close",
+                                   sweeps=sess.sweeps,
+                                   results=len(sess.results))
+            self._export_stats()
 
     # -- synchronous per-sweep driver ---------------------------------------
     def _drain_sync(self, sess: _Session) -> None:
@@ -726,19 +810,25 @@ class BFSServeEngine:
         ground-truth schedule the overlapped driver must reproduce)."""
         sched = sess.sched
         w = self.cfg.n_queries
+        obs = self.obs
         while sched.n_busy:
             busy_now = sched.n_busy
-            sess.state = sess.step_once(self.pgv, self.plan, sess.state)
-            sess.exclusive = False
-            sess.sweeps += 1
-            self.stats.sweeps += 1
-            self.stats.lane_sweeps_busy += busy_now
-            self.stats.lane_sweeps_total += w
-            if sess.sweeps > sess.guard:
-                raise RuntimeError(
-                    f"refill pipeline exceeded {sess.guard} sweeps with "
-                    f"{sched.n_busy} lanes still busy")
-            active = np.asarray(sess.state.lane_active)[0]
+            t0 = obs.clock() if obs.enabled else 0.0
+            with obs.trace.span("serve.sweep", busy=busy_now):
+                sess.state = sess.step_once(self.pgv, self.plan, sess.state)
+                sess.exclusive = False
+                sess.sweeps += 1
+                self.stats.sweeps += 1
+                self.stats.lane_sweeps_busy += busy_now
+                self.stats.lane_sweeps_total += w
+                if sess.sweeps > sess.guard:
+                    raise RuntimeError(
+                        f"refill pipeline exceeded {sess.guard} sweeps with "
+                        f"{sched.n_busy} lanes still busy")
+                active = np.asarray(sess.state.lane_active)[0]
+            if obs.enabled:
+                obs.metrics.histogram("serve.sweep_duration_s").record(
+                    obs.clock() - t0)
             self._process_boundary(sess, active)
 
     # -- overlapped pipelined driver ----------------------------------------
@@ -761,6 +851,7 @@ class BFSServeEngine:
         """
         sched = sess.sched
         w = self.cfg.n_queries
+        obs = self.obs
         if sess.cur is None:
             if not sched.n_busy:
                 if not sched.pending:
@@ -769,6 +860,8 @@ class BFSServeEngine:
             watch = np.ascontiguousarray(sched.busy)
             blockfn = (sess.block_donated if self._donate and sess.exclusive
                        else sess.block)
+            if obs.enabled:
+                obs.trace.instant("serve.block.dispatch", busy=sched.n_busy)
             sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
             sess.exclusive = False
             # no speculation on a fresh dispatch: this site is only reached
@@ -783,16 +876,23 @@ class BFSServeEngine:
         if not wait and not _is_ready(sess.cur.lane_active):
             return False
         cur = sess.cur
-        jax.block_until_ready(cur.lane_active)   # the lagging handle only
-        active = np.asarray(cur.lane_active)[0]
-        if (sched.busy & ~active).any():
-            # the block early-stopped at the retirement sweep: read the
-            # executed count off the device iteration counter
-            it_cur = int(np.asarray(cur.it)[0])
-        else:
-            # no watched lane retired, so the fused loop ran its full k
-            # sweeps -- no second device fetch needed
-            it_cur = sess.it_prev + self.sweep_block
+        t0 = obs.clock() if obs.enabled else 0.0
+        with obs.trace.span("serve.block.wait",
+                            busy=sess.busy_at_dispatch) as bsp:
+            jax.block_until_ready(cur.lane_active)   # the lagging handle only
+            active = np.asarray(cur.lane_active)[0]
+            if (sched.busy & ~active).any():
+                # the block early-stopped at the retirement sweep: read the
+                # executed count off the device iteration counter
+                it_cur = int(np.asarray(cur.it)[0])
+            else:
+                # no watched lane retired, so the fused loop ran its full k
+                # sweeps -- no second device fetch needed
+                it_cur = sess.it_prev + self.sweep_block
+            bsp.set(sweeps=it_cur - sess.it_prev)
+        if obs.enabled:
+            obs.metrics.histogram("serve.block_wait_s").record(
+                obs.clock() - t0)
         ran = it_cur - sess.it_prev
         busy_now = sess.busy_at_dispatch
         sess.it_prev = it_cur
@@ -828,6 +928,9 @@ class BFSServeEngine:
                 watch = np.ascontiguousarray(sched.busy)
                 blockfn = (sess.block_donated
                            if self._donate and sess.exclusive else sess.block)
+                if obs.enabled:
+                    obs.trace.instant("serve.block.dispatch",
+                                      busy=sched.n_busy)
                 sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
                 sess.exclusive = False
                 sess.busy_at_dispatch = sched.n_busy
@@ -845,6 +948,8 @@ class BFSServeEngine:
             if nxt is None:
                 nxt = sess.block(self.pgv, self.plan, cur, watch)
             sess.cur = nxt
+            if obs.enabled:
+                obs.trace.instant("serve.block.speculate", busy=sched.n_busy)
             sess.head = sess.block(self.pgv, self.plan, nxt, watch)
             sess.busy_at_dispatch = sched.n_busy
         return True
@@ -889,6 +994,14 @@ class BFSServeEngine:
         self.stats.queries += len(qs)
         for q in qs:
             self.stats.note_kind(q.kind)
+        obs = self.obs
+        if obs.enabled:
+            obs.trace.instant("serve.submit_stream", n=len(qs))
+            now = obs.clock()
+            for q in qs:
+                # latest-submit wins: a re-submission restarts the
+                # submit->deliver latency clock for its next delivery
+                sess.t_submit[q] = now
         enqueued = 0
         for q in qs:
             if q in sess.seen:
@@ -917,11 +1030,17 @@ class BFSServeEngine:
             hit = self.cache.get(q.key(self.graph_id))
             if hit is not None:
                 self.stats.cache_hits += 1
+                if obs.enabled:
+                    obs.trace.instant("serve.cache.hit", source=q.source,
+                                      kind=q.kind.value)
                 sess.complete(q, hit, skip_cache=True)
                 continue
             mask = self._component_of(q)
             if mask is not None:
                 self.stats.component_hits += 1
+                if obs.enabled:
+                    obs.trace.instant("serve.component.hit",
+                                      source=q.source)
                 sess.complete(q, np.array(mask), skip_cache=True)
                 continue
             if q.kind is QueryKind.REACHABILITY:
@@ -943,9 +1062,10 @@ class BFSServeEngine:
         sess = self._stream
         if sess is None:
             return {}
-        if sess.sched.n_busy or sess.sched.pending:
-            self._pipeline_advance(sess, wait=wait)
-        return self._deliver(sess)
+        with self.obs.trace.span("serve.poll", wait=wait):
+            if sess.sched.n_busy or sess.sched.pending:
+                self._pipeline_advance(sess, wait=wait)
+            return self._deliver(sess)
 
     def drain_stream(self) -> dict:
         """Run the stream to completion, close the session, and return
@@ -967,6 +1087,7 @@ class BFSServeEngine:
         O(in-flight) in host memory, not O(every query ever streamed);
         later re-submissions are answered from the LRU or re-traversed."""
         own = lambda r: dict(r) if isinstance(r, dict) else np.array(r)
+        obs = self.obs
         out = {}
         while sess.undelivered:
             q = sess.undelivered.popleft()
@@ -978,7 +1099,13 @@ class BFSServeEngine:
             if q not in sess.cached:
                 self.cache.put(q.key(self.graph_id), res)
                 sess.cached.add(q)
+            if obs.enabled:
+                ts = sess.t_submit.pop(q, None)
+                if ts is not None:
+                    self._record_latency(q.kind, obs.clock() - ts)
             out[q] = own(res)
+        if out and obs.enabled:
+            self._export_stats()
         return out
 
     # -- public API ---------------------------------------------------------
@@ -992,6 +1119,8 @@ class BFSServeEngine:
         if not qs:
             return []
         self._validate_queries(qs)
+        obs = self.obs
+        t0 = obs.clock() if obs.enabled else 0.0
         self.stats.queries += len(qs)
         for q in qs:
             self.stats.note_kind(q.kind)
@@ -1001,15 +1130,24 @@ class BFSServeEngine:
             hit = self.cache.get(q.key(self.graph_id))
             if hit is not None:
                 self.stats.cache_hits += 1
+                if obs.enabled:
+                    obs.trace.instant("serve.cache.hit", source=q.source,
+                                      kind=q.kind.value)
                 results[q] = hit
                 continue
             if self.reuse_components and q.kind is QueryKind.REACHABILITY:
                 cid = self._comp_id[q.source]
                 if cid >= 0:   # component already mapped: mask is the answer
                     self.stats.component_hits += 1
+                    if obs.enabled:
+                        obs.trace.instant("serve.component.hit",
+                                          source=q.source)
                     results[q] = np.array(self._comp_masks[cid])
                     continue
             misses.append(q)
+        if obs.enabled:
+            obs.trace.instant("serve.submit_many", n=len(qs),
+                              misses=len(misses))
         if self.refill:
             served = self.run_refill_queries(misses)
         else:
@@ -1039,6 +1177,13 @@ class BFSServeEngine:
         for q, res in served.items():
             results[q] = res
             self.cache.put(q.key(self.graph_id), res)
+        if obs.enabled:
+            # a blocking submit delivers everything at once: one
+            # submit->deliver latency sample per query, bucketed per kind
+            dt = obs.clock() - t0
+            for q in qs:
+                self._record_latency(q.kind, dt)
+            self._export_stats()
         # hand out copies: the same object is cached (and shared by
         # duplicate queries), so caller mutation must never reach it
         own = lambda r: dict(r) if isinstance(r, dict) else np.array(r)
@@ -1074,19 +1219,20 @@ class BFSServeEngine:
         if reachability and self.specialize_reachability:
             cfgs.append(_dc_replace(self.cfg, track_levels=False,
                                     enable_targets=False))
-        for cfg in cfgs:
-            run_full, step_once = self._runner_pair(cfg)
-            st = self._put(M.init_multi_state(self.pg, [0], cfg))
-            if self.refill:
-                step_once(self.pgv, self.plan, st)
-                desc = self._seed_descriptors([])
-                M.reseed_lanes(st, *map(jnp.asarray, desc))
-                if self.overlap:
-                    # all-ones watch with only lane 0 active: the block's
-                    # stop condition fires at entry, so this compiles the
-                    # fused loop without running sweeps
-                    block, _ = self._block_pair(cfg)
-                    block(self.pgv, self.plan, st,
-                          np.ones(self.cfg.n_queries, dtype=bool))
-            else:
-                run_full(self.pgv, self.plan, st)
+        with self.obs.trace.span("serve.warmup", variants=len(cfgs)):
+            for cfg in cfgs:
+                run_full, step_once = self._runner_pair(cfg)
+                st = self._put(M.init_multi_state(self.pg, [0], cfg))
+                if self.refill:
+                    step_once(self.pgv, self.plan, st)
+                    desc = self._seed_descriptors([])
+                    M.reseed_lanes(st, *map(jnp.asarray, desc))
+                    if self.overlap:
+                        # all-ones watch with only lane 0 active: the
+                        # block's stop condition fires at entry, so this
+                        # compiles the fused loop without running sweeps
+                        block, _ = self._block_pair(cfg)
+                        block(self.pgv, self.plan, st,
+                              np.ones(self.cfg.n_queries, dtype=bool))
+                else:
+                    run_full(self.pgv, self.plan, st)

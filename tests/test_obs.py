@@ -1,0 +1,378 @@
+"""Observability plane: tracer/metrics unit pins (injectable clock, ring
+overflow, deterministic percentiles, Chrome export validity), the
+ServeStats.as_dict exactness contract, the bench-gate classification
+logic, and the plane's central invariant -- attaching tracing/metrics to
+the serving engine never changes the traversal schedule (ServeStats
+sweep and wire counters bit-identical obs-on vs obs-off, every answer
+identical) across the batch, refill, and overlapped drivers."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import msbfs as M
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.obs import (LATENCY_BUCKETS, NULL_INSTRUMENT, NULL_OBS, NULL_SPAN,
+                       Histogram, MetricsRegistry, Observability, Tracer,
+                       exp_buckets)
+from repro.serve import BFSServeEngine, Query, QueryKind, oracle_check
+from repro.serve.cache import LRUCache
+from repro.serve.engine import ServeStats
+
+
+class FakeClock:
+    """Deterministic clock: every call advances by ``step`` seconds."""
+
+    def __init__(self, step=1.0, t0=100.0):
+        self.t = t0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# ------------------------------------------------------------------ tracer
+def test_span_nesting_depth_and_duration():
+    clk = FakeClock(step=1.0)
+    tr = Tracer(clock=clk)
+    with tr.span("outer"):
+        with tr.span("inner", k=3):
+            tr.instant("mark", v=7)
+    evs = tr.events()
+    by_name = {e.name: e for e in evs}
+    assert set(by_name) == {"outer", "inner", "mark"}
+    assert by_name["outer"].depth == 0
+    assert by_name["inner"].depth == 1
+    assert by_name["mark"].dur is None          # instant
+    assert by_name["inner"].args == {"k": 3}
+    # fake clock: each read +1s; inner opens after outer, closes before it
+    assert by_name["inner"].dur < by_name["outer"].dur
+    assert by_name["outer"].ts < by_name["inner"].ts
+
+
+def test_span_set_attaches_args_inside_block():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("work") as sp:
+        sp.set(sweeps=12)
+    (ev,) = tr.events()
+    assert ev.args["sweeps"] == 12
+
+
+def test_ring_buffer_overflow_counts_dropped():
+    tr = Tracer(capacity=4, clock=FakeClock())
+    for i in range(10):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 4
+    assert [e.name for e in evs] == ["e6", "e7", "e8", "e9"]  # newest kept
+    assert tr.dropped == 6
+    tr.clear()
+    assert tr.events() == [] and tr.dropped == 0
+
+
+def test_disabled_tracer_is_free():
+    tr = Tracer(enabled=False, clock=FakeClock())
+    assert tr.span("x") is NULL_SPAN
+    tr.instant("y")
+    assert tr.events() == []
+    # NULL_SPAN is reusable and accepts set()
+    with NULL_SPAN as sp:
+        sp.set(anything=1)
+
+
+def test_chrome_export_is_valid(tmp_path):
+    tr = Tracer(clock=FakeClock(step=0.5))
+    with tr.span("serve.batch", n=2):
+        tr.instant("serve.cache.hit")
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert phases == {"M", "X", "i"}
+    for e in evs:
+        if e["ph"] == "M":
+            continue
+        assert isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+        assert e["pid"] == 0 and "tid" in e and "name" in e
+        if e["ph"] == "X":
+            assert e["dur"] > 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    # timestamps are microseconds, monotonically sorted
+    ts = [e["ts"] for e in evs if e["ph"] != "M"]
+    assert ts == sorted(ts)
+    # category derives from the event-name prefix taxonomy
+    assert all(e.get("cat") == "serve" for e in evs if e["ph"] != "M")
+
+
+# ----------------------------------------------------------------- metrics
+def test_histogram_deterministic_percentiles():
+    h = Histogram(bounds=exp_buckets(1e-3, 1e3, 3))
+    for v in [0.001, 0.01, 0.01, 0.1, 1.0, 10.0]:
+        h.record(v)
+    s = h.summary()
+    assert s["count"] == 6
+    assert s["min"] == pytest.approx(0.001)
+    assert s["max"] == pytest.approx(10.0)
+    assert s["mean"] == pytest.approx(sum([0.001, 0.01, 0.01, 0.1, 1.0,
+                                           10.0]) / 6)
+    # percentiles are bucket-interpolated but clamped to observed extremes,
+    # and deterministic: same records -> same numbers
+    h2 = Histogram(bounds=exp_buckets(1e-3, 1e3, 3))
+    for v in [0.001, 0.01, 0.01, 0.1, 1.0, 10.0]:
+        h2.record(v)
+    for p in (50, 95, 99):
+        assert h.percentile(p) == h2.percentile(p)
+        assert 0.001 <= h.percentile(p) <= 10.0
+    assert h.percentile(50) <= h.percentile(95) <= h.percentile(99)
+
+
+def test_histogram_empty_and_single():
+    h = Histogram(bounds=LATENCY_BUCKETS)
+    assert h.percentile(50) == 0.0
+    assert h.summary()["count"] == 0
+    h.record(0.25)
+    assert h.percentile(50) == pytest.approx(0.25)
+    assert h.percentile(99) == pytest.approx(0.25)
+
+
+def test_registry_instruments_and_snapshot(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a.hits").inc()
+    reg.counter("a.hits").inc(2)
+    reg.gauge("a.depth").set(7)
+    reg.histogram("a.lat").record(0.5)
+    snap = reg.snapshot()
+    assert snap["counters"]["a.hits"] == 3
+    assert snap["gauges"]["a.depth"] == 7
+    assert snap["histograms"]["a.lat"]["count"] == 1
+    text = reg.render_text()
+    assert "a.hits" in text and "a.lat" in text
+    path = tmp_path / "metrics.json"
+    reg.export_json(str(path))
+    assert json.loads(path.read_text())["counters"]["a.hits"] == 3
+
+
+def test_disabled_registry_is_free():
+    reg = MetricsRegistry(enabled=False)
+    assert reg.counter("x") is NULL_INSTRUMENT
+    assert reg.gauge("y") is NULL_INSTRUMENT
+    assert reg.histogram("z") is NULL_INSTRUMENT
+    NULL_INSTRUMENT.inc()
+    NULL_INSTRUMENT.set(3)
+    NULL_INSTRUMENT.record(1.0)
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert not NULL_OBS.enabled
+
+
+def test_cache_counters_mirror_into_metrics():
+    clk = FakeClock(step=1.0)
+    obs = Observability(clock=clk)
+    c = LRUCache(capacity=1, ttl=None, clock=clk, obs=obs)
+    assert c.get("k") is None                   # miss
+    c.put("k", 1)
+    assert c.get("k") == 1                      # hit
+    c.put("k2", 2)                              # evicts k
+    snap = obs.metrics.snapshot()["counters"]
+    assert snap["serve.cache.misses"] == 1
+    assert snap["serve.cache.hits"] == 1
+    assert snap["serve.cache.evictions"] == 1
+
+
+# ------------------------------------------------------- ServeStats.as_dict
+def test_servestats_as_dict_exact():
+    """as_dict must cover every dataclass field (it is derived from
+    dataclasses.fields, so a new counter can never silently go missing)
+    plus the wire_bytes_total derived property, and deep-copy dict
+    fields."""
+    st = ServeStats()
+    d = st.as_dict()
+    expected = {f.name for f in dataclasses.fields(ServeStats)}
+    assert set(d) == expected | {"wire_bytes_total"}
+    assert d["wire_bytes_total"] == st.wire_bytes_total
+    # dict-valued fields are copies, not aliases
+    for f in dataclasses.fields(ServeStats):
+        v = getattr(st, f.name)
+        if isinstance(v, dict):
+            d[f.name]["__probe__"] = 1
+            assert "__probe__" not in getattr(st, f.name)
+
+
+# --------------------------------------------- schedule stays bit-identical
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(8, seed=11)
+
+
+def mixed_queries(srcs):
+    tg = tuple(int(s) for s in srcs[:2])
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=2),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tg)]
+    return [kinds[i % 4](int(s)) for i, s in enumerate(srcs)]
+
+
+def make_engine(g, obs=None, **kw):
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=96)
+    return BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, cfg=cfg,
+                          cache_capacity=0, obs=obs, **kw)
+
+
+@pytest.mark.parametrize("mode", ["batch", "refill", "overlap"])
+def test_obs_never_changes_schedule(graph, mode):
+    """The pinned invariant of the whole plane: every ServeStats counter
+    -- sweeps, refills, wire bytes, early stops, all of them -- is
+    bit-identical between an instrumented engine and a bare one, and so
+    is every answer."""
+    g = graph
+    kw = {"batch": {}, "refill": {"refill": True},
+          "overlap": {"refill": True, "overlap": True}}[mode]
+    srcs = pick_sources(g, 8, seed=3)
+    queries = mixed_queries(srcs)
+
+    obs = Observability()
+    eng_obs = make_engine(g, obs=obs, **kw)
+    eng_off = make_engine(g, obs=None, **kw)
+    ans_obs = eng_obs.submit_many(queries)
+    ans_off = eng_off.submit_many(queries)
+
+    assert eng_obs.stats.as_dict() == eng_off.stats.as_dict()
+    for q, a, b in zip(queries, ans_obs, ans_off):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        oracle_check(g, q, a)
+    # and the instrumented run actually observed something
+    assert obs.trace.events()
+    hists = obs.metrics.snapshot()["histograms"]
+    assert any(k.startswith("serve.latency_s.") for k in hists)
+
+
+def test_engine_trace_and_metrics_export(graph, tmp_path):
+    """A traced serving run exports a valid Chrome/Perfetto trace and a
+    metrics snapshot with per-kind latency percentiles."""
+    g = graph
+    obs = Observability()
+    eng = make_engine(g, obs=obs, refill=True)
+    queries = mixed_queries(pick_sources(g, 8, seed=5))
+    eng.submit_many(queries)
+
+    tpath, mpath = tmp_path / "trace.json", tmp_path / "metrics.json"
+    obs.export(str(tpath), str(mpath))
+    doc = json.loads(tpath.read_text())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "serve.submit_many" in names
+    assert any(n.startswith("serve.sweep") for n in names)
+
+    snap = json.loads(mpath.read_text())
+    for kind in ("levels", "reachability", "distance_limited",
+                 "multi_target"):
+        h = snap["histograms"][f"serve.latency_s.{kind}"]
+        assert h["count"] == 2                  # 8 queries, 4 kinds
+        assert 0 <= h["p50"] <= h["p99"]
+    assert snap["gauges"]["serve.stats.sweeps"] == eng.stats.sweeps
+
+
+# -------------------------------------------------------------- bench gate
+def _doc(**sections):
+    return {"schema": "repro-bench/1", "meta": {"backend": "cpu"},
+            "benchmarks": sections}
+
+
+def test_gate_identical_docs_pass():
+    from benchmarks.gate import gate
+
+    doc = _doc(mixed={"graph": {"n": 10}, "sweeps": 5, "qps": {"levels": 3.0}})
+    rep = gate(doc, doc)
+    assert rep["status"] == "pass"
+    assert all(f["status"] == "ok" for f in rep["findings"])
+
+
+def test_gate_perf_tolerance_band():
+    from benchmarks.gate import gate
+
+    base = _doc(mixed={"graph": {"n": 10}, "qps_levels": 100.0})
+    ok = gate(base, _doc(mixed={"graph": {"n": 10}, "qps_levels": 60.0}),
+              perf_tolerance=0.5)
+    assert ok["status"] == "pass"               # 40% down, inside 50% band
+    bad = gate(base, _doc(mixed={"graph": {"n": 10}, "qps_levels": 40.0}),
+               perf_tolerance=0.5)
+    assert bad["status"] == "fail"
+    (f,) = [f for f in bad["findings"] if f["status"] == "regression"]
+    assert f["metric"] == "mixed.qps_levels" and f["class"] == "perf"
+
+
+def test_gate_time_like_regresses_upward():
+    from benchmarks.gate import gate
+
+    base = _doc(mixed={"graph": {"n": 10}, "time_s": 1.0})
+    assert gate(base, _doc(mixed={"graph": {"n": 10}, "time_s": 1.3})
+                )["status"] == "pass"
+    assert gate(base, _doc(mixed={"graph": {"n": 10}, "time_s": 2.0})
+                )["status"] == "fail"
+
+
+def test_gate_exact_drift_fails():
+    from benchmarks.gate import gate
+
+    base = _doc(mixed={"graph": {"n": 10}, "sweeps": 5})
+    rep = gate(base, _doc(mixed={"graph": {"n": 10}, "sweeps": 6}))
+    assert rep["status"] == "fail"
+    (f,) = [f for f in rep["findings"] if f["status"] == "drift"]
+    assert f["metric"] == "mixed.sweeps"
+
+
+def test_gate_shape_mismatch_skips_section():
+    from benchmarks.gate import gate
+
+    base = _doc(mixed={"graph": {"n": 10}, "sweeps": 5, "qps_levels": 1.0})
+    rep = gate(base, _doc(mixed={"graph": {"n": 99}, "sweeps": 999,
+                                 "qps_levels": 0.01}))
+    assert rep["status"] == "pass"              # incomparable, not broken
+    assert [f["status"] for f in rep["findings"]] == ["skip"]
+
+
+def test_gate_missing_section_and_new_metric():
+    from benchmarks.gate import gate
+
+    base = _doc(mixed={"sweeps": 5}, overlap={"sweeps": 2})
+    rep = gate(base, _doc(mixed={"sweeps": 5, "extra": 1}))
+    statuses = {f["metric"]: f["status"] for f in rep["findings"]}
+    assert statuses["overlap"] == "missing"
+    assert statuses["mixed.extra"] == "new"
+    assert rep["status"] == "fail"              # missing section is fatal
+
+
+def test_gate_files_and_legacy_schema(tmp_path):
+    from benchmarks.common import BENCH_SCHEMA, load_bench
+    from benchmarks.gate import gate_files
+
+    legacy = {"graph": {"n": 10}, "sweeps": 4,
+              "overlap": {"sweeps": 4, "fusion": 2.0}}
+    lpath = tmp_path / "legacy.json"
+    lpath.write_text(json.dumps(legacy))
+    doc = load_bench(str(lpath))
+    assert doc["schema"] == BENCH_SCHEMA
+    assert set(doc["benchmarks"]) == {"mixed", "overlap"}
+
+    npath = tmp_path / "new.json"
+    npath.write_text(json.dumps(
+        _doc(mixed={"graph": {"n": 10}, "sweeps": 4},
+             overlap={"sweeps": 4, "fusion": 2.0})))
+    rep = gate_files([str(lpath)], [str(npath)])
+    assert rep["status"] == "pass"
+
+
+def test_write_bench_merges_sections(tmp_path):
+    from benchmarks.common import BENCH_SCHEMA, load_bench, write_bench
+
+    path = str(tmp_path / "b.json")
+    write_bench(path, "mixed", {"sweeps": 3})
+    write_bench(path, "overlap", {"sweeps": 3, "fusion": 1.5})
+    doc = load_bench(path)
+    assert doc["schema"] == BENCH_SCHEMA
+    assert set(doc["benchmarks"]) == {"mixed", "overlap"}
+    assert doc["benchmarks"]["mixed"] == {"sweeps": 3}
+    assert doc["meta"]["backend"]
