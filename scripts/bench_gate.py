@@ -2,7 +2,7 @@
 """Perf-regression gate over the committed benchmark baselines.
 
 Default invocation diffs the committed ``BENCH_queries.json`` /
-``BENCH_comm.json`` against themselves -- a schema/parse check that always
+``BENCH_comm.json`` / ``BENCH_serving.json`` against themselves -- a schema/parse check that always
 passes, suitable as a CI smoke step::
 
     PYTHONPATH=src python scripts/bench_gate.py
@@ -41,11 +41,12 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
     asserts disarmed (correctness asserts -- oracle exactness, counter
     bit-identicality, wire-volume orderings -- stay armed). Returns
     {basename: error-or-None}."""
-    from benchmarks import comm_model, msbfs_throughput
+    from benchmarks import comm_model, msbfs_throughput, serving_frontend
 
     os.makedirs(workdir, exist_ok=True)
     qpath = os.path.join(workdir, "BENCH_queries.json")
     cpath = os.path.join(workdir, "BENCH_comm.json")
+    spath = os.path.join(workdir, "BENCH_serving.json")
     kw = {} if scale_override is None else {"scale": scale_override}
     errors: dict = {}
     for name, fn in (
@@ -55,6 +56,8 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
             out_json=qpath, min_speedup=0.0, **kw)),
         ("comm_strategies", lambda: comm_model.run_strategies(
             out_path=cpath, **kw)),
+        ("frontend", lambda: serving_frontend.run_frontend(
+            out_json=spath, min_speedup=0.0, **kw)),
     ):
         try:
             fn()
@@ -70,7 +73,8 @@ def main(argv=None) -> int:
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--baseline", nargs="+",
                     default=[os.path.join(_REPO, "BENCH_queries.json"),
-                             os.path.join(_REPO, "BENCH_comm.json")],
+                             os.path.join(_REPO, "BENCH_comm.json"),
+                             os.path.join(_REPO, "BENCH_serving.json")],
                     help="baseline artifact files (committed BENCH_*.json)")
     ap.add_argument("--candidate", nargs="+", default=None,
                     help="candidate artifact files, paired with --baseline "

@@ -31,7 +31,8 @@ import time
 
 from .metrics import (BYTES_BUCKETS, LATENCY_BUCKETS, NULL_INSTRUMENT,
                       RATIO_BUCKETS, Counter, Gauge, Histogram,
-                      MetricsRegistry, exp_buckets)
+                      MetricsRegistry, exp_buckets, sanitize_label,
+                      tenant_metric)
 from .trace import NULL_SPAN, TraceEvent, Tracer
 
 
@@ -68,4 +69,5 @@ __all__ = [
     "BYTES_BUCKETS", "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS",
     "MetricsRegistry", "NULL_INSTRUMENT", "NULL_OBS", "NULL_SPAN",
     "Observability", "RATIO_BUCKETS", "TraceEvent", "Tracer", "exp_buckets",
+    "sanitize_label", "tenant_metric",
 ]

@@ -27,6 +27,7 @@ from __future__ import annotations
 import bisect
 import json
 import math
+import re
 
 
 def exp_buckets(lo: float, hi: float, per_decade: int = 3) -> tuple:
@@ -230,3 +231,26 @@ class MetricsRegistry:
     def export_json(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.snapshot(), f, indent=2)
+
+
+# -- per-tenant metric naming ------------------------------------------------
+# Metric names are dot-separated hierarchies (``serve.cache.hits``); tenant
+# and graph names come from callers and may contain anything, so they are
+# sanitized into one path segment before being embedded -- a tenant named
+# ``"acme.eu"`` must not silently fork the hierarchy.
+_LABEL_UNSAFE = re.compile(r"[^0-9A-Za-z_\-]")
+
+
+def sanitize_label(label) -> str:
+    """Metric-segment-safe form of a free-form label: every character
+    outside ``[0-9A-Za-z_-]`` (dots included -- they are the hierarchy
+    separator) becomes ``_``; empty labels become ``_``."""
+    return _LABEL_UNSAFE.sub("_", str(label)) or "_"
+
+
+def tenant_metric(tenant, suffix: str) -> str:
+    """The canonical per-tenant metric name: ``serve.tenant.<tenant>.
+    <suffix>`` with the tenant label sanitized. One naming choke point so
+    dashboards can glob ``serve.tenant.*`` and every frontend counter,
+    gauge, and histogram for a tenant lands under one subtree."""
+    return f"serve.tenant.{sanitize_label(tenant)}.{suffix}"

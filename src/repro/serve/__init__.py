@@ -4,18 +4,28 @@
 independent typed traversal queries (``queries.Query`` -- full levels,
 reachability, distance-limited, multi-target) are queued, packed 32-per-
 uint32-lane-word (``batcher``), traversed together by one msBFS sweep
-(``engine``), unpacked per kind, and memoized (``cache``).  See README.md
-in this package for how the lane-word packing maps onto the paper's
-Section V communication classes and for the query taxonomy.
+(``engine``), unpacked per kind, and memoized (``cache``).  On top,
+``frontend.ServeFrontend`` multiplexes many tenant stream sessions over a
+catalog of graphs: per-graph engine pool with shape-keyed compiled-runner
+sharing, SLO-aware admission, per-tenant stats/quotas, and traffic-skew
+cache warming.  See README.md in this package for how the lane-word
+packing maps onto the paper's Section V communication classes, the query
+taxonomy, and the frontend's admission policy.
 """
 from .batcher import LaneAssignment, LaneScheduler, QueryBatcher, pack_sources
 from .cache import LRUCache
-from .engine import BFSServeEngine, ServeStats
+from .engine import BFSServeEngine, ServeStats, default_graph_id
+from .frontend import (SLO_CLASSES, SLO_LATENCY, SLO_THROUGHPUT,
+                       QuotaExceeded, ServeFrontend, StreamSession,
+                       TenantStats)
 from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
-                      oracle_check, unpack_result)
+                      oracle_check, unpack_result, warm_queries)
 
 __all__ = [
     "BFSServeEngine", "LRUCache", "LaneAssignment", "LaneScheduler",
-    "MAX_TARGETS", "Query", "QueryBatcher", "QueryKind", "ServeStats",
-    "as_query", "dedupe", "oracle_check", "pack_sources", "unpack_result",
+    "MAX_TARGETS", "Query", "QueryBatcher", "QueryKind", "QuotaExceeded",
+    "SLO_CLASSES", "SLO_LATENCY", "SLO_THROUGHPUT", "ServeFrontend",
+    "ServeStats", "StreamSession", "TenantStats", "as_query",
+    "default_graph_id", "dedupe", "oracle_check", "pack_sources",
+    "unpack_result", "warm_queries",
 ]

@@ -132,15 +132,21 @@ class LaneScheduler:
         """Queue a source vertex id or a typed query descriptor."""
         self.pending.append(item)
 
-    def submit_stream(self, items) -> int:
+    def submit_stream(self, items, front: bool = False) -> int:
         """Queue many items at once (the streaming feed API); returns the
         number enqueued. Items become lane tenants at the next
-        :meth:`fill_idle` boundary -- submission never touches lanes."""
-        n = 0
-        for item in items:
-            self.pending.append(item)
-            n += 1
-        return n
+        :meth:`fill_idle` boundary -- submission never touches lanes.
+
+        ``front=True`` queues the batch *ahead* of everything already
+        pending while preserving the batch's own order (the SLO-preemption
+        hook: latency-class queries jump the refill queue past batch
+        traffic without reordering among themselves)."""
+        items = list(items)
+        if front:
+            self.pending.extendleft(reversed(items))
+        else:
+            self.pending.extend(items)
+        return len(items)
 
     def poll(self) -> dict:
         """Snapshot of the in-flight lanes: {lane: (item, generation)}.

@@ -32,18 +32,26 @@ class LRUCache:
     ``capacity``. ``capacity <= 0`` disables caching. ``ttl`` (seconds) is
     the default time-to-live stamped on entries at ``put`` time; pass
     ``ttl=`` to ``put`` to override per entry (``None`` = never expires).
-    ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    ``clock`` is injectable for tests; when omitted it follows the ``obs``
+    plane's injectable clock (so TTL expiry and traced timestamps can
+    never disagree under a fake clock) and falls back to
+    ``time.monotonic`` for standalone caches.
     ``obs`` (an :class:`repro.obs.Observability`) mirrors the hit/miss/
     eviction/expiry counters into its metrics registry under
     ``serve.cache.*``; the default disabled plane costs nothing.
     """
 
     def __init__(self, capacity: int = 256, ttl: float | None = None,
-                 clock=time.monotonic, obs=None):
+                 clock=None, obs=None):
         self.capacity = int(capacity)
         self.ttl = ttl
-        self._clock = clock
         self._obs = obs if obs is not None else NULL_OBS
+        if clock is None:
+            # TTL deadlines must tick on the same clock the tracer stamps
+            # events with, or a fake-clock test sees entries expire at
+            # wall-time while the trace says no time passed
+            clock = self._obs.clock if obs is not None else time.monotonic
+        self._clock = clock
         self._data: OrderedDict = OrderedDict()   # key -> (value, deadline)
         self.hits = 0
         self.misses = 0

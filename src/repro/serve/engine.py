@@ -39,6 +39,7 @@ feed and drain the same lane word incrementally instead of batch-at-a-time
 """
 from __future__ import annotations
 
+import hashlib
 from collections import deque
 from dataclasses import dataclass, field, fields as _dc_fields, \
     replace as _dc_replace
@@ -57,6 +58,32 @@ from .batcher import LaneScheduler
 from .cache import LRUCache
 from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
                       unpack_result)
+
+
+def default_graph_id(pg: PartitionedGraph) -> str:
+    """Content-derived cache namespace for a partitioned graph.
+
+    Digests the *adjacency content* of all four degree-separated subgraphs
+    (offsets, column ids, per-partition edge counts) plus the delegate id
+    map -- not just the shape. Two different graphs that happen to
+    partition to identical shapes (same ``n/p/d/th/m``) must never share
+    cache keys: the moment a cache or result store outlives one engine
+    (the frontend's shared-catalog scenario) a shape-only id would let one
+    graph serve the other's stale answers. The shape prefix stays for
+    debuggability; the digest carries the identity. Pass ``graph_id=`` to
+    the engine to override (e.g. an epoch-tagged id for mutable graphs).
+    """
+    h = hashlib.sha256()
+    for csr in (pg.nn, pg.nd, pg.dn, pg.dd):
+        for arr in (csr.offsets, csr.cols, csr.m):
+            a = np.ascontiguousarray(np.asarray(arr))
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+    dv = np.ascontiguousarray(np.asarray(pg.delegate_vids))
+    h.update(dv.tobytes())
+    m = int(np.asarray(pg.nn.m).sum() + np.asarray(pg.dd.m).sum())
+    return (f"pg-n{pg.n}-p{pg.p}-d{pg.d}-th{pg.th}-m{m}"
+            f"-{h.hexdigest()[:12]}")
 
 
 def _is_ready(x) -> bool:
@@ -247,8 +274,10 @@ class BFSServeEngine:
     cache_capacity : LRU entries (query-descriptor keyed); 0 disables.
     cache_ttl : default per-entry time-to-live in seconds (None = entries
         never expire -- the immutable-graph default).
-    graph_id : cache key namespace; defaults to a digest of the partition
-        structure so two engines on the same graph share semantics.
+    graph_id : cache key namespace; defaults to :func:`default_graph_id`,
+        a digest of the partitioned adjacency *content* -- two engines on
+        the same graph share semantics, and two different graphs can never
+        collide even when their partition shapes match exactly.
     mesh / partition_axes : a device mesh to run sweeps on under
         ``shard_map`` (the product of the partition axes' sizes must equal
         ``pg.p``). ``None`` -- or a mesh spanning a single device -- uses
@@ -285,6 +314,11 @@ class BFSServeEngine:
         have, since levels differ per source. The repo's Graph500 / RMAT
         graphs are all symmetrized; set False for directed edge lists,
         where reachability is not symmetric and the reuse would be wrong.
+    runner_cache : a dict shared across engines so same-shape graphs reuse
+        one set of compiled runners instead of retracing (the frontend's
+        engine pool passes one per catalog). Keys include every shape and
+        static argument a runner specializes on, so sharing is always
+        safe; ``None`` (default) keeps a private per-engine dict.
     """
 
     def __init__(
@@ -308,6 +342,7 @@ class BFSServeEngine:
         specialize_reachability: bool = True,
         reuse_components: bool = True,
         obs: Observability | None = None,
+        runner_cache: dict | None = None,
     ):
         self.obs = obs if obs is not None else NULL_OBS
         if pg is None:
@@ -340,8 +375,7 @@ class BFSServeEngine:
         self.pgv = B.device_view(pg)
         self.plan = E.build_exchange_plan(pg)
         if graph_id is None:
-            m = np.asarray(pg.nn.m).sum() + np.asarray(pg.dd.m).sum()
-            graph_id = f"pg-n{pg.n}-p{pg.p}-d{pg.d}-th{pg.th}-m{int(m)}"
+            graph_id = default_graph_id(pg)
         self.graph_id = graph_id
         self.cache = LRUCache(cache_capacity, ttl=cache_ttl, obs=self.obs)
         self.stats = ServeStats()
@@ -388,16 +422,43 @@ class BFSServeEngine:
                 self.sharded = True
         if not self.sharded:
             self._put = lambda tree: tree
-        # compiled runner pairs (run_full, step_once), keyed by the static
-        # per-batch config variant (track_levels x enable_targets), built
-        # lazily on first use -- target-free batches compile the target
-        # bookkeeping away, homogeneous REACHABILITY batches the levels
-        self._runners: dict[M.MSBFSConfig, tuple] = {}
-        # fused k-sweep block runners for the overlapped pipeline, keyed the
-        # same way: (block, block_donated)
-        self._block_runners: dict[M.MSBFSConfig, tuple] = {}
+        # compiled runner pairs (run_full, step_once) and fused k-sweep
+        # block pairs (block, block_donated), keyed by ("run"|"block",
+        # shape_key, static per-batch config variant [, sweep geometry]) and
+        # built lazily on first use -- target-free batches compile the
+        # target bookkeeping away, homogeneous REACHABILITY batches the
+        # levels. ``runner_cache=`` injects a *shared* dict (the frontend's
+        # per-catalog pool): every array shape and static argument a runner
+        # closes over is part of the key, so same-shape tenants reuse one
+        # compilation and different-shape tenants can never collide.
+        self._shape_key = self._runner_shape_key()
+        self._runners: dict = runner_cache if runner_cache is not None else {}
 
     # -- runner construction ------------------------------------------------
+    def _runner_shape_key(self):
+        """Hashable identity of everything a compiled runner specializes
+        on *besides* the msBFS config variant: the device-view / exchange-
+        plan leaf shapes+dtypes (what the jitted sweeps trace against),
+        the partition geometry, and -- for sharded engines -- the exact
+        device assignment and partition axes. Two engines with equal keys
+        can share one compilation; the traced computation is identical."""
+        leaves = jax.tree_util.tree_leaves((self.pgv, self.plan))
+        arrs = tuple(
+            (tuple(getattr(x, "shape", ())),
+             str(getattr(x, "dtype", type(x).__name__)))
+            for x in leaves)
+        pg = self.pg
+        geom = (int(pg.n), int(pg.p), int(pg.p_rank), int(pg.p_gpu),
+                int(pg.d), int(pg.th))
+        mesh_key = None
+        if self.sharded:
+            mesh_key = (tuple(int(d.id) for d in
+                              np.asarray(self.mesh.devices).reshape(-1)),
+                        tuple(self.mesh.axis_names),
+                        tuple(np.asarray(self.mesh.devices).shape),
+                        tuple(self._axes))
+        return (arrs, geom, mesh_key)
+
     def _build_runners(self, cfg: M.MSBFSConfig) -> tuple:
         if self.sharded:
             return (M.make_sharded_msbfs(self.mesh, self._axes, cfg),
@@ -416,13 +477,17 @@ class BFSServeEngine:
         return _dc_replace(self.cfg, enable_targets=False)
 
     def _runner_pair(self, cfg: M.MSBFSConfig) -> tuple:
-        if cfg not in self._runners:
-            self._runners[cfg] = self._build_runners(cfg)
-        return self._runners[cfg]
+        key = ("run", self._shape_key, cfg)
+        pair = self._runners.get(key)
+        if pair is None:
+            pair = self._runners[key] = self._build_runners(cfg)
+        return pair
 
     def _block_pair(self, cfg: M.MSBFSConfig) -> tuple:
         """(block, block_donated) fused k-sweep runners for ``cfg``."""
-        if cfg not in self._block_runners:
+        key = ("block", self._shape_key, cfg, self.sweep_block, self._donate)
+        pair = self._runners.get(key)
+        if pair is None:
             k = self.sweep_block
             if self.sharded:
                 mk = lambda don: M.make_sharded_msbfs_block(
@@ -431,8 +496,9 @@ class BFSServeEngine:
                 mk = lambda don: M.make_msbfs_block_emulated(
                     cfg, k, donate=don)
             blk = mk(False)
-            self._block_runners[cfg] = (blk, mk(True) if self._donate else blk)
-        return self._block_runners[cfg]
+            pair = self._runners[key] = (blk, mk(True) if self._donate
+                                         else blk)
+        return pair
 
     def _reach_fast(self, queries) -> bool:
         return (self.specialize_reachability
@@ -955,7 +1021,7 @@ class BFSServeEngine:
         return True
 
     # -- streaming API ------------------------------------------------------
-    def submit_stream(self, queries) -> int:
+    def submit_stream(self, queries, *, front: bool = False) -> int:
         """Feed typed queries into the continuously-fed serving stream.
 
         Opens a stream session on first use (the static msBFS variant --
@@ -966,6 +1032,11 @@ class BFSServeEngine:
         (counted in ``cache_hits`` / ``component_hits`` / ``dedup_hits``)
         and delivered by the next :meth:`poll`. Returns the number of
         queries enqueued for traversal.
+
+        ``front=True`` enqueues this submission's traversal misses *ahead*
+        of the already-pending queue (batch order preserved): the
+        SLO-preemption hook latency-class frontend traffic uses to claim
+        the next idle lanes before queued batch-throughput queries.
 
         Unlike :meth:`submit_many`, this never blocks on a traversal:
         lanes are seeded and sweeps dispatched by :meth:`poll` /
@@ -1002,7 +1073,11 @@ class BFSServeEngine:
                 # latest-submit wins: a re-submission restarts the
                 # submit->deliver latency clock for its next delivery
                 sess.t_submit[q] = now
-        enqueued = 0
+        # traversal misses are collected and enqueued in one scheduler call
+        # so a front=True submission lands as one contiguous run ahead of
+        # the pending queue (its own order intact)
+        to_seed: list = []
+        seeding: set = set()
         for q in qs:
             if q in sess.seen:
                 # duplicate within the session. Completed-but-undelivered
@@ -1013,7 +1088,8 @@ class BFSServeEngine:
                 self.stats.dedup_hits += 1
                 if q in sess.results:
                     sess.undelivered.append(q)
-                elif q in sess.expected or q in sess.sched.pending:
+                elif (q in sess.expected or q in sess.sched.pending
+                      or q in seeding):
                     pass
                 else:
                     hit = self.cache.get(q.key(self.graph_id))
@@ -1022,9 +1098,9 @@ class BFSServeEngine:
                         sess.complete(q, hit, skip_cache=True)
                     else:
                         sess.cached.discard(q)   # fresh traversal recaches
-                        sess.sched.submit_stream([q])
+                        to_seed.append(q)
+                        seeding.add(q)
                         sess.n_queries_seen += 1
-                        enqueued += 1
                 continue
             sess.seen.add(q)
             hit = self.cache.get(q.key(self.graph_id))
@@ -1045,10 +1121,25 @@ class BFSServeEngine:
                 continue
             if q.kind is QueryKind.REACHABILITY:
                 sess.has_reach = True
-            sess.sched.submit_stream([q])
+            to_seed.append(q)
+            seeding.add(q)
             sess.n_queries_seen += 1
-            enqueued += 1
-        return enqueued
+        if to_seed:
+            sess.sched.submit_stream(to_seed, front=front)
+        return len(to_seed)
+
+    def stream_status(self) -> dict:
+        """Host-side snapshot of the stream session (all zeros when no
+        session is open): ``busy`` lanes traversing now, ``pending``
+        queries queued for a lane, ``undelivered`` completed results
+        waiting for the next :meth:`poll`. The admission layer sizes its
+        throughput-class releases off ``busy + pending`` headroom."""
+        sess = self._stream
+        if sess is None:
+            return {"open": False, "busy": 0, "pending": 0, "undelivered": 0}
+        return {"open": True, "busy": int(sess.sched.n_busy),
+                "pending": len(sess.sched.pending),
+                "undelivered": len(sess.undelivered)}
 
     def poll(self, wait: bool = True) -> dict:
         """Advance the stream by (at most) one pipeline boundary and return
@@ -1058,6 +1149,13 @@ class BFSServeEngine:
         ready yet, only already-completed results (cache/component/dedup
         hits, earlier retirements) are returned. Returned arrays are owned
         copies; completed results are cached under the engine's LRU keys.
+
+        Delivery never depends on pipeline progress: cache/component/dedup
+        hits are completed at submit time and the undelivered queue is
+        drained unconditionally, so a session whose remaining work is
+        exclusively hits hands everything out on a *single* non-blocking
+        poll -- no spin-until-``wait=True`` (pinned in
+        ``tests/test_serve_frontend.py``).
         """
         sess = self._stream
         if sess is None:

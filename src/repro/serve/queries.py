@@ -115,6 +115,26 @@ def dedupe(queries) -> tuple:
     return unique, len(queries) - len(unique)
 
 
+def warm_queries(sources, kinds=(QueryKind.LEVELS,
+                                 QueryKind.REACHABILITY)) -> list:
+    """Landmark-warming descriptors: one query per (source, kind).
+
+    Only the parameter-free kinds are warmable -- a DISTANCE_LIMITED or
+    MULTI_TARGET cache entry is keyed by its params, so pre-computing one
+    guess would warm a key real traffic almost never asks for. The
+    frontend's traffic-skew warmer builds its blocking pre-compute batches
+    through this helper so warm entries are byte-identical descriptors to
+    the live queries that will later hit them.
+    """
+    kinds = tuple(kinds)
+    for k in kinds:
+        if k in (QueryKind.DISTANCE_LIMITED, QueryKind.MULTI_TARGET):
+            raise ValueError(
+                f"{k.value} queries are parameterized and cannot be "
+                "pre-warmed; warm LEVELS/REACHABILITY instead")
+    return [Query(int(s), kind=k) for s in sources for k in kinds]
+
+
 def oracle_check(g, q: Query, answer) -> None:
     """Assert ``answer`` matches the numpy oracle for ``q`` on graph ``g``.
 

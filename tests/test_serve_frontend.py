@@ -1,0 +1,584 @@
+"""Multi-tenant serving frontend + the cache-identity / stream-delivery
+bugfix regressions that ship with it.
+
+Covers:
+
+* default ``graph_id`` is a *content* digest -- two same-shape
+  different-edge graphs can never collide in any cache (the shared-
+  catalog regression), with the explicit override preserved;
+* ``LRUCache`` follows the injected obs clock for TTL expiry (fake-clock
+  agreement between expiry and traced time);
+* ``poll(wait=False)`` starvation pin: a session whose remaining work is
+  exclusively cache/component/dedup hits delivers everything on a single
+  non-blocking poll;
+* frontend: mixed-tenant oracle exactness bit-identical to back-to-back
+  runs, quota enforcement (atomic reject), SLO preemption order,
+  shape-keyed runner reuse (compile-count via a counting wrapper),
+  cross-session result sharing, traffic-skew warming, per-tenant metric
+  naming -- plus a forced-4-device variant for the multidevice CI job.
+
+Two same-shape different-content graphs are built by relabeling
+``v -> (v + p) % n``: with ``n`` divisible by ``p`` the mod-layout
+partition of every vertex is preserved (Algorithm 1: ``P(v) = v mod
+p_rank``, ``G(v) = (v / p_rank) mod p_gpu``), so per-partition edge
+counts -- and with them every padded CSR/plan shape -- are identical on a
+delegate-free partition, while the adjacency content differs.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import msbfs as M
+from repro.core.types import COOGraph
+from repro.graphs.rmat import rmat_graph
+from repro.graphs.synthetic import with_tails
+from repro.launch.mesh import make_test_mesh
+from repro.obs import Observability, sanitize_label, tenant_metric
+from repro.serve import (BFSServeEngine, LRUCache, LaneScheduler, Query,
+                         QueryKind, QuotaExceeded, SLO_LATENCY,
+                         SLO_THROUGHPUT, ServeFrontend, default_graph_id,
+                         oracle_check, warm_queries)
+from repro.serve.cache import LRUCache as _LRUCacheDirect  # noqa: F401
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4)")
+
+P = 4  # p_rank * p_gpu everywhere below
+
+
+def _shifted(g: COOGraph, shift: int) -> COOGraph:
+    """Relabel ``v -> (v + shift) % n``: same degree multiset, different
+    edges; partition-shape-preserving when ``shift == p`` and p | n."""
+    src = (np.asarray(g.src) + shift) % g.n
+    dst = (np.asarray(g.dst) + shift) % g.n
+    return COOGraph(g.n, src, dst)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    g1 = rmat_graph(7, seed=3)
+    return g1, _shifted(g1, P)
+
+
+# engines across tests share one compiled-runner pool: same shapes reuse
+# one XLA compilation, which is also what keeps this module fast
+RUNNER_CACHE: dict = {}
+
+
+def _frontend(**kw):
+    return ServeFrontend(runner_cache=RUNNER_CACHE, **kw)
+
+
+_ENG = dict(th=32, p_rank=2, p_gpu=2, cfg=M.MSBFSConfig(n_queries=4,
+                                                        max_iters=80))
+
+
+class ManualClock:
+    """Settable clock: deterministic TTL/latency control."""
+
+    def __init__(self, t0: float = 100.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# -- satellite: content-hashed default graph_id ---------------------------
+
+def test_default_graph_id_hashes_content(graphs):
+    g1, g2 = graphs
+    e1 = BFSServeEngine(g1, cache_capacity=0, **_ENG)
+    e2 = BFSServeEngine(g2, cache_capacity=0, **_ENG)
+    # identical shape prefix (the entire old default id)...
+    pre1, pre2 = (eid.rsplit("-", 1)[0]
+                  for eid in (e1.graph_id, e2.graph_id))
+    assert pre1 == pre2
+    # ...but the content digest separates them
+    assert e1.graph_id != e2.graph_id
+    # deterministic: same graph -> same id, and the explicit override wins
+    assert BFSServeEngine(g1, cache_capacity=0, **_ENG).graph_id == \
+        e1.graph_id
+    assert BFSServeEngine(g1, graph_id="epoch-7", cache_capacity=0,
+                          **_ENG).graph_id == "epoch-7"
+    assert default_graph_id(e1.pg) == e1.graph_id
+
+
+def test_same_shape_graphs_cannot_share_cache(graphs):
+    """The shared-catalog regression: a cache outliving one engine must
+    miss (and recompute correctly) for a same-shape different-edge graph.
+    Under the old shape-only default id both engines used one key and the
+    second graph was served the first graph's answer."""
+    g1, g2 = graphs
+    q = Query(3)
+    e1 = BFSServeEngine(g1, **_ENG)
+    a1 = e1.submit(q)
+    e2 = BFSServeEngine(g2, **_ENG)
+    e2.cache = e1.cache          # cache outlives engine 1
+    before = e2.cache.misses
+    a2 = e2.submit(q)
+    assert e2.cache.misses == before + 1   # no cross-graph hit
+    oracle_check(g2, q, a2)
+    assert not np.array_equal(a1, a2)      # the graphs genuinely disagree
+    # both answers now coexist under distinct keys
+    assert q.key(e1.graph_id) in e1.cache
+    assert q.key(e2.graph_id) in e1.cache
+
+
+# -- satellite: LRU TTL follows the injected obs clock --------------------
+
+def test_lru_ttl_follows_obs_clock():
+    clk = ManualClock(t0=50.0)
+    obs = Observability(clock=clk)
+    cache = LRUCache(8, ttl=5.0, obs=obs)
+    cache.put("k", "v")
+    clk.t = 54.9
+    assert cache.get("k") == "v"
+    # trace an event at the expiry instant: traced time and TTL expiry
+    # must agree on the same injected clock
+    clk.t = 55.0
+    obs.trace.instant("at_expiry")
+    assert cache.get("k") is None
+    assert cache.expired == 1
+    assert obs.trace.events()[-1].ts == pytest.approx(55.0)
+    # explicit clock= still wins over obs
+    other = ManualClock(t0=0.0)
+    c2 = LRUCache(8, ttl=5.0, clock=other, obs=obs)
+    c2.put("k", "v")
+    clk.t = 1e9
+    assert c2.get("k") == "v"
+
+
+def test_lru_standalone_clock_default_is_monotonic():
+    c = LRUCache(4, ttl=3600.0)
+    assert c._clock is time.monotonic
+    c.put("k", "v")
+    assert c.get("k") == "v"
+
+
+def test_engine_threads_obs_clock_into_cache(graphs):
+    g1, _ = graphs
+    clk = ManualClock()
+    obs = Observability(clock=clk)
+    eng = BFSServeEngine(g1, cache_ttl=10.0, obs=obs, **_ENG)
+    assert eng.cache._clock is clk
+    q = Query(2)
+    a = eng.submit(q)
+    clk.t += 9.9
+    assert eng.cache.get(q.key(eng.graph_id)) is not None
+    clk.t += 0.2
+    assert eng.cache.get(q.key(eng.graph_id)) is None  # expired on obs time
+    oracle_check(g1, q, a)
+
+
+# -- satellite: poll(wait=False) starvation pin ---------------------------
+
+@pytest.fixture(scope="module")
+def hits_engine(graphs):
+    g1, _ = graphs
+    eng = BFSServeEngine(g1, refill=True, overlap=True,
+                         specialize_reachability=False,
+                         runner_cache=RUNNER_CACHE, **_ENG)
+    return g1, eng
+
+
+def test_single_nonblocking_poll_delivers_cache_hits(hits_engine):
+    g, eng = hits_engine
+    qs = [Query(1), Query(2), Query(3)]
+    eng.submit_many(qs)                      # warm the LRU
+    assert eng.submit_stream(qs) == 0        # all resolved at submit
+    out = eng.poll(wait=False)               # one non-blocking poll
+    assert set(out) == set(qs)
+    for q in qs:
+        oracle_check(g, q, out[q])
+    assert eng.stream_status()["undelivered"] == 0
+
+
+def test_single_nonblocking_poll_delivers_component_hits(hits_engine):
+    g, eng = hits_engine
+    seed = Query(4, QueryKind.REACHABILITY)
+    mask = eng.submit(seed)                  # maps the component
+    others = [int(v) for v in np.nonzero(mask)[0] if v != 4][:3]
+    assert others, "component too small for the test to bite"
+    qs = [Query(s, QueryKind.REACHABILITY) for s in others]
+    pre = eng.stats.component_hits
+    assert eng.submit_stream(qs) == 0
+    assert eng.stats.component_hits == pre + len(qs)
+    out = eng.poll(wait=False)
+    assert set(out) == set(qs)
+    for q in qs:
+        oracle_check(g, q, out[q])
+
+
+def test_single_nonblocking_poll_delivers_dedup_hits(hits_engine):
+    _, eng = hits_engine
+    q = Query(1)                             # cached by the test above
+    pre = eng.stats.dedup_hits
+    eng.submit_stream([q])                   # seen-before -> dedup + LRU hit
+    eng.submit_stream([q])                   # completed-but-undelivered twin
+    assert eng.stats.dedup_hits == pre + 2
+    out = eng.poll(wait=False)
+    assert set(out) == {q}
+
+
+def test_nonblocking_poll_hits_bypass_busy_lanes(graphs):
+    """Hits must not starve behind a deep in-flight traversal: the first
+    non-blocking poll hands them out even while lanes are busy."""
+    g1, _ = graphs
+    g, tips = with_tails(g1, n_tails=1, length=60, seed=0)
+    eng = BFSServeEngine(g, th=32, p_rank=2, p_gpu=2,
+                         cfg=M.MSBFSConfig(n_queries=4, max_iters=160),
+                         refill=True, overlap=True,
+                         specialize_reachability=False,
+                         runner_cache=RUNNER_CACHE)
+    fast = [Query(1), Query(2)]
+    eng.submit_many(fast)                    # warm
+    deep = Query(int(tips[0]))
+    eng.submit_stream([deep])                # occupies a lane for a while
+    eng.poll(wait=False)                     # dispatch the deep block
+    assert eng.submit_stream(fast) == 0
+    out = eng.poll(wait=False)
+    assert set(fast) <= set(out)             # hits delivered immediately
+    out = eng.drain_stream() | out
+    oracle_check(g, deep, out[deep])
+
+
+# -- frontend: SLO preemption ---------------------------------------------
+
+def test_front_submit_preserves_batch_order():
+    s = LaneScheduler(4, pending=["a", "b"])
+    s.submit_stream(["c", "d"])
+    s.submit_stream(["x", "y"], front=True)
+    assert list(s.pending) == ["x", "y", "a", "b", "c", "d"]
+
+
+def test_latency_class_preempts_queued_throughput(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    eng = ft.register_graph("g", g1, cache_capacity=0,
+                            reuse_components=False, **_ENG)
+    batch = ft.open_session("batch", "g", slo=SLO_THROUGHPUT)
+    inter = ft.open_session("inter", "g", slo=SLO_LATENCY)
+    bqs = [Query(s) for s in range(10, 22)]
+    ft.submit(batch, bqs)
+    # headroom W=4: exactly 4 released to the engine, 8 held back
+    assert eng.stream_status()["pending"] == 4
+    assert len(ft._adm["g"][SLO_THROUGHPUT]) == 8
+    lqs = [Query(2), Query(3)]
+    ft.submit(inter, lqs)
+    # latency queries jump every queued throughput query, in order
+    assert list(eng._stream.sched.pending)[:2] == lqs
+    out = ft.drain()
+    assert len(out[inter.sid]) == 2 and len(out[batch.sid]) == 12
+    for q, a in (out[inter.sid] | out[batch.sid]).items():
+        oracle_check(g1, q, a)
+
+
+# -- frontend: mixed-tenant exactness vs back-to-back ---------------------
+
+def _tenant_traces(g1, g2):
+    """4 tenants over 2 graphs, mixed kinds/SLOs, disjoint sources (so
+    per-tenant stats are schedule-independent)."""
+    return [
+        ("acme", "g1", SLO_LATENCY,
+         [Query(1), Query(2, QueryKind.REACHABILITY),
+          Query(3, QueryKind.DISTANCE_LIMITED, max_depth=2)]),
+        ("beta", "g1", SLO_THROUGHPUT,
+         [Query(20), Query(21), Query(22, QueryKind.MULTI_TARGET,
+                                      targets=(5, 9))]),
+        ("gama", "g2", SLO_LATENCY,
+         [Query(40, QueryKind.REACHABILITY), Query(41), Query(42)]),
+        ("dlta", "g2", SLO_THROUGHPUT,
+         [Query(60), Query(61, QueryKind.DISTANCE_LIMITED, max_depth=3),
+          Query(62)]),
+    ]
+
+
+def _run_trace(g1, g2, interleaved: bool):
+    ft = _frontend()
+    ft.register_graph("g1", g1, cache_capacity=0, reuse_components=False,
+                      **_ENG)
+    ft.register_graph("g2", g2, cache_capacity=0, reuse_components=False,
+                      **_ENG)
+    traces = _tenant_traces(g1, g2)
+    sessions = {t: ft.open_session(t, g, slo=slo)
+                for t, g, slo, _ in traces}
+    results = {t: {} for t, *_ in traces}
+    if interleaved:
+        # round-robin chunks of 1 with a blocking poll between rounds
+        depth = max(len(qs) for *_, qs in traces)
+        for i in range(depth):
+            for t, _, _, qs in traces:
+                if i < len(qs):
+                    ft.submit(sessions[t], [qs[i]])
+            for sid, res in ft.poll(wait=True).items():
+                t = sid.split(":", 1)[0]
+                results[t].update(res)
+    else:
+        # back to back: one tenant at a time, drained before the next
+        for t, _, _, qs in traces:
+            ft.submit(sessions[t], qs)
+            for sid, res in ft.drain().items():
+                results[sid.split(":", 1)[0]].update(res)
+    for sid, res in ft.drain().items():
+        results[sid.split(":", 1)[0]].update(res)
+    stats = {t: ft.tenant_stats(t).as_dict() for t, *_ in traces}
+    return results, stats
+
+
+def test_mixed_tenants_oracle_exact_and_bit_identical_to_back_to_back(
+        graphs):
+    g1, g2 = graphs
+    mux_res, mux_stats = _run_trace(g1, g2, interleaved=True)
+    seq_res, seq_stats = _run_trace(g1, g2, interleaved=False)
+    oracle = {"acme": g1, "beta": g1, "gama": g2, "dlta": g2}
+    for t, g, _, qs in _tenant_traces(g1, g2):
+        assert set(mux_res[t]) == set(qs) == set(seq_res[t])
+        for q in qs:
+            oracle_check(oracle[t], q, mux_res[t][q])
+            a, b = mux_res[t][q], seq_res[t][q]
+            if isinstance(a, dict):
+                assert a == b
+            else:
+                np.testing.assert_array_equal(a, b)
+            assert type(a) is type(b)
+    # per-tenant counters are bit-identical mux vs back-to-back
+    # (peak_in_flight is schedule-dependent by design: interleaving
+    # delivers mid-trace, back-to-back never does)
+    for t in oracle:
+        a = {k: v for k, v in mux_stats[t].items() if k != "peak_in_flight"}
+        b = {k: v for k, v in seq_stats[t].items() if k != "peak_in_flight"}
+        assert a == b
+        assert a["in_flight"] == 0 and a["delivered"] == a["submitted"]
+
+
+def test_shared_query_across_sessions_traversed_once(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    eng = ft.register_graph("g", g1, cache_capacity=0,
+                            reuse_components=False, **_ENG)
+    s1 = ft.open_session("a", "g")
+    s2 = ft.open_session("b", "g")
+    q = Query(7)
+    ft.submit(s1, [q])
+    ft.submit(s2, [q])
+    out = ft.drain()
+    assert eng.stats.lanes_used == 1          # one traversal served both
+    a1, a2 = out[s1.sid][q], out[s2.sid][q]
+    np.testing.assert_array_equal(a1, a2)
+    assert a1 is not a2                       # owned copies
+    oracle_check(g1, q, a1)
+    assert ft.tenant_stats("b").dedup_hits == 1
+
+
+# -- frontend: quotas -----------------------------------------------------
+
+def test_quota_max_inflight_rejects_atomically(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    eng = ft.register_graph("g", g1, cache_capacity=0, **_ENG)
+    sess = ft.open_session("acme", "g", max_inflight=3)
+    ft.submit(sess, [Query(1), Query(2)])
+    pre_queries = eng.stats.queries
+    with pytest.raises(QuotaExceeded):
+        ft.submit(sess, [Query(3), Query(4)])   # 2 + 2 > 3
+    ts = ft.tenant_stats("acme")
+    assert ts.rejected == 2 and ts.in_flight == 2
+    assert eng.stats.queries == pre_queries     # nothing reached the engine
+    assert ft.submit(sess, [Query(3)]) == 1     # refill up to the cap
+    ft.drain()
+    assert ft.tenant_stats("acme").in_flight == 0
+    # delivery frees quota
+    assert ft.submit(sess, [Query(4), Query(5)]) == 2
+    out = ft.drain()
+    assert len(out[sess.sid]) == 2
+
+
+def test_quota_max_queries_lifetime_cap(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    ft.register_graph("g", g1, cache_capacity=0, **_ENG)
+    sess = ft.open_session("acme", "g", max_queries=3)
+    ft.submit(sess, [Query(1), Query(2)])
+    with pytest.raises(QuotaExceeded):
+        ft.submit(sess, [Query(3), Query(4)])
+    assert ft.submit(sess, [Query(3)]) == 1
+    ft.drain()
+    ts = ft.tenant_stats("acme")
+    assert (ts.submitted, ts.delivered, ts.rejected) == (3, 3, 2)
+
+
+# -- frontend: shape-keyed runner reuse -----------------------------------
+
+def test_same_shape_graphs_share_compiled_runners(graphs, monkeypatch):
+    """The counting wrapper pins the compile count: two same-shape
+    different-content graphs build each runner variant exactly once."""
+    g1, g2 = graphs
+    builds = []
+    orig = BFSServeEngine._build_runners
+
+    def counting(self, cfg):
+        builds.append(cfg)
+        return orig(self, cfg)
+
+    monkeypatch.setattr(BFSServeEngine, "_build_runners", counting)
+    ft = ServeFrontend()    # fresh pool: count from zero
+    # th above every degree -> delegate-free -> the v+p relabel preserves
+    # every per-partition count, so the padded shapes match exactly
+    kw = dict(th=10 ** 6, p_rank=2, p_gpu=2, cache_capacity=0,
+              cfg=M.MSBFSConfig(n_queries=4, max_iters=80))
+    e1 = ft.register_graph("g1", g1, **kw)
+    e2 = ft.register_graph("g2", g2, **kw)
+    assert e1._shape_key == e2._shape_key
+    assert e1.graph_id != e2.graph_id
+    s1 = ft.open_session("a", "g1")
+    s2 = ft.open_session("b", "g2")
+    q = Query(3)
+    ft.submit(s1, [q])
+    ft.submit(s2, [q])
+    out = ft.drain()
+    oracle_check(g1, q, out[s1.sid][q])
+    oracle_check(g2, q, out[s2.sid][q])
+    assert not np.array_equal(out[s1.sid][q], out[s2.sid][q])
+    assert len(builds) == 1                  # one step-runner build total
+    # pool holds exactly one step pair + one block pair, shared by both
+    assert len(ft.runner_cache) == 2
+
+
+def test_different_shape_graphs_do_not_collide(graphs):
+    g1, _ = graphs
+    g3 = rmat_graph(8, seed=5)              # different n -> different shapes
+    ft = _frontend()
+    e1 = ft.register_graph("g1", g1, cache_capacity=0, **_ENG)
+    e3 = ft.register_graph("g3", g3, cache_capacity=0, **_ENG)
+    assert e1._shape_key != e3._shape_key
+    s1 = ft.open_session("a", "g1")
+    s3 = ft.open_session("b", "g3")
+    ft.submit(s1, [Query(1)])
+    ft.submit(s3, [Query(1)])
+    out = ft.drain()
+    oracle_check(g1, Query(1), out[s1.sid][Query(1)])
+    oracle_check(g3, Query(1), out[s3.sid][Query(1)])
+
+
+# -- frontend: traffic-skew warming ---------------------------------------
+
+def test_warm_precomputes_hottest_uncached_sources(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    eng = ft.register_graph("g", g1, **_ENG)
+    sess = ft.open_session("acme", "g")
+    # skewed traffic on parameterized kinds: heat accrues on sources 5
+    # (hot) and 9 (warm) but leaves their LEVELS/REACHABILITY keys cold
+    ft.submit(sess, [Query(5, QueryKind.DISTANCE_LIMITED, max_depth=2)
+                     for _ in range(3)]
+              + [Query(9, QueryKind.DISTANCE_LIMITED, max_depth=2)] * 2
+              + [Query(11, QueryKind.DISTANCE_LIMITED, max_depth=2)])
+    ft.drain()
+    picked = ft.warm(budget=2)
+    assert picked["g"] == [5, 9]             # hottest-first, budget-bound
+    assert ft.warmed["g"] == 4               # 2 sources x 2 kinds
+    for s in (5, 9):
+        for q in warm_queries([s]):
+            assert q.key(eng.graph_id) in eng.cache
+    # warmed traffic now cache-hits
+    pre = ft.tenant_stats("acme").cache_hits
+    ft.submit(sess, [Query(5)])
+    out = ft.drain()
+    assert ft.tenant_stats("acme").cache_hits == pre + 1
+    oracle_check(g1, Query(5), out[sess.sid][Query(5)])
+    # a wider second pass reaches the one still-cold source, then dries up
+    assert ft.warm(budget=8)["g"] == [11]
+    assert ft.warm(budget=8)["g"] == []
+
+
+def test_warm_queries_rejects_parameterized_kinds():
+    with pytest.raises(ValueError):
+        warm_queries([1], kinds=(QueryKind.DISTANCE_LIMITED,))
+    qs = warm_queries([1, 2])
+    assert len(qs) == 4 and all(
+        q.kind in (QueryKind.LEVELS, QueryKind.REACHABILITY) for q in qs)
+
+
+# -- frontend: per-tenant observability -----------------------------------
+
+def test_tenant_metric_naming():
+    assert tenant_metric("acme", "latency_s.levels") == \
+        "serve.tenant.acme.latency_s.levels"
+    # dots are hierarchy separators: free-form labels cannot fork subtrees
+    assert tenant_metric("acme.eu/west", "stats.delivered") == \
+        "serve.tenant.acme_eu_west.stats.delivered"
+    assert sanitize_label("") == "_"
+
+
+def test_per_tenant_latency_and_stats_surface_in_metrics(graphs):
+    g1, _ = graphs
+    clk = ManualClock()
+    obs = Observability(clock=clk)
+    ft = _frontend(obs=obs)
+    ft.register_graph("g", g1, cache_capacity=0, **_ENG)
+    sess = ft.open_session("acme", "g", slo=SLO_LATENCY)
+    ft.submit(sess, [Query(1), Query(2, QueryKind.REACHABILITY)])
+    ft.drain()
+    snap = obs.metrics.snapshot()
+    h = snap["histograms"]["serve.tenant.acme.latency_s.levels"]
+    assert h["count"] == 1 and h["max"] >= 0.0
+    assert "serve.tenant.acme.latency_s.reachability" in snap["histograms"]
+    g = snap["gauges"]
+    assert g["serve.tenant.acme.stats.delivered"] == 2
+    assert g["serve.tenant.acme.stats.in_flight"] == 0
+    assert g["serve.tenant.acme.stats.kind_counts.levels"] == 1
+    assert g["serve.frontend.sessions"] == 1
+
+
+def test_close_session_detaches_waiters(graphs):
+    g1, _ = graphs
+    ft = _frontend()
+    ft.register_graph("g", g1, cache_capacity=0, **_ENG)
+    s1 = ft.open_session("a", "g")
+    s2 = ft.open_session("b", "g")
+    q = Query(8)
+    ft.submit(s1, [q])
+    ft.submit(s2, [q])
+    ft.close_session(s1)
+    assert ft.tenant_stats("a").in_flight == 0
+    out = ft.drain()
+    assert s1.sid not in out and set(out[s2.sid]) == {q}
+    with pytest.raises(ValueError):
+        ft.submit(s1, [Query(9)])
+
+
+# -- forced-4-device variant (multidevice CI job) -------------------------
+
+@needs4
+def test_frontend_multidevice_mixed_tenants():
+    """Frontend over shard_map engines on a real 4-device mesh: two
+    tenants, mixed kinds and SLOs, oracle-exact."""
+    g1 = rmat_graph(7, seed=3)
+    g2 = _shifted(g1, P)
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    ft = ServeFrontend()
+    kw = dict(th=32, p_rank=2, p_gpu=2, mesh=mesh, cache_capacity=0,
+              reuse_components=False,
+              cfg=M.MSBFSConfig(n_queries=4, max_iters=80))
+    e1 = ft.register_graph("g1", g1, **kw)
+    assert e1.sharded
+    ft.register_graph("g2", g2, **kw)
+    s1 = ft.open_session("acme", "g1", slo=SLO_LATENCY)
+    s2 = ft.open_session("beta", "g2", slo=SLO_THROUGHPUT)
+    qs1 = [Query(1), Query(2, QueryKind.REACHABILITY),
+           Query(3, QueryKind.DISTANCE_LIMITED, max_depth=2)]
+    qs2 = [Query(4), Query(5, QueryKind.MULTI_TARGET, targets=(1, 2)),
+           Query(6)]
+    ft.submit(s1, qs1)
+    ft.submit(s2, qs2)
+    out = ft.drain()
+    for q in qs1:
+        oracle_check(g1, q, out[s1.sid][q])
+    for q in qs2:
+        oracle_check(g2, q, out[s2.sid][q])
+    assert ft.tenant_stats("acme").delivered == 3
+    assert ft.tenant_stats("beta").delivered == 3
