@@ -153,6 +153,23 @@ def gate(baseline_doc, candidate_doc, perf_tolerance=0.5):
             "findings": findings}
 
 
+def fatal_by_class(report) -> dict:
+    """Count fatal findings per class (``exact`` / ``perf`` / ``section``
+    / ``artifact``) across a ``gate_files`` report.
+
+    This is what lets CI split policy by class: exact-metric drift is a
+    real schedule change and blocks, while perf regressions -- machine-
+    load noise on shared runners -- stay report-only
+    (``scripts/bench_gate.py --perf-report-only``)."""
+    counts: dict = {}
+    for rep in report.get("reports", []):
+        for f in rep.get("findings", []):
+            if f["status"] in FATAL_STATUSES:
+                cls = f.get("class", "exact")
+                counts[cls] = counts.get(cls, 0) + 1
+    return counts
+
+
 def gate_files(baseline_paths, candidate_paths, perf_tolerance=0.5):
     """Gate a list of artifact files pairwise (zipped in order). Each pair
     produces one sub-report; the combined report fails if any pair does."""

@@ -2,7 +2,8 @@
 """Perf-regression gate over the committed benchmark baselines.
 
 Default invocation diffs the committed ``BENCH_queries.json`` /
-``BENCH_comm.json`` / ``BENCH_serving.json`` against themselves -- a schema/parse check that always
+``BENCH_comm.json`` / ``BENCH_serving.json`` / ``BENCH_scaling.json``
+against themselves -- a schema/parse check that always
 passes, suitable as a CI smoke step::
 
     PYTHONPATH=src python scripts/bench_gate.py
@@ -20,6 +21,13 @@ ratio tolerance band (``--perf-tolerance``, default 0.5). The
 machine-readable report is written to ``--out`` (default
 ``bench_gate_report.json``). Exit code 0 on pass, 1 on fail (``--no-fail``
 forces 0 for non-blocking CI report steps).
+
+``--perf-report-only`` splits the policy by finding class: exact-metric
+mismatches, missing sections/artifacts, and benchmark run errors still
+fail (they are deterministic schedule facts), but perf-band regressions
+only appear in the report -- the blocking CI step uses this so shared-
+runner load noise can never turn a perf wobble into a red build while
+schedule drift stays caught.
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ for p in (_REPO, os.path.join(_REPO, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
 
-from benchmarks.gate import gate_files, render_text  # noqa: E402
+from benchmarks.gate import fatal_by_class, gate_files, render_text  # noqa: E402
 
 
 def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
@@ -41,13 +49,19 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
     asserts disarmed (correctness asserts -- oracle exactness, counter
     bit-identicality, wire-volume orderings -- stay armed). Returns
     {basename: error-or-None}."""
-    from benchmarks import comm_model, msbfs_throughput, serving_frontend
+    from benchmarks import (comm_model, memory_model, msbfs_throughput,
+                            serving_frontend, strong_scaling, weak_scaling)
 
     os.makedirs(workdir, exist_ok=True)
     qpath = os.path.join(workdir, "BENCH_queries.json")
     cpath = os.path.join(workdir, "BENCH_comm.json")
     spath = os.path.join(workdir, "BENCH_serving.json")
+    scpath = os.path.join(workdir, "BENCH_scaling.json")
     kw = {} if scale_override is None else {"scale": scale_override}
+    # weak scaling grows the graph with p; its knob is the per-partition
+    # scale, kept a few powers below the global override
+    wkw = ({} if scale_override is None
+           else {"scale_per_part": max(6, scale_override - 3)})
     errors: dict = {}
     for name, fn in (
         ("mixed", lambda: msbfs_throughput.run_mixed(
@@ -58,6 +72,9 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
             out_path=cpath, **kw)),
         ("frontend", lambda: serving_frontend.run_frontend(
             out_json=spath, min_speedup=0.0, **kw)),
+        ("memory_model", lambda: memory_model.run(out_json=scpath, **kw)),
+        ("weak_scaling", lambda: weak_scaling.run(out_json=scpath, **wkw)),
+        ("strong_scaling", lambda: strong_scaling.run(out_json=scpath, **kw)),
     ):
         try:
             fn()
@@ -74,7 +91,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", nargs="+",
                     default=[os.path.join(_REPO, "BENCH_queries.json"),
                              os.path.join(_REPO, "BENCH_comm.json"),
-                             os.path.join(_REPO, "BENCH_serving.json")],
+                             os.path.join(_REPO, "BENCH_serving.json"),
+                             os.path.join(_REPO, "BENCH_scaling.json")],
                     help="baseline artifact files (committed BENCH_*.json)")
     ap.add_argument("--candidate", nargs="+", default=None,
                     help="candidate artifact files, paired with --baseline "
@@ -92,6 +110,10 @@ def main(argv=None) -> int:
                     help="machine-readable report path")
     ap.add_argument("--no-fail", action="store_true",
                     help="always exit 0 (non-blocking CI report step)")
+    ap.add_argument("--perf-report-only", action="store_true",
+                    help="perf-band regressions are reported but do not "
+                         "fail the gate; exact/section/artifact findings "
+                         "and run errors still do (the blocking CI step)")
     args = ap.parse_args(argv)
 
     run_errors: dict = {}
@@ -125,18 +147,32 @@ def main(argv=None) -> int:
     if any(run_errors.values()):
         report["status"] = "fail"
     report["run_errors"] = run_errors
+    fatals = fatal_by_class(report)
+    report["fatal_by_class"] = fatals
+    # the exit-policy view: with --perf-report-only, only non-perf fatal
+    # classes (and run errors) block
+    blocking = {cls: n for cls, n in fatals.items()
+                if not (args.perf_report_only and cls == "perf")}
+    fail = (bool(blocking) or any(run_errors.values())
+            or (not args.perf_report_only and report["status"] == "fail"))
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     print(render_text(report))
+    if fatals:
+        print("fatal findings by class: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(fatals.items())))
+        if args.perf_report_only and "perf" in fatals and not blocking:
+            print("perf regressions are report-only (--perf-report-only); "
+                  "not failing")
     for name, err in run_errors.items():
         if err:
             print(f"  [run-error] {name}: {err}")
     print(f"report written to {args.out}")
     if args.no_fail:
         return 0
-    return 0 if report["status"] == "pass" else 1
+    return 1 if fail else 0
 
 
 if __name__ == "__main__":

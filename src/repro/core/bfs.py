@@ -66,6 +66,13 @@ class BFSConfig:
     # hierarchical) and the nn wire format of the static exchange (dense
     # slot bitmask / sparse id list / frontier-adaptive switch)
     comm: comm.CommConfig = comm.CommConfig()
+    # True carries per-sweep device telemetry (``tm_*`` fields of BFSState:
+    # per-shard frontier popcounts + the direction-decision bitmask)
+    # through the state; False (default) keeps zero-size dummies so the
+    # disabled carry compiles away. Same contract as
+    # ``MSBFSConfig.telemetry`` -- answers and counters are bit-identical
+    # either way.
+    telemetry: bool = False
 
 
 @dataclass
@@ -86,6 +93,13 @@ class BFSState:
     wire_delegate: Any
     wire_nn: Any
     nn_sparse: Any    # 1 if the static exchange shipped the sparse format
+    # device-plane sweep telemetry (cfg.telemetry; zero-size [p, 0] dummies
+    # otherwise). Frontier counts accumulate with .add (wire-counter slot
+    # convention); the direction bitmask records the sweep's decision:
+    tm_frontier_n: Any  # [p, max_iters] int32 -- per-shard frontier popcount
+    tm_frontier_d: Any  # [p, max_iters] int32 (replicated content)
+    tm_backward: Any    # [p, max_iters] int32 -- bits (1, 2, 4) set when the
+                        # (dd, dn, nd) subgraph pulled this sweep
 
 
 jax.tree_util.register_dataclass(
@@ -94,6 +108,7 @@ jax.tree_util.register_dataclass(
         "level_n", "level_d", "backward", "it", "done",
         "work_fwd", "work_bwd", "nn_sent", "nn_overflow", "delegate_round",
         "wire_delegate", "wire_nn", "nn_sparse",
+        "tm_frontier_n", "tm_frontier_d", "tm_backward",
     ),
     meta_fields=(),
 )
@@ -125,6 +140,8 @@ def init_state(pg: PartitionedGraph, source: int, cfg: BFSConfig) -> BFSState:
         level_n[int(layout.part_of(np.int64(source))), int(layout.local_of(np.int64(source)))] = 0
     mi = cfg.max_iters
     z = lambda dt: np.zeros((p, mi), dtype=dt)
+    tmi = mi if cfg.telemetry else 0
+    tm = lambda: np.zeros((p, tmi), dtype=np.int32)
     return BFSState(
         level_n=level_n, level_d=level_d,
         backward=np.zeros((p, 3), dtype=bool),
@@ -133,6 +150,7 @@ def init_state(pg: PartitionedGraph, source: int, cfg: BFSConfig) -> BFSState:
         work_fwd=z(np.int32), work_bwd=z(np.int32), nn_sent=z(np.int32),
         nn_overflow=z(np.int32), delegate_round=z(np.int32),
         wire_delegate=z(np.int32), wire_nn=z(np.int32), nn_sparse=z(np.int32),
+        tm_frontier_n=tm(), tm_frontier_d=tm(), tm_backward=tm(),
     )
 
 
@@ -340,6 +358,17 @@ def bfs_step(
     )
     mi = cfg.max_iters
     slot = jnp.clip(it, 0, mi - 1)
+    # device-plane sweep telemetry (static branch; see MSBFSConfig.telemetry)
+    if cfg.telemetry:
+        tm_frontier_n = state.tm_frontier_n.at[slot].add(_count(frontier_n))
+        tm_frontier_d = state.tm_frontier_d.at[slot].add(_count(frontier_d))
+        dirmask = (bwd_dd.astype(jnp.int32) + 2 * bwd_dn.astype(jnp.int32)
+                   + 4 * bwd_nd.astype(jnp.int32))
+        tm_backward = state.tm_backward.at[slot].set(dirmask)
+    else:
+        tm_frontier_n = state.tm_frontier_n
+        tm_frontier_d = state.tm_frontier_d
+        tm_backward = state.tm_backward
     return BFSState(
         level_n=new_level_n,
         level_d=new_level_d,
@@ -354,6 +383,9 @@ def bfs_step(
         wire_delegate=state.wire_delegate.at[slot].add(jnp.int32(d_bytes)),
         wire_nn=state.wire_nn.at[slot].add(nn_bytes),
         nn_sparse=state.nn_sparse.at[slot].add(nn_sparse),
+        tm_frontier_n=tm_frontier_n,
+        tm_frontier_d=tm_frontier_d,
+        tm_backward=tm_backward,
     )
 
 

@@ -117,6 +117,15 @@ class MSBFSConfig:
     # capped id+word pairs / the per-sweep frontier-adaptive switch). The
     # default reproduces the seed behavior bit-for-bit.
     comm: comm.CommConfig = comm.CommConfig()
+    # True carries the device-plane sweep-telemetry arrays (``tm_*`` fields
+    # of MSBFSState: per-sweep per-shard frontier popcounts and packed
+    # direction-decision words) through the state. The telemetry writes are
+    # pure extra accumulation into their own buffers -- the traversal
+    # schedule, every answer and every ServeStats counter stay bit-identical
+    # (pinned in tests/test_device_telemetry.py). False (the default) keeps
+    # zero-size dummies in the carry, so the disabled path compiles the
+    # telemetry away entirely.
+    telemetry: bool = False
 
 
 @dataclass
@@ -165,6 +174,17 @@ class MSBFSState:
     nn_sparse: Any       # 1 if the sweep shipped the sparse nn format
     nn_overflow: Any     # active slots dropped by a pinned-sparse cap
                          # (must be 0 for a valid run; adaptive never drops)
+    # device-plane sweep telemetry (cfg.telemetry; zero-size [p, 0, ...]
+    # dummies otherwise so the disabled carry compiles away). Frontier
+    # popcounts accumulate with .add (wire-counter convention: refill
+    # sessions past max_iters keep exact totals in the last slot); the
+    # packed direction words record the last decision per slot:
+    tm_frontier_n: Any   # [p, max_iters] int32 -- per-shard expand-gated
+                         # normal-frontier popcount per sweep
+    tm_frontier_d: Any   # [p, max_iters] int32 -- delegate-frontier
+                         # popcount (content replicated across shards)
+    tm_backward: Any     # [p, max_iters, 3, n_words(W)] uint32 -- the
+                         # per-lane (dd, dn, nd) pull decisions, packed
 
 
 jax.tree_util.register_dataclass(
@@ -174,7 +194,8 @@ jax.tree_util.register_dataclass(
                  "lane_stop", "depth_cap", "has_targets",
                  "target_n", "target_d", "frontier_n", "frontier_d",
                  "work_fwd", "work_bwd", "nn_sent", "delegate_round",
-                 "wire_delegate", "wire_nn", "nn_sparse", "nn_overflow"),
+                 "wire_delegate", "wire_nn", "nn_sparse", "nn_overflow",
+                 "tm_frontier_n", "tm_frontier_d", "tm_backward"),
     meta_fields=(),
 )
 
@@ -274,6 +295,13 @@ def init_multi_state(
                     target_n[part, local, q] = True
     mi = cfg.max_iters
     z = lambda: np.zeros((p, mi), dtype=np.int32)
+    # telemetry carry: real [p, mi]-shaped buffers only when asked for;
+    # zero-size otherwise (the same compile-away trick as the reachability
+    # dummies above, taken to its limit -- XLA carries nothing)
+    tmi = mi if cfg.telemetry else 0
+    tm_frontier_n = np.zeros((p, tmi), dtype=np.int32)
+    tm_frontier_d = np.zeros((p, tmi), dtype=np.int32)
+    tm_backward = np.zeros((p, tmi, 3, n_words(w)), dtype=np.uint32)
     lane_active = np.zeros((p, w), dtype=bool)
     lane_active[:, : sources.size] = True
     return MSBFSState(
@@ -290,6 +318,8 @@ def init_multi_state(
         frontier_n=frontier_n, frontier_d=frontier_d,
         work_fwd=z(), work_bwd=z(), nn_sent=z(), delegate_round=z(),
         wire_delegate=z(), wire_nn=z(), nn_sparse=z(), nn_overflow=z(),
+        tm_frontier_n=tm_frontier_n, tm_frontier_d=tm_frontier_d,
+        tm_backward=tm_backward,
     )
 
 
@@ -562,6 +592,21 @@ def msbfs_step(
         w_fwd = w_fwd + jnp.sum(act_nn.astype(jnp.int32))
     w_bwd = work_dd_b + work_nd_b + work_dn_b
     slot = jnp.clip(it, 0, cfg.max_iters - 1)
+    # ---- device-plane sweep telemetry (static branch: the disabled path
+    # returns the zero-size carry untouched and XLA compiles all of this
+    # away -- the expand-gated frontier masks and the direction word are
+    # already live values, so telemetry adds no new collective, no new
+    # host sync, only its own accumulation) -------------------------------
+    if cfg.telemetry:
+        tm_frontier_n = state.tm_frontier_n.at[slot].add(
+            jnp.sum(frontier_n.astype(jnp.int32)))
+        tm_frontier_d = state.tm_frontier_d.at[slot].add(
+            jnp.sum(frontier_d.astype(jnp.int32)))
+        tm_backward = state.tm_backward.at[slot].set(pack_lanes(backward))
+    else:
+        tm_frontier_n = state.tm_frontier_n
+        tm_frontier_d = state.tm_frontier_d
+        tm_backward = state.tm_backward
     return MSBFSState(
         level_n=new_level_n,
         level_d=new_level_d,
@@ -585,6 +630,9 @@ def msbfs_step(
         wire_nn=state.wire_nn.at[slot].add(nn_bytes),
         nn_sparse=state.nn_sparse.at[slot].add(nn_sparse),
         nn_overflow=state.nn_overflow.at[slot].add(nn_ovf),
+        tm_frontier_n=tm_frontier_n,
+        tm_frontier_d=tm_frontier_d,
+        tm_backward=tm_backward,
     )
 
 

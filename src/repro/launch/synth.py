@@ -105,4 +105,7 @@ def synth_bfs_state(pg, cfg: BFSConfig, mesh, part_axes) -> BFSState:
         wire_delegate=arr((mi,), np.int32),
         wire_nn=arr((mi,), np.int32),
         nn_sparse=arr((mi,), np.int32),
+        tm_frontier_n=arr((mi if cfg.telemetry else 0,), np.int32),
+        tm_frontier_d=arr((mi if cfg.telemetry else 0,), np.int32),
+        tm_backward=arr((mi if cfg.telemetry else 0,), np.int32),
     )

@@ -22,6 +22,12 @@ tracer + disabled registry, both handing out shared no-op objects.
 Both clocks are injectable (``Observability(clock=...)``) so tests drive
 deterministic timestamps -- the same pattern as ``serve/cache.py``.
 
+Two device-plane companions live alongside the host-plane pair:
+``obs/device.py`` harvests the in-jit sweep telemetry carry into
+``device.shard.<i>.*`` imbalance metrics, and ``obs/profile.py`` samples
+dispatch->ready latencies (``BFSServeEngine(profile=...)``) for the
+``CALIB_device.json`` calibration artifact.
+
 See ``README.md`` in this package for the event taxonomy, exporter usage,
 and how to open a trace in Perfetto.
 """
@@ -29,10 +35,13 @@ from __future__ import annotations
 
 import time
 
+from .device import (SweepTelemetry, export_shard_metrics, harvest_telemetry,
+                     skew)
 from .metrics import (BYTES_BUCKETS, LATENCY_BUCKETS, NULL_INSTRUMENT,
                       RATIO_BUCKETS, Counter, Gauge, Histogram,
                       MetricsRegistry, exp_buckets, sanitize_label,
-                      tenant_metric)
+                      shard_metric, tenant_metric)
+from .profile import NULL_PROFILER, DispatchProfiler, as_profiler
 from .trace import NULL_SPAN, TraceEvent, Tracer
 
 
@@ -66,8 +75,10 @@ NULL_OBS = Observability(enabled=False)
 
 
 __all__ = [
-    "BYTES_BUCKETS", "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS",
-    "MetricsRegistry", "NULL_INSTRUMENT", "NULL_OBS", "NULL_SPAN",
-    "Observability", "RATIO_BUCKETS", "TraceEvent", "Tracer", "exp_buckets",
-    "sanitize_label", "tenant_metric",
+    "BYTES_BUCKETS", "Counter", "DispatchProfiler", "Gauge", "Histogram",
+    "LATENCY_BUCKETS", "MetricsRegistry", "NULL_INSTRUMENT", "NULL_OBS",
+    "NULL_PROFILER", "NULL_SPAN", "Observability", "RATIO_BUCKETS",
+    "SweepTelemetry", "TraceEvent", "Tracer", "as_profiler", "exp_buckets",
+    "export_shard_metrics", "harvest_telemetry", "sanitize_label",
+    "shard_metric", "skew", "tenant_metric",
 ]

@@ -1,0 +1,137 @@
+"""Device-plane telemetry harvest: per-sweep, per-shard traversal sensors.
+
+The compiled sweep accumulates its telemetry entirely on device
+(``MSBFSConfig(telemetry=True)`` / ``BFSConfig(telemetry=True)`` carry the
+``tm_*`` buffers through the state -- see ``core/msbfs.py``); this module
+is the host side: :func:`harvest_telemetry` reads a *finished* traversal
+state into a :class:`SweepTelemetry` snapshot, and
+:func:`export_shard_metrics` turns it into the ``shard``-labelled gauges
+and histograms of the ``repro.obs`` registry.
+
+Zero extra host syncs by construction: the harvest only ever runs at
+points where the serving engine already fetches the state host-side (batch
+completion, refill-session close), and it reads accumulation buffers of an
+already-finished computation -- it can never change the traversal schedule
+or any ``ServeStats`` counter (pinned in ``tests/test_device_telemetry.py``).
+
+Shard-label convention (see ``obs/README.md``, "Device plane"): per-shard
+series live under ``device.shard.<i>.*`` (:func:`~repro.obs.metrics
+.shard_metric`, sanitized exactly like tenant labels), cross-shard skew
+summaries under plain ``device.*`` gauges. Skew is reported as ``max /
+mean`` across shards -- 1.0 is perfectly balanced, the paper's scale-free
+pain point shows up as ``device.frontier_skew`` drifting above it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from .metrics import BYTES_BUCKETS, RATIO_BUCKETS, shard_metric
+
+
+@dataclass
+class SweepTelemetry:
+    """Host-side (numpy) snapshot of one finished traversal's telemetry.
+
+    ``S`` below is the state's ``max_iters`` slot count; refill sessions
+    running past it accumulate into the last slot (the wire-counter
+    convention), so *sums* over the sweep axis stay exact even then.
+    ``frontier_d`` content is replicated across shards (delegates are
+    global); ``frontier_n``, the wire splits and ``nn_overflow`` are
+    genuinely per shard. ``dir_backward`` is the per-sweep direction
+    record: packed ``[p, S, 3, n_words]`` uint32 lane words for msBFS,
+    a ``[p, S]`` int32 bitmask (bits 1/2/4 = dd/dn/nd pulled) for
+    single-source BFS.
+    """
+
+    sweeps: int               # executed sweep count (device `it`)
+    frontier_n: np.ndarray    # [p, S] int32
+    frontier_d: np.ndarray    # [p, S] int32 (replicated content)
+    dir_backward: np.ndarray  # [p, S, 3, nw] uint32 | [p, S] int32
+    wire_delegate: np.ndarray  # [p, S] int32 bytes
+    wire_nn: np.ndarray        # [p, S] int32 bytes
+    nn_sparse: np.ndarray      # [S] int32 (global decision, row 0)
+    nn_overflow: np.ndarray    # [p, S] int32
+
+    @property
+    def p(self) -> int:
+        return self.frontier_n.shape[0]
+
+    def shard_frontier(self) -> np.ndarray:
+        """Per-shard total frontier work: [p] int64 (normal frontier only --
+        the delegate frontier is replicated, so it carries no imbalance)."""
+        return self.frontier_n.sum(axis=1, dtype=np.int64)
+
+    def shard_wire_bytes(self) -> np.ndarray:
+        """Per-shard total wire bytes (delegate + nn): [p] int64."""
+        return (self.wire_delegate.sum(axis=1, dtype=np.int64)
+                + self.wire_nn.sum(axis=1, dtype=np.int64))
+
+
+def skew(per_shard) -> float:
+    """max/mean imbalance of a per-shard series (1.0 = balanced; 0.0 for
+    an all-zero series, where imbalance is meaningless)."""
+    x = np.asarray(per_shard, dtype=np.float64)
+    m = x.mean() if x.size else 0.0
+    return float(x.max() / m) if m > 0 else 0.0
+
+
+def harvest_telemetry(state: Any) -> SweepTelemetry | None:
+    """Read a finished traversal state's telemetry host-side.
+
+    Returns ``None`` when the state was built without telemetry (the
+    ``tm_*`` carry is zero-size) or predates the telemetry fields -- both
+    states harvest nothing, so callers can gate on the return value alone.
+    Works for ``MSBFSState`` and ``BFSState`` alike (duck-typed on the
+    shared field names).
+    """
+    tm = getattr(state, "tm_frontier_n", None)
+    if tm is None:
+        return None
+    tm = np.asarray(tm)
+    if tm.shape[-1] == 0:
+        return None
+    return SweepTelemetry(
+        sweeps=int(np.asarray(state.it).reshape(-1)[0]),
+        frontier_n=tm,
+        frontier_d=np.asarray(state.tm_frontier_d),
+        dir_backward=np.asarray(state.tm_backward),
+        wire_delegate=np.asarray(state.wire_delegate),
+        wire_nn=np.asarray(state.wire_nn),
+        nn_sparse=np.asarray(state.nn_sparse)[0],
+        nn_overflow=np.asarray(state.nn_overflow),
+    )
+
+
+def export_shard_metrics(obs, tel: SweepTelemetry) -> None:
+    """Mirror one traversal's telemetry into the metrics registry.
+
+    Per shard ``i``: ``device.shard.<i>.frontier_total`` /
+    ``device.shard.<i>.wire_bytes`` gauges (this traversal's totals) and a
+    ``device.shard.<i>.frontier_per_sweep`` histogram fed the executed
+    sweeps' frontier popcounts. Cross-shard: ``device.frontier_skew`` /
+    ``device.wire_skew`` last-traversal gauges plus ``device.*_skew_dist``
+    histograms (one sample per traversal -- the long-run imbalance
+    distribution), and ``device.sweeps`` / ``device.nn_sparse_sweeps``.
+    """
+    if obs is None or not obs.enabled:
+        return
+    m = obs.metrics
+    n_exec = min(tel.sweeps, tel.frontier_n.shape[1])
+    ftot = tel.shard_frontier()
+    wtot = tel.shard_wire_bytes()
+    for i in range(tel.p):
+        m.gauge(shard_metric(i, "frontier_total")).set(int(ftot[i]))
+        m.gauge(shard_metric(i, "wire_bytes")).set(int(wtot[i]))
+        h = m.histogram(shard_metric(i, "frontier_per_sweep"), BYTES_BUCKETS)
+        for v in tel.frontier_n[i, :n_exec]:
+            h.record(int(v))
+    f_skew, w_skew = skew(ftot), skew(wtot)
+    m.gauge("device.frontier_skew").set(f_skew)
+    m.gauge("device.wire_skew").set(w_skew)
+    m.histogram("device.frontier_skew_dist", RATIO_BUCKETS).record(f_skew)
+    m.histogram("device.wire_skew_dist", RATIO_BUCKETS).record(w_skew)
+    m.gauge("device.sweeps").set(tel.sweeps)
+    m.gauge("device.nn_sparse_sweeps").set(int(tel.nn_sparse.sum()))

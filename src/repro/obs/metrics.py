@@ -254,3 +254,11 @@ def tenant_metric(tenant, suffix: str) -> str:
     dashboards can glob ``serve.tenant.*`` and every frontend counter,
     gauge, and histogram for a tenant lands under one subtree."""
     return f"serve.tenant.{sanitize_label(tenant)}.{suffix}"
+
+
+def shard_metric(shard, suffix: str) -> str:
+    """The canonical per-shard (mesh-device) metric name:
+    ``device.shard.<shard>.<suffix>`` -- the device-plane sibling of
+    :func:`tenant_metric` (obs/device.py feeds these from harvested sweep
+    telemetry; dashboards glob ``device.shard.*``)."""
+    return f"device.shard.{sanitize_label(shard)}.{suffix}"

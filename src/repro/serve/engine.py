@@ -52,7 +52,8 @@ import numpy as np
 from repro.core import bfs as B, comm as C, engine as E, msbfs as M
 from repro.core.partition import partition_graph
 from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
-from repro.obs import BYTES_BUCKETS, NULL_OBS, RATIO_BUCKETS, Observability
+from repro.obs import (BYTES_BUCKETS, NULL_OBS, RATIO_BUCKETS, Observability,
+                       as_profiler, export_shard_metrics, harvest_telemetry)
 
 from .batcher import LaneScheduler
 from .cache import LRUCache
@@ -306,6 +307,19 @@ class BFSServeEngine:
         submit->deliver latency histograms. Tracing is host-side only --
         the traversal schedule (and every counter) is bit-identical with
         ``obs`` on or off. Default: the shared disabled plane (free).
+        A ``cfg`` built with ``telemetry=True`` additionally carries the
+        in-jit sweep-telemetry buffers through every traversal; the
+        engine harvests them at the existing host boundaries (batch
+        completion / session close -- zero extra syncs) into
+        ``self.last_telemetry`` and the ``device.shard.<i>.*`` imbalance
+        metrics (see ``obs/device.py``).
+    profile : dispatch-latency profiling (``obs/profile.py``): pass a
+        :class:`repro.obs.DispatchProfiler`, ``True`` (bracket every
+        dispatch with ``block_until_ready``), or a float sample rate.
+        Sampled dispatches measure dispatch->results-ready latency per
+        dispatch site (``batch`` / ``sweep`` / ``block``); the traversal
+        schedule and every ``ServeStats`` counter stay bit-identical --
+        only host timing moves. Default off (a shared null passthrough).
     reuse_components : memoize reachability answers *per connected
         component*: on an undirected graph the reachable set is the
         source's component, so every later REACHABILITY query from an
@@ -342,9 +356,12 @@ class BFSServeEngine:
         specialize_reachability: bool = True,
         reuse_components: bool = True,
         obs: Observability | None = None,
+        profile=None,
         runner_cache: dict | None = None,
     ):
         self.obs = obs if obs is not None else NULL_OBS
+        self.profiler = as_profiler(profile, obs=self.obs)
+        self.last_telemetry = None   # latest harvested SweepTelemetry
         if pg is None:
             if graph is None:
                 raise ValueError("need graph= or pg=")
@@ -511,9 +528,18 @@ class BFSServeEngine:
 
     def _note_traversal(self, state, sweeps: int) -> None:
         """``stats.note_traversal`` plus the metrics mirror: the finished
-        traversal's wire volume as a per-sweep histogram sample."""
+        traversal's wire volume as a per-sweep histogram sample. States
+        carrying the in-jit telemetry buffers (``cfg.telemetry=True``)
+        are additionally harvested here -- this is a point where the
+        engine already fetched the state host-side, so the device-plane
+        snapshot (``self.last_telemetry``) and the per-shard imbalance
+        metrics cost zero extra syncs."""
         pre = self.stats.wire_bytes_total
         self.stats.note_traversal(state)
+        tel = harvest_telemetry(state)
+        if tel is not None:
+            self.last_telemetry = tel
+            export_shard_metrics(self.obs, tel)
         if self.obs.enabled and sweeps > 0:
             self.obs.metrics.histogram(
                 "serve.wire_bytes_per_sweep", BYTES_BUCKETS).record(
@@ -590,7 +616,8 @@ class BFSServeEngine:
                 self.pg, [q.source for q in queries], cfg,
                 depth_caps=[q.depth_cap for q in queries],
                 targets=[q.targets for q in queries]))
-            out = run_full(self.pgv, self.plan, st)
+            out = self.profiler.timed("batch", run_full,
+                                      self.pgv, self.plan, st)
             with self.obs.trace.span("serve.gather", lanes=len(queries)):
                 if reach_fast:
                     rows = M.gather_reachable_multi(self.pg, out)
@@ -881,7 +908,8 @@ class BFSServeEngine:
             busy_now = sched.n_busy
             t0 = obs.clock() if obs.enabled else 0.0
             with obs.trace.span("serve.sweep", busy=busy_now):
-                sess.state = sess.step_once(self.pgv, self.plan, sess.state)
+                sess.state = self.profiler.timed(
+                    "sweep", sess.step_once, self.pgv, self.plan, sess.state)
                 sess.exclusive = False
                 sess.sweeps += 1
                 self.stats.sweeps += 1
@@ -928,7 +956,8 @@ class BFSServeEngine:
                        else sess.block)
             if obs.enabled:
                 obs.trace.instant("serve.block.dispatch", busy=sched.n_busy)
-            sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
+            sess.cur = self.profiler.timed(
+                "block", blockfn, self.pgv, self.plan, sess.state, watch)
             sess.exclusive = False
             # no speculation on a fresh dispatch: this site is only reached
             # right after a scheduler change (or at session start), where a
@@ -997,7 +1026,11 @@ class BFSServeEngine:
                 if obs.enabled:
                     obs.trace.instant("serve.block.dispatch",
                                       busy=sched.n_busy)
-                sess.cur = blockfn(self.pgv, self.plan, sess.state, watch)
+                # speculative heads (`sess.block(...)` below) stay
+                # unprofiled: blocking on a handle chained ahead of the
+                # lagging one would defeat the very overlap it measures
+                sess.cur = self.profiler.timed(
+                    "block", blockfn, self.pgv, self.plan, sess.state, watch)
                 sess.exclusive = False
                 sess.busy_at_dispatch = sched.n_busy
             if deferred is not None:

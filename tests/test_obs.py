@@ -139,6 +139,51 @@ def test_histogram_empty_and_single():
     assert h.percentile(99) == pytest.approx(0.25)
 
 
+def test_histogram_percentile_extremes_clamp_to_observed():
+    """p=0 pins to the observed minimum and p=100 to the observed maximum
+    -- including a sample that lands in the unbounded overflow bucket,
+    which would otherwise have no finite upper edge."""
+    h = Histogram(bounds=LATENCY_BUCKETS)
+    for v in (0.002, 0.02, 0.2):
+        h.record(v)
+    assert h.percentile(0) == pytest.approx(0.002)
+    assert h.percentile(100) == pytest.approx(0.2)
+    h.record(1e6)                               # overflow bucket
+    assert h.percentile(0) == pytest.approx(0.002)
+    assert h.percentile(100) == pytest.approx(1e6)
+    # empty histograms are total too
+    assert Histogram(bounds=LATENCY_BUCKETS).percentile(0) == 0.0
+    assert Histogram(bounds=LATENCY_BUCKETS).percentile(100) == 0.0
+
+
+def test_shard_labeled_histogram_round_trip(tmp_path):
+    """A shard-labeled device-plane histogram keeps its canonical
+    ``device.shard.<i>.<suffix>`` name through snapshot, JSON export, and
+    text rendering -- the contract dashboards glob against."""
+    from repro.obs import shard_metric
+
+    reg = MetricsRegistry()
+    for shard in range(2):
+        h = reg.histogram(shard_metric(shard, "frontier_per_sweep"))
+        for v in (4.0, 8.0, 8.0):
+            h.record(v)
+        reg.gauge(shard_metric(shard, "wire_bytes")).set(1024 * (shard + 1))
+    snap = reg.snapshot()
+    assert snap["histograms"]["device.shard.0.frontier_per_sweep"]["count"] == 3
+    assert snap["gauges"]["device.shard.1.wire_bytes"] == 2048
+
+    path = tmp_path / "metrics.json"
+    reg.export_json(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["histograms"]["device.shard.1.frontier_per_sweep"][
+        "max"] == pytest.approx(8.0)
+    text = reg.render_text()
+    assert "device.shard.0.frontier_per_sweep" in text
+    assert "device.shard.1.wire_bytes" in text
+    # labels are sanitized into one segment, never extra hierarchy levels
+    assert shard_metric("a.b", "x") == "device.shard.a_b.x"
+
+
 def test_registry_instruments_and_snapshot(tmp_path):
     reg = MetricsRegistry()
     reg.counter("a.hits").inc()
