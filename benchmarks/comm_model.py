@@ -82,7 +82,7 @@ def run_strategies(scale: int = 10, th: int = 64, p_rank: int = 2,
 
     rows = {}
     for name, ccfg in STRATEGIES:
-        for nn in ("dense", "adaptive"):
+        for nn in ("dense", "adaptive", "compressed"):
             cfg = M.MSBFSConfig(n_queries=n_queries, max_iters=48,
                                 comm=dataclasses.replace(ccfg, nn=nn))
             st = M.init_multi_state(pg, sources, cfg)
@@ -118,6 +118,11 @@ def run_strategies(scale: int = 10, th: int = 64, p_rank: int = 2,
     assert (rows["allgather/adaptive"]["nn_bytes"]
             <= rows["allgather/dense"]["nn_bytes"]), \
         "adaptive nn must not exceed the dense format"
+    # the compressed codec's exact byte accounting (varint rle / delta-id
+    # streams) must beat the adaptive dense/sparse switch it rides on
+    assert (rows["allgather/compressed"]["nn_bytes"]
+            <= rows["allgather/adaptive"]["nn_bytes"]), \
+        "compressed nn accounting must not exceed the adaptive format"
     # the mask_reduce local fold changes compute, never wire bytes
     assert (rows["allgather+maskfold/dense"]["delegate_bytes"]
             == rows["allgather/dense"]["delegate_bytes"])

@@ -28,6 +28,14 @@ counters are *bit-identical* between the two drivers, every answer is
 oracle-exact, and queries/sec must improve >= ``min_speedup``. Results are
 merged into ``BENCH_queries.json``.
 
+``--chunked`` benchmarks the chunked out-of-core sweep mode
+(``MSBFSConfig(edge_chunk=...)``) against the monolithic sweep on the
+same batch: every state leaf -- levels, work/wire counters, per-sweep
+telemetry -- must be bit-identical, answers oracle-exact, and the
+per-driver times plus counters land in a ``chunked`` section of
+``BENCH_scaling.json``. Defaults to the compressed nn wire format so the
+codec byte accounting rides the same run.
+
 ``--mixed`` benchmarks the typed-query subsystem (``repro.serve.queries``)
 on one skewed RMAT stream served four ways: full levels, reachability-only
 (raw device path and the shipped serving path with per-component reuse),
@@ -276,6 +284,86 @@ def run_overlap(scale: int = 7, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
     return section
 
 
+def run_chunked(scale: int = 12, th: int = 64, p_rank: int = 2,
+                p_gpu: int = 2, n_queries: int = 32, edge_chunk: int = 4096,
+                nn: str = "compressed", check_oracle: bool = True,
+                out_json: str | None = None):
+    """Chunked out-of-core sweeps vs the monolithic sweep: bit-identical
+    schedule and counters, bounded transient memory.
+
+    Runs the same W-lane msBFS batch twice -- ``MSBFSConfig(edge_chunk=0)``
+    and ``MSBFSConfig(edge_chunk=edge_chunk)`` -- and asserts **every**
+    state leaf (levels, per-sweep telemetry, work/wire counters) is
+    bit-identical, then checks the answers against the numpy oracle.
+    This is the acceptance harness for scale-16+ graphs whose monolithic
+    [e_max, W] edge-frontier buffers would not fit: the chunked run
+    streams ``edge_chunk``-edge blocks through ``lax.scan`` instead.
+    Defaults to the compressed nn wire format so one run exercises both
+    the codec accounting and the chunked schedule."""
+    from repro.core.comm import CommConfig
+    from repro.core.oracle import bfs_levels
+
+    g = rmat_graph(scale, seed=3)
+    pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    plan = E.build_exchange_plan(pg)
+    pgv = B.device_view(pg)
+    sources = pick_sources(g, n_queries, seed=1)
+
+    outs, times = {}, {}
+    for name, ec in (("monolithic", 0), ("chunked", edge_chunk)):
+        cfg = M.MSBFSConfig(n_queries=n_queries, max_iters=48,
+                            enable_do=True, edge_chunk=ec,
+                            comm=CommConfig(nn=nn))
+        out = M.run_msbfs_emulated(
+            pgv, plan, M.init_multi_state(pg, sources, cfg), cfg)
+        jax.block_until_ready(out.level_n)          # compile + warm
+        t0 = time.perf_counter()
+        out = M.run_msbfs_emulated(
+            pgv, plan, M.init_multi_state(pg, sources, cfg), cfg)
+        jax.block_until_ready(out.level_n)
+        outs[name], times[name] = out, time.perf_counter() - t0
+
+    # the chunked schedule must be *bit-identical*: every leaf of the
+    # final state, counters and telemetry included
+    la, lb = jax.tree.leaves(outs["monolithic"]), jax.tree.leaves(outs["chunked"])
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    levels = M.gather_levels_multi(pg, outs["chunked"])
+    if check_oracle:
+        for q, src in enumerate(sources):
+            np.testing.assert_array_equal(levels[q], bfs_levels(g, int(src)))
+
+    st = outs["chunked"]
+    counters = {
+        "sweeps": int(np.max(np.asarray(st.it))),
+        "work_fwd": int(np.sum(np.asarray(st.work_fwd))),
+        "work_bwd": int(np.sum(np.asarray(st.work_bwd))),
+        "nn_sent": int(np.sum(np.asarray(st.nn_sent))),
+        "wire_delegate_bytes": int(np.sum(np.asarray(st.wire_delegate))),
+        "wire_nn_bytes": int(np.sum(np.asarray(st.wire_nn))),
+        "nn_overflow": int(np.sum(np.asarray(st.nn_overflow))),
+    }
+    t_m, t_c = times["monolithic"], times["chunked"]
+    emit("msbfs/chunked", 1e6 * t_c / n_queries,
+         f"edge_chunk={edge_chunk} nn={nn} sweeps={counters['sweeps']} "
+         f"wire_nn={counters['wire_nn_bytes']} "
+         f"vs_monolithic={t_c / t_m:.2f}x time")
+    section = {
+        "graph": {"n": int(g.n), "m": int(g.m), "scale": scale,
+                  "p_rank": p_rank, "p_gpu": p_gpu, "seed": 3},
+        "n_queries": n_queries, "edge_chunk": edge_chunk, "nn": nn,
+        **counters,
+        "counters_bit_identical": True,
+        "oracle_exact": bool(check_oracle),
+        "time_monolithic_s": t_m, "time_chunked_s": t_c,
+    }
+    if out_json:
+        write_bench(out_json, "chunked", section)
+    return section
+
+
 def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
               p_rank: int = 2, p_gpu: int = 2, n_queries: int = 32,
               requests: int = 40, n_tails: int = 4, tail_len: int = 48,
@@ -408,10 +496,17 @@ if __name__ == "__main__":
     ap.add_argument("--overlap", action="store_true",
                     help="benchmark the overlapped host/device pipeline vs "
                          "the synchronous refill driver")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked out-of-core sweeps vs monolithic: "
+                         "bit-identical counters + oracle check")
+    ap.add_argument("--edge-chunk", type=int, default=4096,
+                    help="edge block size for --chunked")
     ap.add_argument("--scale", type=int, default=None)
     args = ap.parse_args()
     kw = {} if args.scale is None else {"scale": args.scale}
-    if args.overlap:
+    if args.chunked:
+        print(run_chunked(edge_chunk=args.edge_chunk, **kw))
+    elif args.overlap:
         print(run_overlap(**kw))
     elif args.mixed:
         print(run_mixed(**kw))

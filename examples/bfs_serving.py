@@ -191,6 +191,12 @@ def main():
                     help="delegate combine strategy (core.comm)")
     ap.add_argument("--adaptive-nn", action="store_true",
                     help="frontier-adaptive sparse/dense nn wire format")
+    ap.add_argument("--compressed-nn", action="store_true",
+                    help="compressed nn wire codec (varint rle/delta "
+                         "streams; exact byte accounting)")
+    ap.add_argument("--edge-chunk", type=int, default=0,
+                    help="chunked out-of-core sweeps: stream edge blocks "
+                         "of this size (0 = monolithic; bit-identical)")
     ap.add_argument("--trace", action="store_true",
                     help="attach the observability plane; export a "
                          "Chrome/Perfetto trace + metrics snapshot")
@@ -228,8 +234,10 @@ def main():
                          cfg=M.MSBFSConfig(telemetry=args.profile),
                          comm=CommConfig(
                              delegate=args.delegate,
-                             nn="adaptive" if args.adaptive_nn else "dense"),
-                         obs=obs, profile=profiler)
+                             nn="compressed" if args.compressed_nn
+                             else "adaptive" if args.adaptive_nn else "dense"),
+                         obs=obs, profile=profiler,
+                         edge_chunk=args.edge_chunk)
     t0 = time.perf_counter()
     # a mixed stream is never homogeneously-reachability, so only the
     # multi-target variant needs the extra compile

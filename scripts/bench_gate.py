@@ -73,6 +73,9 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
         ("frontend", lambda: serving_frontend.run_frontend(
             out_json=spath, min_speedup=0.0, **kw)),
         ("memory_model", lambda: memory_model.run(out_json=scpath, **kw)),
+        # chunked-vs-monolithic counters are correctness asserts, not perf
+        ("chunked", lambda: msbfs_throughput.run_chunked(
+            out_json=scpath, **kw)),
         ("weak_scaling", lambda: weak_scaling.run(out_json=scpath, **wkw)),
         ("strong_scaling", lambda: strong_scaling.run(out_json=scpath, **kw)),
     ):

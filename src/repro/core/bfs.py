@@ -66,6 +66,14 @@ class BFSConfig:
     # hierarchical) and the nn wire format of the static exchange (dense
     # slot bitmask / sparse id list / frontier-adaptive switch)
     comm: comm.CommConfig = comm.CommConfig()
+    # Out-of-core sweep mode: > 0 streams the dd/nd/dn pushes and the
+    # static-exchange slot accumulate over fixed-size edge blocks under
+    # ``lax.scan`` and row-blocks the pulls (``edge_chunk // pull_chunk``
+    # rows per block) -- same contract as ``MSBFSConfig.edge_chunk``:
+    # bit-identical answers/counters, only peak memory changes. The legacy
+    # ``bin_by_owner`` nn path (static_exchange=False) stays monolithic:
+    # its [E] bool active array is already minimal. 0 = monolithic.
+    edge_chunk: int = 0
     # True carries per-sweep device telemetry (``tm_*`` fields of BFSState:
     # per-shard frontier popcounts + the direction-decision bitmask)
     # through the state; False (default) keeps zero-size dummies so the
@@ -174,17 +182,66 @@ def _push_scatter(csr: CSR, active: jnp.ndarray, n_dst: int) -> jnp.ndarray:
     return out.at[csr.cols].max(active, mode="drop")
 
 
-def _pull_chunked(
-    csr: CSR, rows_active: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int
-):
-    """Bottom-up pull: rows scan their parent lists chunk-by-chunk, dropping
-    out as soon as a frontier parent is found (paper Section IV-B adapted to
-    vectorized chunks). Returns (found [n_rows] bool, work scalar int32)."""
-    deg = _row_degrees(csr)
-    n_rows = csr.n_rows
-    starts = csr.offsets[:-1]
-    ends = csr.offsets[1:]
-    max_chunks = -(-csr.e_max // chunk)
+def _push_fused(csr: CSR, frontier_rows: jnp.ndarray, n_dst: int,
+                edge_chunk: int = 0) -> jnp.ndarray:
+    """Fused gather + scatter-OR push; ``edge_chunk > 0`` streams edge
+    blocks through ``lax.scan`` (the single-bit sibling of
+    ``msbfs._push_multi`` -- bit-identical, memory only)."""
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        return _push_scatter(csr, _push_active(csr, frontier_rows), n_dst)
+    f_ext = jnp.concatenate([frontier_rows, jnp.zeros((1,), bool)])
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids, (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    col = jnp.pad(csr.cols, (0, pad)).reshape(nblk, edge_chunk)
+
+    def body(out, blk):
+        r, c = blk
+        return out.at[c].max(f_ext[r], mode="drop"), None
+
+    out, _ = lax.scan(body, jnp.zeros((n_dst,), jnp.bool_), (rid, col))
+    return out
+
+
+def _nn_slots_bits(csr: CSR, frontier_rows: jnp.ndarray, plan,
+                   edge_chunk: int = 0):
+    """Sender-side unique-slot occupancy for the static-exchange nn path:
+    ``(sa [cap_total] bool, act_sum int32)`` with ``act_sum`` the exact
+    ``fv_nn_work`` term (``plan.perm`` is a permutation, so the permuted
+    sum is identical). Chunked variant streams edge blocks."""
+    f_ext = jnp.concatenate([frontier_rows, jnp.zeros((1,), bool)])
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        act = f_ext[csr.rowids]
+        sa = jnp.zeros((plan.cap_total + 1,), jnp.bool_).at[plan.seg_ids].max(
+            act[plan.perm])[: plan.cap_total]
+        return sa, jnp.sum(act.astype(jnp.int32))
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids[plan.perm], (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    seg = jnp.pad(plan.seg_ids, (0, pad),
+                  constant_values=plan.cap_total).reshape(nblk, edge_chunk)
+
+    def body(carry, blk):
+        sa, tot = carry
+        r, s = blk
+        act = f_ext[r]
+        return (sa.at[s].max(act), tot + jnp.sum(act.astype(jnp.int32))), None
+
+    (sa, tot), _ = lax.scan(
+        body, (jnp.zeros((plan.cap_total + 1,), jnp.bool_), jnp.int32(0)),
+        (rid, seg))
+    return sa[: plan.cap_total], tot
+
+
+def _pull_rows(cols_table, e_max, starts, ends, rows_active, col_frontier,
+               chunk):
+    """The pull while_loop over one set of rows (possibly a row-block
+    slice; the cols table and frontier are always full)."""
+    deg = ends - starts
+    n_rows = starts.shape[0]
+    max_chunks = -(-e_max // chunk)
 
     def cond(carry):
         k, found, work = carry
@@ -197,7 +254,7 @@ def _pull_chunked(
         base = starts + k * chunk
         idx = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
         valid = remaining[:, None] & (idx < ends[:, None])
-        cols = csr.cols[jnp.clip(idx, 0, csr.e_max - 1)]
+        cols = cols_table[jnp.clip(idx, 0, e_max - 1)]
         hit = valid & col_frontier[cols]
         found = found | jnp.any(hit, axis=1)
         work = work + jnp.sum(valid.astype(jnp.int32))
@@ -207,6 +264,38 @@ def _pull_chunked(
     found0 = jnp.zeros((n_rows,), dtype=jnp.bool_)
     _, found, work = lax.while_loop(cond, body, (k0, found0, jnp.int32(0)))
     return found, work
+
+
+def _pull_chunked(
+    csr: CSR, rows_active: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int,
+    row_block: int = 0,
+):
+    """Bottom-up pull: rows scan their parent lists chunk-by-chunk, dropping
+    out as soon as a frontier parent is found (paper Section IV-B adapted to
+    vectorized chunks). Returns (found [n_rows] bool, work scalar int32).
+
+    ``row_block > 0`` scans fixed-height row blocks in sequence (the
+    out-of-core mode) -- bit-identical: each row's early exit and work
+    contribution depend only on its own parent list."""
+    starts = csr.offsets[:-1]
+    ends = csr.offsets[1:]
+    if row_block <= 0 or row_block >= csr.n_rows:
+        return _pull_rows(csr.cols, csr.e_max, starts, ends, rows_active,
+                          col_frontier, chunk)
+    n_rows = csr.n_rows
+    nblk = -(-n_rows // row_block)
+    pad = nblk * row_block - n_rows
+    st = jnp.pad(starts, (0, pad)).reshape(nblk, row_block)
+    en = jnp.pad(ends, (0, pad)).reshape(nblk, row_block)
+    ra = jnp.pad(rows_active, (0, pad)).reshape(nblk, row_block)
+
+    def body(_, blk):
+        s, e, a = blk
+        return None, _pull_rows(csr.cols, csr.e_max, s, e, a, col_frontier,
+                                chunk)
+
+    _, (found, works) = lax.scan(body, None, (st, en, ra))
+    return found.reshape(-1)[: n_rows], jnp.sum(works)
 
 
 def _count(mask: jnp.ndarray) -> jnp.ndarray:
@@ -270,34 +359,34 @@ def bfs_step(
         backward = jnp.zeros((3,), dtype=jnp.bool_)
     bwd_dd, bwd_dn, bwd_nd = backward[0], backward[1], backward[2]
 
+    # edge_chunk > 0: stream pushes / the slot accumulate over edge blocks
+    # and row-block the pulls (see BFSConfig.edge_chunk)
+    ec = cfg.edge_chunk
+    rb = max(1, ec // max(cfg.pull_chunk, 1)) if ec > 0 else 0
+
     # ---- dd: delegate -> delegate ----------------------------------------
-    act_dd = _push_active(pgv.dd, frontier_d)
-    push_dd = _push_scatter(pgv.dd, act_dd, d)
-    pull_dd, work_dd_b = _pull_chunked(pgv.dd, unvisited_d & pgv.dd_src_mask, frontier_d, cfg.pull_chunk)
+    push_dd = _push_fused(pgv.dd, frontier_d, d, ec)
+    pull_dd, work_dd_b = _pull_chunked(pgv.dd, unvisited_d & pgv.dd_src_mask, frontier_d, cfg.pull_chunk, rb)
     cand_dd = jnp.where(bwd_dd, pull_dd, push_dd)
 
     # ---- nd: normal -> delegate (pull uses the dn subgraph) ---------------
-    act_nd = _push_active(pgv.nd, frontier_n)
-    push_nd = _push_scatter(pgv.nd, act_nd, d)
+    push_nd = _push_fused(pgv.nd, frontier_n, d, ec)
     fr_n_ext = frontier_n
-    pull_nd, work_nd_b = _pull_chunked(pgv.dn, unvisited_d & pgv.dn_src_mask, fr_n_ext, cfg.pull_chunk)
+    pull_nd, work_nd_b = _pull_chunked(pgv.dn, unvisited_d & pgv.dn_src_mask, fr_n_ext, cfg.pull_chunk, rb)
     cand_nd = jnp.where(bwd_nd, pull_nd, push_nd)
 
     # ---- dn: delegate -> normal (pull uses the nd subgraph) ---------------
-    act_dn = _push_active(pgv.dn, frontier_d)
-    push_dn = _push_scatter(pgv.dn, act_dn, nl)
-    pull_dn, work_dn_b = _pull_chunked(pgv.nd, unvisited_n & pgv.nd_src_mask, frontier_d, cfg.pull_chunk)
+    push_dn = _push_fused(pgv.dn, frontier_d, nl, ec)
+    pull_dn, work_dn_b = _pull_chunked(pgv.nd, unvisited_n & pgv.nd_src_mask, frontier_d, cfg.pull_chunk, rb)
     new_n_local = jnp.where(bwd_dn, pull_dn, push_dn)
 
     # ---- nn: normal -> normal, forward only, remote exchange --------------
-    act_nn = _push_active(pgv.nn, frontier_n)
     if cfg.static_exchange:
         # SPerf: 1 bit per unique (owner, local) slot on the static plan --
         # no runtime sort, uniquification for free, fixed cap_peer/8 bytes
-        # (or the sparse / frontier-adaptive slot-id format per
-        # cfg.comm.nn, chosen inside the comm layer)
-        sa = jnp.zeros((plan.cap_total + 1,), jnp.bool_).at[plan.seg_ids].max(
-            act_nn[plan.perm])[: plan.cap_total]
+        # (or the sparse / frontier-adaptive slot-id / compressed codec
+        # format per cfg.comm.nn, chosen inside the comm layer)
+        sa, act_nn_sum = _nn_slots_bits(pgv.nn, frontier_n, plan, ec)
         rows = jnp.minimum(plan.seg_owner, p - 1)
         ok = plan.seg_owner < p
         dense = jnp.zeros((p, plan.cap_peer), jnp.bool_).at[rows, plan.seg_pos].max(
@@ -306,6 +395,10 @@ def bfs_step(
             cplan, dense, plan.recv_local, nl)
         sent = jnp.sum(sa.astype(jnp.int32))
     else:
+        # legacy runtime-binned path: kept monolithic (the [E] bool active
+        # array is already the minimal working set; see BFSConfig.edge_chunk)
+        act_nn = _push_active(pgv.nn, frontier_n)
+        act_nn_sum = fv_nn_work(act_nn)
         if cfg.cap_nn > 0:
             cap = cfg.cap_nn
         elif cfg.cap_nn < 0:
@@ -350,7 +443,7 @@ def bfs_step(
     # ---- statistics --------------------------------------------------------
     w_fwd = (
         jnp.where(bwd_dd, 0, fv_dd) + jnp.where(bwd_nd, 0, fv_nd)
-        + jnp.where(bwd_dn, 0, fv_dn) + fv_nn_work(act_nn)
+        + jnp.where(bwd_dn, 0, fv_dn) + act_nn_sum
     )
     w_bwd = (
         jnp.where(bwd_dd, work_dd_b, 0) + jnp.where(bwd_nd, work_nd_b, 0)

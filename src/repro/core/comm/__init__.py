@@ -25,6 +25,9 @@ here, split by concern:
   words, sparse capped id lists, and the frontier-adaptive per-sweep
   switch between them; plus the legacy runtime-binned and payload
   exchanges.
+* :mod:`.codec`    -- the compressed nn wire codec (``nn="compressed"``):
+  run-length bitmap / delta-id varint streams, with host reference
+  encoders and the exact in-trace byte-length formulas the counters use.
 
 Every function runs identically under ``jax.vmap(axis_name=...)``
 (single-device emulation) and ``jax.shard_map`` (real meshes); strategy
@@ -41,6 +44,15 @@ from .base import (
     as_axes,
     axis_size,
     plan_for,
+)
+from .codec import (
+    compressed_wire_bytes,
+    delta_decode_ids,
+    delta_encode_ids,
+    delta_stream_bytes,
+    rle_decode,
+    rle_encode,
+    rle_stream_bytes,
 )
 from .exchange import (
     bin_by_owner,
@@ -63,9 +75,11 @@ from .wire import n_words, pack_lanes, unpack_lanes
 __all__ = [
     "DELEGATE_STRATEGIES", "NN_FORMATS", "AxisNames", "CommConfig",
     "CommPlan", "any_reduce", "as_axes", "axis_size", "bin_by_owner",
-    "delegate_allreduce_min", "delegate_allreduce_or",
-    "delegate_allreduce_sum", "delegate_combine", "exchange_normal",
-    "exchange_payload", "exchange_words", "lane_any_reduce", "n_words",
-    "nn_exchange_bits", "nn_exchange_words", "pack_lanes", "plan_for",
-    "unpack_lanes",
+    "compressed_wire_bytes", "delegate_allreduce_min",
+    "delegate_allreduce_or", "delegate_allreduce_sum", "delegate_combine",
+    "delta_decode_ids", "delta_encode_ids", "delta_stream_bytes",
+    "exchange_normal", "exchange_payload", "exchange_words",
+    "lane_any_reduce", "n_words", "nn_exchange_bits", "nn_exchange_words",
+    "pack_lanes", "plan_for", "rle_decode", "rle_encode",
+    "rle_stream_bytes", "unpack_lanes",
 ]

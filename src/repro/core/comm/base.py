@@ -41,7 +41,7 @@ AxisNames = Sequence[str] | str
 #: delegate-combine strategies (CommConfig.delegate)
 DELEGATE_STRATEGIES = ("auto", "allgather", "ring", "hier")
 #: nn wire formats (CommConfig.nn)
-NN_FORMATS = ("dense", "sparse", "adaptive")
+NN_FORMATS = ("dense", "sparse", "adaptive", "compressed")
 
 
 def as_axes(axis_names: AxisNames) -> tuple:
@@ -87,7 +87,12 @@ class CommConfig:
         fits the cap (small frontiers) and dense otherwise: the
         communication analog of direction optimization, decided from the
         frontier counters the sweep already computes and globally agreed
-        via one scalar reduce so no partition can diverge.
+        via one scalar reduce so no partition can diverge. ``"compressed"``
+        -- the active-slot set as the cheaper of two LEB128 varint
+        streams, run-length bitmap vs delta-encoded slot ids (see
+        :mod:`repro.core.comm.codec`); transport rides the same
+        globally-agreed adaptive switch (never drops), counters carry the
+        codec's exact byte cost.
     ``sparse_cap``
         Active-slot capacity per peer of the sparse format. 0 picks a
         cap that keeps sparse strictly cheaper than dense
@@ -182,6 +187,17 @@ class CommPlan:
 
     def nn_sparse_bits_bytes(self, cap_sparse: int) -> int:
         return (self.p - 1) * cap_sparse * 4              # slot ids only
+
+    # Compressed-format *worst cases* (documentation bounds only -- actual
+    # counters use the exact traced stream lengths from comm.codec):
+    # delta stream <= 5 B per active slot, rle stream <= cap + 1 B (run
+    # lengths sum to cap and varint_len(L) <= L for L >= 1, plus the
+    # optional leading zero run); min(rle, delta) <= cap + 1.
+    def nn_compressed_words_max_bytes(self, cap_peer: int, nw: int) -> int:
+        return (self.p - 1) * (cap_peer + 1 + cap_peer * nw * 4)
+
+    def nn_compressed_bits_max_bytes(self, cap_peer: int) -> int:
+        return (self.p - 1) * (cap_peer + 1)
 
     def a2a_bytes(self, per_peer_nbytes: int) -> int:
         """Per-device bytes of an all_to_all with ``per_peer_nbytes`` per

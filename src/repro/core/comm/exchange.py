@@ -1,7 +1,7 @@
 """Point-to-point frontier exchange (paper Section V-B), with pluggable
 wire formats.
 
-Normal-vertex updates travel peer-to-peer. Three formats over the static
+Normal-vertex updates travel peer-to-peer. Four formats over the static
 (owner, local) slot layout of the :class:`~repro.core.engine.ExchangePlan`:
 
 * **dense** -- one bit per (slot, query): lane words for the batched path
@@ -18,6 +18,14 @@ Normal-vertex updates travel peer-to-peer. Three formats over the static
   sweep computes anyway and agreed globally through one scalar reduce so
   every partition takes the same ``lax.cond`` branch (a diverging branch
   would deadlock the collective on a real mesh).
+* **compressed** -- the active-slot set as the cheaper of two varint
+  streams, run-length bitmap vs delta-encoded slot ids
+  (:mod:`repro.core.comm.codec`). Transport physically rides the same
+  globally-agreed sparse/dense switch as adaptive (static-shape
+  collectives cannot ship variable-length streams, and the sparse branch
+  is only taken when every peer fits the cap, so nothing is ever
+  dropped); the ``wire_nn`` counters carry the codec's *exact* byte cost,
+  computed in-trace, which is what a byte-stream transport would ship.
 
 The legacy runtime-sorted binned exchange (:func:`bin_by_owner` +
 :func:`exchange_normal`) and the payload exchange of the generalized
@@ -29,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .base import AxisNames, CommPlan
+from .codec import compressed_wire_bytes
 from .wire import n_words, pack_lanes, unpack_lanes
 
 
@@ -144,7 +153,9 @@ def nn_exchange_words(plan: CommPlan, dense: jnp.ndarray,
     ``recv_local [p, cap_peer] int32`` the receiver-side slot -> local id
     table of the ExchangePlan. Returns ``(recv [nl, W] bool, wire_bytes
     int32, sparse_used int32 0/1, overflow int32)``. Format selection per
-    :class:`~.base.CommConfig.nn` (see module docstring).
+    :class:`~.base.CommConfig.nn` (see module docstring). Under
+    ``nn="compressed"`` the wire_bytes are the exact codec stream cost and
+    the flag reports which stream won (1 = delta ids, 0 = rle bitmap).
     """
     p, cap, w = dense.shape
     nw = n_words(w)
@@ -183,11 +194,23 @@ def nn_exchange_words(plan: CommPlan, dense: jnp.ndarray,
         recv, bts, ovf = sparse_path(dense)
         return recv, bts, jnp.int32(1), ovf
 
-    # adaptive: sparse iff globally feasible (no partition would drop);
-    # one scalar max-reduce makes the branch choice identical everywhere
-    local_max = jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))
-    feasible = lax.pmax(local_max, axes) <= cap_sparse
-    recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, dense)
+    # adaptive / compressed: sparse iff globally feasible (no partition
+    # would drop); one scalar max-reduce makes the branch identical everywhere
+    def adaptive_transport():
+        local_max = jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))
+        feasible = lax.pmax(local_max, axes) <= cap_sparse
+        recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, dense)
+        return recv, bts, feasible, ovf
+
+    if mode == "compressed":
+        # exact codec accounting; transport reuses the adaptive switch
+        wire, delta_used = compressed_wire_bytes(plan, act, nw)
+        if sparse_bytes >= dense_bytes:
+            recv, _, ovf = dense_path(dense)
+        else:
+            recv, _, _, ovf = adaptive_transport()
+        return recv, wire, delta_used, ovf
+    recv, bts, feasible, ovf = adaptive_transport()
     return recv, bts, feasible.astype(jnp.int32), ovf
 
 
@@ -236,7 +259,18 @@ def nn_exchange_bits(plan: CommPlan, active: jnp.ndarray,
         recv, bts, ovf = sparse_path(active)
         return recv, bts, jnp.int32(1), ovf
 
-    local_max = jnp.max(jnp.sum(active.astype(jnp.int32), axis=-1))
-    feasible = lax.pmax(local_max, axes) <= cap_sparse
-    recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, active)
+    def adaptive_transport():
+        local_max = jnp.max(jnp.sum(active.astype(jnp.int32), axis=-1))
+        feasible = lax.pmax(local_max, axes) <= cap_sparse
+        recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path, active)
+        return recv, bts, feasible, ovf
+
+    if mode == "compressed":
+        wire, delta_used = compressed_wire_bytes(plan, active)
+        if sparse_bytes >= dense_bytes:
+            recv, _, ovf = dense_path(active)
+        else:
+            recv, _, _, ovf = adaptive_transport()
+        return recv, wire, delta_used, ovf
+    recv, bts, feasible, ovf = adaptive_transport()
     return recv, bts, feasible.astype(jnp.int32), ovf

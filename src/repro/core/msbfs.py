@@ -117,6 +117,18 @@ class MSBFSConfig:
     # capped id+word pairs / the per-sweep frontier-adaptive switch). The
     # default reproduces the seed behavior bit-for-bit.
     comm: comm.CommConfig = comm.CommConfig()
+    # Out-of-core sweep mode (ROADMAP item 2): > 0 streams the push
+    # scatters and the nn slot-accumulate through a ``lax.scan`` over
+    # fixed-size edge blocks and row-blocks the pull scan
+    # (``edge_chunk // pull_chunk`` rows per block), so peak sweep memory
+    # is O(edge_chunk * W) instead of O(E_max * W) -- a partition whose
+    # decoded [E, W] working set exceeds device memory still traverses.
+    # Bit-identical to the monolithic path by construction: scatter-OR is
+    # order-independent, each pull row's early exit and work count depend
+    # only on that row, and all counters are exact int32 sums -- chunking
+    # may only change memory, never answers or schedule (pinned in
+    # tests/test_compression.py). 0 (the default) = monolithic.
+    edge_chunk: int = 0
     # True carries the device-plane sweep-telemetry arrays (``tm_*`` fields
     # of MSBFSState: per-sweep per-shard frontier popcounts and packed
     # direction-decision words) through the state. The telemetry writes are
@@ -341,9 +353,125 @@ def _push_scatter_multi(csr: CSR, act: jnp.ndarray, n_dst: int) -> jnp.ndarray:
     return out.at[csr.cols].max(act, mode="drop")
 
 
+def _push_multi(csr: CSR, frontier_rows: jnp.ndarray, n_dst: int,
+                edge_chunk: int = 0) -> jnp.ndarray:
+    """Fused push: frontier gather + scatter-OR in one step.
+
+    ``edge_chunk > 0`` streams fixed-size edge blocks through a
+    ``lax.scan`` instead of materializing the [E, W] active array: peak
+    memory O(edge_chunk * W). Bit-identical to the monolithic path --
+    scatter-OR is order-independent (padding edges carry rowid = n_rows,
+    whose extended-frontier row is all False, so they scatter nothing).
+    """
+    w = frontier_rows.shape[-1]
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        return _push_scatter_multi(
+            csr, _push_active_multi(csr, frontier_rows), n_dst)
+    f_ext = jnp.concatenate(
+        [frontier_rows, jnp.zeros((1, w), frontier_rows.dtype)])
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids, (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    col = jnp.pad(csr.cols, (0, pad)).reshape(nblk, edge_chunk)
+
+    def body(out, blk):
+        r, c = blk
+        return out.at[c].max(f_ext[r], mode="drop"), None
+
+    out, _ = lax.scan(body, jnp.zeros((n_dst, w), jnp.bool_), (rid, col))
+    return out
+
+
+def _nn_slots_multi(csr: CSR, frontier_rows: jnp.ndarray, plan,
+                    edge_chunk: int = 0):
+    """Sender-side unique-slot lane words for the nn exchange.
+
+    Returns ``(sa [cap_total, W] bool, act_sum int32)`` where ``act_sum``
+    is the total active (edge, lane) count -- exactly
+    ``jnp.sum(_push_active_multi(...))``, the nn term of ``work_fwd``
+    (``plan.perm`` is a permutation, so summing in permuted order is
+    identical). ``edge_chunk > 0`` streams the plan-permuted edge order in
+    fixed-size blocks, never materializing [E, W]; padding blocks gather
+    the all-False extended-frontier row and land in the dump slot
+    ``cap_total`` that the final slice drops.
+    """
+    w = frontier_rows.shape[-1]
+    f_ext = jnp.concatenate(
+        [frontier_rows, jnp.zeros((1, w), frontier_rows.dtype)])
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        act = f_ext[csr.rowids]
+        sa = jnp.zeros((plan.cap_total + 1, w), jnp.bool_).at[
+            plan.seg_ids].max(act[plan.perm])[: plan.cap_total]
+        return sa, jnp.sum(act.astype(jnp.int32))
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids[plan.perm], (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    seg = jnp.pad(plan.seg_ids, (0, pad),
+                  constant_values=plan.cap_total).reshape(nblk, edge_chunk)
+
+    def body(carry, blk):
+        sa, tot = carry
+        r, s = blk
+        act = f_ext[r]
+        return (sa.at[s].max(act), tot + jnp.sum(act.astype(jnp.int32))), None
+
+    (sa, tot), _ = lax.scan(
+        body,
+        (jnp.zeros((plan.cap_total + 1, w), jnp.bool_), jnp.int32(0)),
+        (rid, seg))
+    return sa[: plan.cap_total], tot
+
+
+def _pull_rows_multi(cols_table, e_max, starts, ends, rows_need, col_frontier,
+                     chunk, kernel, frontier_words, force):
+    """The pull while_loop over one set of rows (see
+    :func:`_pull_chunked_multi`). ``starts``/``ends``/``rows_need`` may be a
+    row-block slice; ``cols_table``/``col_frontier`` are always the full
+    tables (offsets index into the whole edge array)."""
+    deg = ends - starts
+    n_rows = starts.shape[0]
+    w = rows_need.shape[-1]
+    max_chunks = -(-e_max // chunk)
+    if kernel is not None:
+        from repro.kernels import ops as _kops
+
+    def remaining(k, acc):
+        unsat = jnp.any(rows_need & ~acc, axis=1)
+        return unsat & (deg > k * chunk)
+
+    def cond(carry):
+        k, acc, work = carry
+        return (k < max_chunks) & jnp.any(remaining(k, acc))
+
+    def body(carry):
+        k, acc, work = carry
+        rem = remaining(k, acc)
+        base = starts + k * chunk
+        idx = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        valid = rem[:, None] & (idx < ends[:, None])
+        cols = cols_table[jnp.clip(idx, 0, e_max - 1)]
+        if kernel is None:
+            lanes = col_frontier[cols] & valid[..., None]   # [R, chunk, W]
+            acc = acc | jnp.any(lanes, axis=1)
+        else:
+            parents = jnp.where(valid, cols, -1).astype(jnp.int32)
+            need = pack_lanes(rows_need & ~acc)             # [R, nw]
+            hits = _kops.ell_pull_multi(parents, frontier_words, need,
+                                        force=force)
+            acc = acc | unpack_lanes(hits, w)
+        work = work + jnp.sum(valid.astype(jnp.int32))
+        return k + 1, acc, work
+
+    acc0 = jnp.zeros((n_rows, w), dtype=jnp.bool_)
+    _, acc, work = lax.while_loop(cond, body, (jnp.int32(0), acc0, jnp.int32(0)))
+    return acc & rows_need, work
+
+
 def _pull_chunked_multi(
     csr: CSR, rows_need: jnp.ndarray, col_frontier: jnp.ndarray, chunk: int,
-    kernel: str | None = None,
+    kernel: str | None = None, row_block: int = 0,
 ):
     """Chunked bottom-up pull with word-OR early exit.
 
@@ -361,48 +489,42 @@ def _pull_chunked_multi(
     active words. ``None`` keeps the native bool-lane gather; ``"ref"`` /
     ``"pallas"`` pin the wrapper's dispatch; ``"auto"`` lets it pick per
     backend.
+
+    ``row_block > 0`` (the out-of-core mode) scans fixed-height row blocks
+    in sequence, bounding the live [rows, chunk, W] working set to
+    ``row_block`` rows. Bit-identical to the monolithic scan: each row's
+    accumulated word, early exit, and ``work`` contribution depend only on
+    that row's own parent list, so blocking changes evaluation order but
+    no value, and ``work`` is an exact int32 sum either way.
     """
-    deg = _row_degrees(csr)
-    n_rows = csr.n_rows
     starts = csr.offsets[:-1]
     ends = csr.offsets[1:]
-    w = rows_need.shape[-1]
-    max_chunks = -(-csr.e_max // chunk)
+    frontier_words = force = None
     if kernel is not None:
-        from repro.kernels import ops as _kops
         frontier_words = pack_lanes(col_frontier)           # [N, nw], once
         force = None if kernel == "auto" else kernel
+    if row_block <= 0 or row_block >= csr.n_rows:
+        return _pull_rows_multi(csr.cols, csr.e_max, starts, ends, rows_need,
+                                col_frontier, chunk, kernel, frontier_words,
+                                force)
+    n_rows = csr.n_rows
+    nblk = -(-n_rows // row_block)
+    pad = nblk * row_block - n_rows
+    # padded rows: deg 0 and rows_need False -> never remaining, no work
+    st = jnp.pad(starts, (0, pad)).reshape(nblk, row_block)
+    en = jnp.pad(ends, (0, pad)).reshape(nblk, row_block)
+    nd = jnp.pad(rows_need, ((0, pad), (0, 0))).reshape(
+        nblk, row_block, rows_need.shape[-1])
 
-    def remaining(k, acc):
-        unsat = jnp.any(rows_need & ~acc, axis=1)
-        return unsat & (deg > k * chunk)
+    def body(_, blk):
+        s, e, n = blk
+        return None, _pull_rows_multi(csr.cols, csr.e_max, s, e, n,
+                                      col_frontier, chunk, kernel,
+                                      frontier_words, force)
 
-    def cond(carry):
-        k, acc, work = carry
-        return (k < max_chunks) & jnp.any(remaining(k, acc))
-
-    def body(carry):
-        k, acc, work = carry
-        rem = remaining(k, acc)
-        base = starts + k * chunk
-        idx = base[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
-        valid = rem[:, None] & (idx < ends[:, None])
-        cols = csr.cols[jnp.clip(idx, 0, csr.e_max - 1)]
-        if kernel is None:
-            lanes = col_frontier[cols] & valid[..., None]   # [R, chunk, W]
-            acc = acc | jnp.any(lanes, axis=1)
-        else:
-            parents = jnp.where(valid, cols, -1).astype(jnp.int32)
-            need = pack_lanes(rows_need & ~acc)             # [R, nw]
-            hits = _kops.ell_pull_multi(parents, frontier_words, need,
-                                        force=force)
-            acc = acc | unpack_lanes(hits, w)
-        work = work + jnp.sum(valid.astype(jnp.int32))
-        return k + 1, acc, work
-
-    acc0 = jnp.zeros((n_rows, w), dtype=jnp.bool_)
-    _, acc, work = lax.while_loop(cond, body, (jnp.int32(0), acc0, jnp.int32(0)))
-    return acc & rows_need, work
+    _, (found, works) = lax.scan(body, None, (st, en, nd))
+    return (found.reshape(nblk * row_block, -1)[: n_rows],
+            jnp.sum(works))
 
 
 def _lane_count(mask: jnp.ndarray) -> jnp.ndarray:
@@ -501,36 +623,37 @@ def msbfs_step(
     # Lanes in forward mode push their frontier word; lanes in backward mode
     # pull into their unvisited word. Results are disjoint per lane, so the
     # per-lane merge is a plain OR.
+    # edge_chunk > 0: stream pushes / the nn accumulate over edge blocks
+    # and row-block the pulls at ~edge_chunk edge slots per step (see
+    # MSBFSConfig.edge_chunk -- bit-identical to monolithic, memory only)
+    ec = cfg.edge_chunk
+    rb = max(1, ec // max(cfg.pull_chunk, 1)) if ec > 0 else 0
+
     # ---- dd: delegate -> delegate ----------------------------------------
-    push_dd = _push_scatter_multi(
-        pgv.dd, _push_active_multi(pgv.dd, frontier_d & ~bwd_dd[None, :]), d)
+    push_dd = _push_multi(pgv.dd, frontier_d & ~bwd_dd[None, :], d, ec)
     pull_dd, work_dd_b = _pull_chunked_multi(
         pgv.dd, unvis_d & pgv.dd_src_mask[:, None] & bwd_dd[None, :],
-        frontier_d, cfg.pull_chunk, cfg.kernel_pull)
+        frontier_d, cfg.pull_chunk, cfg.kernel_pull, rb)
     cand_dd = push_dd | pull_dd
 
     # ---- nd: normal -> delegate (pull walks the dn subgraph) --------------
-    push_nd = _push_scatter_multi(
-        pgv.nd, _push_active_multi(pgv.nd, frontier_n & ~bwd_nd[None, :]), d)
+    push_nd = _push_multi(pgv.nd, frontier_n & ~bwd_nd[None, :], d, ec)
     pull_nd, work_nd_b = _pull_chunked_multi(
         pgv.dn, unvis_d & pgv.dn_src_mask[:, None] & bwd_nd[None, :],
-        frontier_n, cfg.pull_chunk, cfg.kernel_pull)
+        frontier_n, cfg.pull_chunk, cfg.kernel_pull, rb)
     cand_nd = push_nd | pull_nd
 
     # ---- dn: delegate -> normal (pull walks the nd subgraph) --------------
-    push_dn = _push_scatter_multi(
-        pgv.dn, _push_active_multi(pgv.dn, frontier_d & ~bwd_dn[None, :]), nl)
+    push_dn = _push_multi(pgv.dn, frontier_d & ~bwd_dn[None, :], nl, ec)
     pull_dn, work_dn_b = _pull_chunked_multi(
         pgv.nd, unvis_n & pgv.nd_src_mask[:, None] & bwd_dn[None, :],
-        frontier_d, cfg.pull_chunk, cfg.kernel_pull)
+        frontier_d, cfg.pull_chunk, cfg.kernel_pull, rb)
     cand_dn = push_dn | pull_dn
 
     # ---- nn: normal -> normal, forward only, static slot exchange ---------
     # format (dense lane words / sparse id+word pairs / per-sweep adaptive
-    # switch) selected by cfg.comm.nn inside the comm layer
-    act_nn = _push_active_multi(pgv.nn, frontier_n)          # [E, W]
-    sa = jnp.zeros((plan.cap_total + 1, w), jnp.bool_).at[plan.seg_ids].max(
-        act_nn[plan.perm])[: plan.cap_total]                 # unique slots
+    # switch / compressed codec) selected by cfg.comm.nn in the comm layer
+    sa, act_nn_sum = _nn_slots_multi(pgv.nn, frontier_n, plan, ec)
     rows = jnp.minimum(plan.seg_owner, p - 1)
     ok = plan.seg_owner < p
     dense = jnp.zeros((p, plan.cap_peer, w), jnp.bool_).at[rows, plan.seg_pos].max(
@@ -589,7 +712,7 @@ def msbfs_step(
         # exact per-edge-lane push count; the reachability-only variant
         # keeps the frontier degree-sum estimates above instead of
         # materializing the [E, W] int32 count
-        w_fwd = w_fwd + jnp.sum(act_nn.astype(jnp.int32))
+        w_fwd = w_fwd + act_nn_sum
     w_bwd = work_dd_b + work_nd_b + work_dn_b
     slot = jnp.clip(it, 0, cfg.max_iters - 1)
     # ---- device-plane sweep telemetry (static branch: the disabled path

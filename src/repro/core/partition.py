@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from .types import COOGraph, CSR, PartitionedGraph, PartitionLayout
+from .types import (COOGraph, CSR, CompressedCSR, CompressedPartition,
+                    PartitionedGraph, PartitionLayout)
+from .varint import varint_decode, varint_encode, varint_len
 
 
 def select_delegates(degrees: np.ndarray, th: int) -> np.ndarray:
@@ -54,26 +56,27 @@ def _build_csr_stack(
     counts = np.bincount(owner, minlength=p)
     e_max = int(counts.max()) if counts.size else 0
     e_max = max(e_max, 1)
-    offsets = np.zeros((p, n_rows + 1), dtype=np.int32)
     cols = np.zeros((p, e_max), dtype=col_dtype)
     rowids = np.full((p, e_max), n_rows, dtype=np.int32)
     eidx = np.full((p, e_max), -1, dtype=np.int64)
     m = counts.astype(np.int32)
 
-    # sort edges by (owner, row) for CSR layout
+    # sort edges by (owner, row) for CSR layout, then scatter every edge to
+    # its (partition, slot) in one shot: slot = global position - the
+    # partition's run start (no per-partition Python loop -- a scale-18
+    # graph has 2^22 rows per partition and this runs once per subgraph)
     order = np.lexsort((rows_per_edge, owner))
     ro, rr, rc = owner[order], rows_per_edge[order], cols_per_edge[order]
-    re = edge_index[order] if edge_index is not None else None
     starts = np.searchsorted(ro, np.arange(p))
-    ends = np.searchsorted(ro, np.arange(p), side="right")
-    for k in range(p):
-        s, e = starts[k], ends[k]
-        rk, ck = rr[s:e], rc[s:e]
-        offsets[k] = np.concatenate([[0], np.cumsum(np.bincount(rk, minlength=n_rows))]).astype(np.int32)
-        cols[k, : e - s] = ck
-        rowids[k, : e - s] = rk
-        if re is not None:
-            eidx[k, : e - s] = re[s:e]
+    slot = np.arange(ro.size, dtype=np.int64) - starts[ro]
+    cols[ro, slot] = rc
+    rowids[ro, slot] = rr
+    if edge_index is not None:
+        eidx[ro, slot] = edge_index[order]
+    row_counts = np.zeros((p, n_rows), dtype=np.int64)
+    np.add.at(row_counts, (owner, rows_per_edge), 1)
+    offsets = np.zeros((p, n_rows + 1), dtype=np.int32)
+    np.cumsum(row_counts, axis=1, out=offsets[:, 1:])
     return CSR(offsets=offsets, cols=cols, rowids=rowids, m=m, eidx=eidx,
                n_rows=n_rows, e_max=e_max)
 
@@ -137,16 +140,16 @@ def partition_graph(
     dn_src_mask = row_mask(sub["dn"], dslots)
     dd_src_mask = row_mask(sub["dd"], dslots)
 
-    # per-nn-edge owner partition, aligned with the nn CSR edge order
+    # per-nn-edge owner partition, aligned with the nn CSR edge order.
+    # Invert the original-edge-index -> subset-position map with one scatter
+    # (the old per-edge dict lookup was the partitioner's hot spot).
     nn_owner = np.full((p, sub["nn"].e_max), p, dtype=np.int32)
     eidx_nn = np.asarray(sub["nn"].eidx)
-    # invert: position of each original nn edge in the owner[m]-subset
     nn_orig_idx = all_eidx[kind == 0]
-    pos_of = {int(e): i for i, e in enumerate(nn_orig_idx)}
-    for k in range(p):
-        mk = int(np.asarray(sub["nn"].m)[k])
-        src_rows = eidx_nn[k, :mk]
-        nn_owner[k, :mk] = nn_owner_edge[[pos_of[int(e)] for e in src_rows]]
+    inv = np.zeros(g.m, dtype=np.int64)
+    inv[nn_orig_idx] = np.arange(nn_orig_idx.size, dtype=np.int64)
+    valid = eidx_nn >= 0
+    nn_owner[valid] = nn_owner_edge[inv[eidx_nn[valid]]]
 
     return PartitionedGraph(
         n=g.n, p=p, p_rank=p_rank, p_gpu=p_gpu, d=d, n_local=n_local, th=th,
@@ -169,6 +172,130 @@ def partition_edge_values(pg: PartitionedGraph, values: np.ndarray) -> dict:
         vals[eidx < 0] = 0
         out[kind] = vals.astype(values.dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Compressed-at-rest partition format (ROADMAP item 2).
+#
+# Per CSR row the adjacency is sorted ascending and delta-encoded (first
+# value raw, then consecutive differences -- all >= 0), then packed with
+# LEB128 varints into one byte stream per partition. Delegate stacks
+# (dn/dd: long rows, small dense deltas) and normal stacks (nn/nd: short
+# rows dominated by the first value) compress separately because degree
+# separation already split them. The nn stack merges its (owner, local)
+# int32 column pair into one key ``owner * n_local + local`` so a single
+# stream round-trips both halves.
+# ---------------------------------------------------------------------------
+
+
+def compress_csr(csr: CSR, key_split: int = 0, values: np.ndarray | None = None) -> CompressedCSR:
+    """Compress one stacked CSR into per-partition delta/varint streams.
+
+    ``values`` overrides ``csr.cols`` as the per-edge payload (used by the
+    nn stack to encode merged owner/local keys); ``key_split`` is recorded
+    so decoders know how to split the key back.
+    """
+    offsets = np.asarray(csr.offsets)
+    rowids_all = np.asarray(csr.rowids)
+    vals_all = np.asarray(values if values is not None else csr.cols).astype(np.int64)
+    m = np.asarray(csr.m).astype(np.int64)
+    p, n_rows = offsets.shape[0], csr.n_rows
+
+    streams, row_offs = [], []
+    for k in range(p):
+        mk = int(m[k])
+        r = rowids_all[k, :mk].astype(np.int64)
+        v = vals_all[k, :mk]
+        order = np.lexsort((v, r))        # CSR rows are contiguous; sort cols within
+        r, v = r[order], v[order]
+        first = np.ones(mk, dtype=bool)
+        first[1:] = r[1:] != r[:-1]
+        delta = np.empty(mk, dtype=np.int64)
+        delta[1:] = v[1:] - v[:-1]
+        delta[first] = v[first]
+        if mk and delta.min() < 0:
+            raise ValueError("negative delta: adjacency values must be >= 0")
+        streams.append(varint_encode(delta))
+        row_bytes = np.zeros(n_rows, dtype=np.int64)
+        np.add.at(row_bytes, r, varint_len(delta))
+        ro = np.zeros(n_rows + 1, dtype=np.uint32)
+        ro[1:] = np.cumsum(row_bytes)
+        row_offs.append(ro)
+
+    nbytes = np.array([s.size for s in streams], dtype=np.int64)
+    b_max = max(1, int(nbytes.max()) if p else 1)
+    data = np.zeros((p, b_max), dtype=np.uint8)
+    for k, s in enumerate(streams):
+        data[k, : s.size] = s
+    return CompressedCSR(data=data, row_off=np.stack(row_offs), nbytes=nbytes,
+                         m=m.astype(np.int32), n_rows=n_rows, b_max=b_max,
+                         key_split=int(key_split))
+
+
+def decode_rows(ccsr: CompressedCSR, k: int, row0: int = 0, row1: int | None = None):
+    """Decode rows ``[row0, row1)`` of partition ``k``.
+
+    Returns ``(rowids, values)`` int64 arrays in (row, value-ascending)
+    order -- values are merged keys when ``key_split > 0``.
+    """
+    ro = np.asarray(ccsr.row_off[k]).astype(np.int64)
+    if row1 is None:
+        row1 = ccsr.n_rows
+    b0, b1 = int(ro[row0]), int(ro[row1])
+    deltas = varint_decode(np.asarray(ccsr.data[k, b0:b1]))
+    if deltas.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    # our encoder is canonical, so the encoded length of each decoded value
+    # equals varint_len of it: recover per-value byte starts, then row ids
+    lens = varint_len(deltas)
+    byte_start = b0 + np.concatenate([[0], np.cumsum(lens)[:-1]])
+    rows = np.searchsorted(ro, byte_start, side="right") - 1
+    # undo per-row delta chains: segment cumsum with forward-filled bases
+    first = np.ones(deltas.size, dtype=bool)
+    first[1:] = rows[1:] != rows[:-1]
+    cs = np.cumsum(deltas)
+    idx = np.arange(deltas.size, dtype=np.int64)
+    seg_first = np.maximum.accumulate(np.where(first, idx, 0))
+    base = (cs - deltas)[seg_first]
+    return rows, cs - base
+
+
+def decode_ell_tile(ccsr: CompressedCSR, k: int, row0: int, n_rows_tile: int,
+                    k_max: int) -> np.ndarray:
+    """Materialize an ELL tile [n_rows_tile, k_max] on demand (int32, -1 pad).
+
+    This is the out-of-core decode path: a sweep that cannot hold the whole
+    decoded partition streams fixed-height row tiles through
+    ``kernels.ell_pull_multi`` instead. Values are merged keys when
+    ``key_split > 0``; rows with degree > ``k_max`` raise.
+    """
+    row1 = min(row0 + n_rows_tile, ccsr.n_rows)
+    rows, vals = decode_rows(ccsr, k, row0, row1)
+    tile = np.full((n_rows_tile, k_max), -1, dtype=np.int32)
+    if rows.size == 0:
+        return tile
+    r = rows - row0
+    first = np.ones(rows.size, dtype=bool)
+    first[1:] = rows[1:] != rows[:-1]
+    starts = np.maximum.accumulate(np.where(first, np.arange(rows.size), 0))
+    slot = np.arange(rows.size) - starts
+    if slot.max() >= k_max:
+        raise ValueError(f"row degree {int(slot.max()) + 1} exceeds k_max={k_max}")
+    tile[r, slot] = vals.astype(np.int32)
+    return tile
+
+
+def compress_partition(pg: PartitionedGraph) -> CompressedPartition:
+    """Compress all four subgraph stacks (nn merges owner/local keys)."""
+    nl = pg.n_local
+    nn_keys = (np.asarray(pg.nn_owner).astype(np.int64) * nl
+               + np.asarray(pg.nn.cols).astype(np.int64))
+    return CompressedPartition(
+        nn=compress_csr(pg.nn, key_split=nl, values=nn_keys),
+        nd=compress_csr(pg.nd),
+        dn=compress_csr(pg.dn),
+        dd=compress_csr(pg.dd),
+    )
 
 
 def edge_kind_stats(g: COOGraph, th: int) -> dict:

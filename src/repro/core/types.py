@@ -122,6 +122,64 @@ _register(CSR, data_fields=("offsets", "cols", "rowids", "m", "eidx"), meta_fiel
 
 
 @dataclass
+class CompressedCSR:
+    """Delta-encoded, varint-packed adjacency for one subgraph stack.
+
+    Per partition ``k`` and row ``r``, the byte range
+    ``data[k, row_off[k, r] : row_off[k, r + 1]]`` is the LEB128 varint
+    stream of the row's adjacency *sorted ascending and delta-encoded*:
+    first the smallest neighbor id, then successive differences. Row byte
+    offsets are the compressed analog of CSR offsets; ``nbytes[k]`` is the
+    valid stream length (``data`` is padded to the stacked ``b_max``).
+
+    Delegate stacks (``dn`` / ``dd`` -- long rows, small dense deltas) and
+    normal stacks (``nn`` / ``nd`` -- short rows dominated by the first
+    value) are compressed separately, as the paper's degree separation
+    already splits them. For ``nn`` the stored value is the merged key
+    ``owner * key_split + local`` (``key_split = n_local``), so one stream
+    round-trips both int32 halves of the pre-split destination pair.
+    """
+
+    data: Any        # [p, b_max] uint8 -- varint streams, padded
+    row_off: Any     # [p, n_rows+1] uint32 -- byte offset per row
+    nbytes: Any      # [p] int64 -- valid stream bytes per partition
+    m: Any           # [p] int32 -- encoded edge count per partition
+    n_rows: int = 0
+    b_max: int = 0
+    key_split: int = 0   # 0 = plain ids; > 0 = values are owner*split+local
+
+    def memory_bytes(self) -> int:
+        """Measured bytes: the streams plus the 4 B/row byte offsets."""
+        return int(np.sum(np.asarray(self.nbytes))) + int(
+            np.asarray(self.row_off).shape[0]
+            * np.asarray(self.row_off).shape[1] * 4)
+
+
+@dataclass
+class CompressedPartition:
+    """All four subgraph stacks in the compressed-at-rest format.
+
+    Built host-side by :func:`repro.core.partition.compress_partition`;
+    decoded on demand into ELL tiles
+    (:func:`repro.core.partition.decode_ell_tile`) for the chunked
+    out-of-core sweep mode.
+    """
+
+    nn: CompressedCSR
+    nd: CompressedCSR
+    dn: CompressedCSR
+    dd: CompressedCSR
+
+    def subgraph(self, kind: str) -> CompressedCSR:
+        return {"nn": self.nn, "nd": self.nd, "dn": self.dn, "dd": self.dd}[kind]
+
+    def memory_bytes(self) -> dict:
+        per = {k: self.subgraph(k).memory_bytes()
+               for k in ("nn", "nd", "dn", "dd")}
+        return {"per_subgraph": per, "total": sum(per.values())}
+
+
+@dataclass
 class PartitionedGraph:
     """The paper's four-subgraph representation, stacked over partitions."""
 
@@ -153,8 +211,10 @@ class PartitionedGraph:
     def subgraph(self, kind: str) -> CSR:
         return {"nn": self.nn, "nd": self.nd, "dn": self.dn, "dd": self.dd}[kind]
 
-    # Table I memory accounting (bytes), paper Section III-C.
-    def memory_bytes(self) -> dict:
+    # Table I memory accounting (bytes), paper Section III-C. Passing a
+    # CompressedPartition adds the *measured* compressed-at-rest sizes
+    # (streams + row byte offsets) next to the uncompressed model.
+    def memory_bytes(self, compressed: "CompressedPartition | None" = None) -> dict:
         p, nl, d = self.p, self.n_local, self.d
         enn = int(np.sum(np.asarray(self.nn.m)))
         end = int(np.sum(np.asarray(self.nd.m)))
@@ -168,7 +228,7 @@ class PartitionedGraph:
         }
         total = sum(a + b for a, b in usage.values())
         m = enn + end + edn + edd
-        return {
+        out = {
             "per_subgraph": usage,
             "total": total,
             "edge_list_16m": 16 * m,
@@ -176,6 +236,14 @@ class PartitionedGraph:
             "m": m,
             "e_nn": enn,
         }
+        if compressed is not None:
+            cmem = compressed.memory_bytes()
+            out["compressed_per_subgraph"] = cmem["per_subgraph"]
+            out["compressed_total"] = cmem["total"]
+            out["bytes_per_edge_raw"] = total / max(m, 1)
+            out["bytes_per_edge_compressed"] = cmem["total"] / max(m, 1)
+            out["compressed_vs_raw"] = cmem["total"] / max(total, 1)
+        return out
 
 
 _register(

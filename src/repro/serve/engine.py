@@ -298,6 +298,15 @@ class BFSServeEngine:
         ``refill=True`` (batch mode already runs one fused device loop).
     sweep_block : sweeps fused per device dispatch when ``overlap=True``
         (the convergence-poll cadence k; retirements still land exactly).
+    edge_chunk : when > 0, stream every push scatter and nn slot marking
+        through fixed-size edge blocks of this many edges (and pull
+        gathers through the matching row blocks) instead of
+        materializing the full per-subgraph edge frontier at once --
+        ``MSBFSConfig(edge_chunk=...)``. Caps transient sweep memory at
+        O(edge_chunk * W) per subgraph so scale-16+ partitions fit; the
+        traversal schedule and every counter stay bit-identical to the
+        monolithic sweep (see ``serve/README.md``, "memory footprint").
+        Sugar for passing a ``cfg`` with the field set; 0 = monolithic.
     specialize_reachability : compile homogeneous REACHABILITY batches to
         the levels-free msBFS variant (lazily, on first use).
     obs : an :class:`repro.obs.Observability` plane; every pipeline stage
@@ -353,6 +362,7 @@ class BFSServeEngine:
         refill: bool = False,
         overlap: bool = False,
         sweep_block: int = 8,
+        edge_chunk: int = 0,
         specialize_reachability: bool = True,
         reuse_components: bool = True,
         obs: Observability | None = None,
@@ -372,6 +382,10 @@ class BFSServeEngine:
             # sugar: swap the comm strategies without rebuilding the whole
             # msBFS config (every derived per-batch variant inherits them)
             self.cfg = _dc_replace(self.cfg, comm=comm)
+        if int(edge_chunk):
+            # sugar: flip on chunked out-of-core sweeps (bit-identical
+            # schedule, bounded O(edge_chunk * W) transient memory)
+            self.cfg = _dc_replace(self.cfg, edge_chunk=int(edge_chunk))
         if not self.cfg.track_levels or not self.cfg.enable_targets:
             raise ValueError(
                 "pass a track_levels=True, enable_targets=True cfg; the "

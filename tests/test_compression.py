@@ -1,0 +1,341 @@
+"""Property tests for the compression plane: varint streams, the
+delta/degree-separated partition codec, the compressed nn wire codec, and
+chunked out-of-core sweeps.
+
+The load-bearing invariants:
+
+* every codec round-trips **bit-exactly** (varint values, rle masks,
+  delta id lists, per-row adjacency as sorted sets);
+* the in-trace byte-length formulas the ``wire_nn`` counters use agree
+  exactly with the lengths the host reference encoders produce;
+* ``MSBFSConfig(edge_chunk=...)`` / ``BFSConfig(edge_chunk=...)`` leave
+  **every** final-state leaf -- levels, work/wire counters, telemetry --
+  bit-identical to the monolithic sweep, on the vmap-emulated mesh and
+  (under the multi-device CI job) a real 4-device shard_map mesh.
+
+Randomized via ``tests/_hypo`` (hypothesis when installed, the
+deterministic replayer otherwise).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bfs as B, comm, engine as E, msbfs as M
+from repro.core.comm import codec
+from repro.core.oracle import bfs_levels
+from repro.core.partition import (compress_csr, compress_partition,
+                                  decode_ell_tile, decode_rows,
+                                  partition_graph)
+from repro.core.varint import varint_decode, varint_encode, varint_len
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.kernels import ops
+
+from _hypo import given, settings, st
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 host devices (run under the multi-device CI job)")
+
+
+# ------------------------------------------------------------- varints
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(0, 300), seed=st.integers(0, 10_000))
+def test_varint_round_trip(n, seed):
+    """encode -> decode is the identity; stream length == varint_len."""
+    rng = np.random.default_rng(seed)
+    # magnitude-spread draws: shifting a 63-bit draw right by a random
+    # amount covers every byte-length class, not just 5-byte values
+    vals = (rng.integers(0, 2**63 - 1, n, dtype=np.int64)
+            >> rng.integers(0, 63, n)).astype(np.int64)
+    stream = varint_encode(vals)
+    assert stream.size == int(varint_len(vals).sum())
+    np.testing.assert_array_equal(varint_decode(stream), vals)
+
+
+def test_varint_byte_length_classes():
+    """Pinned byte lengths at every 7-bit boundary."""
+    bounds = [0, 127, 128, 2**14 - 1, 2**14, 2**21 - 1, 2**21,
+              2**28 - 1, 2**28, 2**35 - 1, 2**35]
+    want = [1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6]
+    got = varint_len(np.asarray(bounds, np.int64)).tolist()
+    assert got == want
+    np.testing.assert_array_equal(
+        varint_decode(varint_encode(np.asarray(bounds, np.int64))), bounds)
+
+
+# ------------------------------------------------- wire codec (host side)
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 200), density=st.integers(0, 100),
+       seed=st.integers(0, 10_000))
+def test_wire_codec_round_trips(n, density, seed):
+    """rle and delta-id streams round-trip any mask; the host byte counts
+    match the encoders exactly."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < density / 100.0
+    rle = codec.rle_encode(mask)
+    np.testing.assert_array_equal(codec.rle_decode(rle, n), mask)
+    ids = np.nonzero(mask)[0].astype(np.int64)
+    delta = codec.delta_encode_ids(ids)
+    np.testing.assert_array_equal(codec.delta_decode_ids(delta), ids)
+    rle_b, delta_b = codec.mask_stream_bytes(mask)
+    assert rle_b == rle.size and delta_b == delta.size
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 200), density=st.integers(0, 100),
+       seed=st.integers(0, 10_000))
+def test_wire_byte_formulas_match_reference(n, density, seed):
+    """The traced byte-length formulas (what the in-jit ``wire_nn``
+    counter adds up) == the host reference encoders' stream sizes."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < density / 100.0
+    act = jnp.asarray(mask[None, :])
+    rle_b, delta_b = codec.mask_stream_bytes(mask)
+    assert int(jax.jit(codec.rle_stream_bytes)(act)[0]) == rle_b
+    assert int(jax.jit(codec.delta_stream_bytes)(act)[0]) == delta_b
+
+
+def test_wire_codec_edges():
+    """Empty / full / single-bit-at-each-end masks."""
+    for n in (1, 7, 64):
+        for mask in (np.zeros(n, bool), np.ones(n, bool),
+                     np.eye(1, n, 0, dtype=bool)[0],
+                     np.eye(1, n, n - 1, dtype=bool)[0]):
+            np.testing.assert_array_equal(
+                codec.rle_decode(codec.rle_encode(mask), n), mask)
+            ids = np.nonzero(mask)[0].astype(np.int64)
+            np.testing.assert_array_equal(
+                codec.delta_decode_ids(codec.delta_encode_ids(ids)), ids)
+            rle_b, delta_b = codec.mask_stream_bytes(mask)
+            act = jnp.asarray(mask[None, :])
+            assert int(codec.rle_stream_bytes(act)[0]) == rle_b
+            assert int(codec.delta_stream_bytes(act)[0]) == delta_b
+
+
+def test_comm_config_accepts_compressed():
+    assert "compressed" in comm.NN_FORMATS
+    comm.CommConfig(nn="compressed")           # validates
+    with pytest.raises(ValueError):
+        comm.CommConfig(nn="zstd")
+
+
+# ------------------------------------------------------ partition codec
+def _sorted_rows(rowids, values):
+    """Canonical (row, value) ordering for set comparison."""
+    order = np.lexsort((values, rowids))
+    return rowids[order], values[order]
+
+
+@settings(max_examples=6, deadline=None)
+@given(scale=st.integers(5, 7), th=st.integers(4, 64),
+       seed=st.integers(0, 100))
+def test_partition_codec_round_trip(scale, th, seed):
+    """decode_rows(compress_partition(pg)) recovers every subgraph stack
+    as exact (row, value) multisets, nn merged keys included."""
+    g = rmat_graph(scale, seed=seed)
+    pg = partition_graph(g, th=th, p_rank=2, p_gpu=2)
+    cp = compress_partition(pg)
+    for kind in ("nn", "nd", "dn", "dd"):
+        csr, ccsr = getattr(pg, kind), cp.subgraph(kind)
+        for k in range(pg.p):
+            m = int(np.asarray(csr.m)[k])
+            raw_rows = np.asarray(csr.rowids)[k, :m].astype(np.int64)
+            if kind == "nn":
+                raw_vals = (np.asarray(pg.nn_owner)[k, :m].astype(np.int64)
+                            * pg.n_local
+                            + np.asarray(csr.cols)[k, :m].astype(np.int64))
+                assert ccsr.key_split == pg.n_local
+            else:
+                raw_vals = np.asarray(csr.cols)[k, :m].astype(np.int64)
+            rows, vals = decode_rows(ccsr, k)
+            assert rows.size == m
+            want_r, want_v = _sorted_rows(raw_rows, raw_vals)
+            np.testing.assert_array_equal(rows, want_r)
+            np.testing.assert_array_equal(vals, want_v)
+            # partial-range decode agrees with the slice of the full decode
+            mid = ccsr.n_rows // 2
+            r_lo, v_lo = decode_rows(ccsr, k, 0, mid)
+            r_hi, v_hi = decode_rows(ccsr, k, mid)
+            np.testing.assert_array_equal(np.concatenate([r_lo, r_hi]), rows)
+            np.testing.assert_array_equal(np.concatenate([v_lo, v_hi]), vals)
+
+
+def test_compressed_memory_accounting():
+    """memory_bytes(compressed=...) reports measured sizes; the streams
+    beat the padded raw layout well below the 0.5x acceptance bound."""
+    g = rmat_graph(10, seed=1)
+    pg = partition_graph(g, th=64, p_rank=2, p_gpu=2)
+    cp = compress_partition(pg)
+    mem = pg.memory_bytes(compressed=cp)
+    assert mem["compressed_total"] == cp.memory_bytes()["total"]
+    assert mem["compressed_vs_raw"] <= 0.5, mem["compressed_vs_raw"]
+    assert mem["bytes_per_edge_compressed"] < mem["bytes_per_edge_raw"]
+
+
+def test_ell_tile_decode_feeds_pull_kernel():
+    """The on-demand ELL tiles drive kernels.ell_pull_multi directly."""
+    g = rmat_graph(7, seed=3)
+    pg = partition_graph(g, th=32, p_rank=2, p_gpu=2)
+    cp = compress_partition(pg)
+    csr = pg.nd                          # plain local-id values
+    k_max = int(np.diff(np.asarray(csr.offsets)[0]).max()) + 1
+    rows = csr.n_rows
+    tile = decode_ell_tile(cp.nd, 0, 0, rows, k_max)
+    assert tile.shape == (rows, k_max) and tile.dtype == np.int32
+    # tile row r == sorted neighbor list of row r (-1 padded)
+    dec_r, dec_v = decode_rows(cp.nd, 0)
+    for r in range(rows):
+        np.testing.assert_array_equal(tile[r][tile[r] >= 0], dec_v[dec_r == r])
+    n_src = int(tile.max()) + 2
+    rng = np.random.default_rng(0)
+    fw = jnp.asarray(rng.integers(0, 2**32, (n_src, 1), dtype=np.uint32))
+    aw = jnp.asarray(rng.integers(0, 2**32, (rows, 1), dtype=np.uint32))
+    got = np.asarray(ops.ell_pull_multi(jnp.asarray(tile), fw, aw, force="ref"))
+    exp = np.zeros((rows, 1), np.uint32)
+    for r in range(rows):
+        for c in tile[r][tile[r] >= 0]:
+            exp[r] |= np.asarray(fw)[c]
+    np.testing.assert_array_equal(got, exp & np.asarray(aw))
+    # degree overflow is a loud error, not silent truncation
+    max_deg = k_max - 1
+    if max_deg >= 2:
+        with pytest.raises(ValueError):
+            decode_ell_tile(cp.nd, 0, 0, rows, max_deg - 1)
+
+
+def test_compress_csr_rejects_unsorted_negative():
+    """Values must be non-negative (delta streams are unsigned)."""
+    g = rmat_graph(5, seed=2)
+    pg = partition_graph(g, th=8, p_rank=2, p_gpu=2)
+    bad = np.full_like(np.asarray(pg.nd.cols), -1, dtype=np.int64)
+    with pytest.raises(ValueError):
+        compress_csr(pg.nd, values=bad)
+
+
+# ------------------------------------------- chunked sweeps, emulated mesh
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+_CHUNK_GRAPH = []
+
+
+def _chunk_graph():
+    """Module-cached scale-8 partition (plain helper, not a pytest
+    fixture: the ``_hypo`` fallback runner can't forward fixtures)."""
+    if not _CHUNK_GRAPH:
+        g = rmat_graph(8, seed=3)
+        pg = partition_graph(g, th=64, p_rank=2, p_gpu=2)
+        _CHUNK_GRAPH.append((g, pg, E.build_exchange_plan(pg)))
+    return _CHUNK_GRAPH[0]
+
+
+@pytest.fixture(scope="module")
+def chunk_graph():
+    return _chunk_graph()
+
+
+@pytest.mark.parametrize("nn", ["dense", "adaptive", "compressed"])
+def test_msbfs_chunked_bit_identical(chunk_graph, nn):
+    """edge_chunk streams the same schedule: every final-state leaf equal
+    to the monolithic sweep, answers oracle-exact, for every nn format."""
+    g, pg, plan = chunk_graph
+    pgv = B.device_view(pg)
+    sources = pick_sources(g, 8, seed=1)
+    outs = {}
+    for ec in (0, 64):
+        cfg = M.MSBFSConfig(n_queries=8, max_iters=40, enable_do=True,
+                            edge_chunk=ec, comm=comm.CommConfig(nn=nn))
+        outs[ec] = M.run_msbfs_emulated(
+            pgv, plan, M.init_multi_state(pg, sources, cfg), cfg)
+    _tree_equal(outs[0], outs[64])
+    levels = M.gather_levels_multi(pg, outs[64])
+    for q, s in enumerate(sources):
+        np.testing.assert_array_equal(levels[q], bfs_levels(g, int(s)))
+    if nn == "compressed":
+        assert int(np.asarray(outs[64].wire_nn).sum()) > 0
+
+
+@pytest.mark.parametrize("static_exchange", [True, False])
+def test_bfs_chunked_bit_identical(chunk_graph, static_exchange):
+    """Single-source driver: chunked == monolithic on both nn paths."""
+    g, pg, plan = chunk_graph
+    pgv = B.device_view(pg)
+    src = int(pick_sources(g, 1, seed=5)[0])
+    outs = {}
+    for ec in (0, 48):
+        cfg = B.BFSConfig(max_iters=40, enable_do=True, edge_chunk=ec,
+                          static_exchange=static_exchange)
+        outs[ec] = B.run_bfs_emulated(
+            pgv, B.init_state(pg, src, cfg), cfg,
+            plan=plan if static_exchange else None)
+    _tree_equal(outs[0], outs[48])
+    np.testing.assert_array_equal(B.gather_levels(pg, outs[48]),
+                                  bfs_levels(g, src))
+
+
+@settings(max_examples=5, deadline=None)
+@given(edge_chunk=st.integers(1, 512))
+def test_msbfs_chunked_any_block_size(edge_chunk):
+    """Any edge_chunk -- including 1 and sizes larger than e_max -- is
+    bit-identical (the >= e_max case degenerates to monolithic)."""
+    g, pg, plan = _chunk_graph()
+    pgv = B.device_view(pg)
+    sources = pick_sources(g, 4, seed=2)
+    outs = {}
+    for ec in (0, edge_chunk):
+        cfg = M.MSBFSConfig(n_queries=4, max_iters=40, edge_chunk=ec)
+        outs[ec] = M.run_msbfs_emulated(
+            pgv, plan, M.init_multi_state(pg, sources, cfg), cfg)
+    _tree_equal(outs[0], outs[edge_chunk])
+
+
+def test_serve_engine_edge_chunk_kwarg(chunk_graph):
+    """The engine's edge_chunk sugar == monolithic answers and counters."""
+    from repro.serve import BFSServeEngine
+
+    g, pg, _ = chunk_graph
+    stream = np.asarray(pick_sources(g, 8, seed=7), np.int64)
+    cfg = M.MSBFSConfig(n_queries=8, max_iters=40)
+    stats = {}
+    for ec in (0, 64):
+        eng = BFSServeEngine(pg=pg, cfg=cfg, cache_capacity=0, edge_chunk=ec)
+        assert eng.cfg.edge_chunk == ec
+        levels = eng.query(stream)
+        for i, s in enumerate(stream):
+            np.testing.assert_array_equal(levels[i], bfs_levels(g, int(s)))
+        stats[ec] = eng.stats.as_dict()
+    for key in ("sweeps", "wire_delegate_bytes", "wire_nn_bytes",
+                "nn_overflow", "early_stops"):
+        assert stats[0][key] == stats[64][key], key
+
+
+# --------------------------------------------- chunked sweeps, real mesh
+@needs4
+def test_serve_engine_chunked_sharded_4dev(chunk_graph):
+    """Chunked sweeps on a real (2, 2) shard_map mesh: oracle-exact and
+    counter-identical to the monolithic sharded run."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.serve import BFSServeEngine
+
+    g, pg, _ = chunk_graph
+    stream = np.asarray(pick_sources(g, 6, seed=9), np.int64)
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=40,
+                        comm=comm.CommConfig(nn="compressed"))
+    stats = {}
+    for ec in (0, 64):
+        eng = BFSServeEngine(
+            pg=pg, cfg=cfg, cache_capacity=0, edge_chunk=ec,
+            mesh=make_test_mesh((2, 2), ("data", "model")))
+        assert eng.sharded
+        levels = eng.query(stream)
+        for i, s in enumerate(stream):
+            np.testing.assert_array_equal(levels[i], bfs_levels(g, int(s)))
+        stats[ec] = eng.stats.as_dict()
+    for key in ("sweeps", "wire_delegate_bytes", "wire_nn_bytes",
+                "nn_overflow"):
+        assert stats[0][key] == stats[64][key], key

@@ -390,6 +390,37 @@ def test_gate_missing_section_and_new_metric():
     assert rep["status"] == "fail"              # missing section is fatal
 
 
+def test_gate_claim_bounds():
+    """The paper-claim bounds (formerly bare asserts inside the benchmark
+    scripts) gate the candidate: inside the bound is ok, outside or
+    absent is a fatal ``violation`` of class ``claim`` -- which
+    --perf-report-only must NOT excuse (it only excuses class perf)."""
+    from benchmarks.gate import check_claims, gate
+
+    good = _doc(memory_model={"graph": {"scale": 14},
+                              "vs_edge_list_best": 0.28,
+                              "ths": {"th64": {"compressed_vs_raw": 0.34}}})
+    rep = gate(good, good)
+    assert rep["status"] == "pass"
+    claims = [f for f in rep["findings"] if f["class"] == "claim"]
+    assert claims and all(f["status"] == "ok" for f in claims)
+
+    bad = _doc(memory_model={"graph": {"scale": 14},
+                             "vs_edge_list_best": 0.9,
+                             "ths": {"th64": {"compressed_vs_raw": 0.8}}})
+    viol = [f for f in check_claims(bad) if f["status"] == "violation"]
+    assert {f["metric"] for f in viol} == {
+        "memory_model.vs_edge_list_best",
+        "memory_model.ths.th64.compressed_vs_raw"}
+    assert all(f["class"] == "claim" for f in viol)
+    assert gate(bad, bad)["status"] == "fail"
+
+    absent = _doc(memory_model={"graph": {"scale": 14}})
+    assert any(f["status"] == "violation" for f in check_claims(absent))
+    # sections that simply don't carry the claim are not penalized
+    assert check_claims(_doc(mixed={"sweeps": 5})) == []
+
+
 def test_gate_files_and_legacy_schema(tmp_path):
     from benchmarks.common import BENCH_SCHEMA, load_bench
     from benchmarks.gate import gate_files
