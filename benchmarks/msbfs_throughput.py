@@ -36,6 +36,13 @@ per-driver times plus counters land in a ``chunked`` section of
 ``BENCH_scaling.json``. Defaults to the compressed nn wire format so the
 codec byte accounting rides the same run.
 
+``--payload`` benchmarks the per-lane payload plane (weighted SSSP,
+min-label components, k-hop sampling): homogeneous runs per kind plus a
+seven-kind mixed rotation, each oracle-checked, reporting the wire split
+between the bit plane and the int32 payload plane (delegate vs nn) into a
+``payload_kinds`` section of ``BENCH_queries.json``. Bit-only runs must
+ship exactly zero payload bytes -- the compile-away claim as a counter.
+
 ``--mixed`` benchmarks the typed-query subsystem (``repro.serve.queries``)
 on one skewed RMAT stream served four ways: full levels, reachability-only
 (raw device path and the shipped serving path with per-component reuse),
@@ -364,6 +371,104 @@ def run_chunked(scale: int = 12, th: int = 64, p_rank: int = 2,
     return section
 
 
+def run_payload(scale: int = 9, th: int = 64, p_rank: int = 2, p_gpu: int = 2,
+                n_queries: int = 32, requests: int = 36,
+                out_json: str = "BENCH_queries.json"):
+    """Payload-plane query kinds: per-kind wire accounting on one substrate.
+
+    Serves the same source stream as four homogeneous runs -- full levels
+    (bit plane only), weighted SSSP and components (both ride the int32
+    per-lane payload plane), k-hop sampling (bit plane + depth cap) -- and
+    one seven-kind mixed rotation, all through the refill engine. Every
+    answer is oracle-checked. The reported wire split (delegate vs nn, bit
+    plane vs payload plane) pins the refactor's compile-away claim as
+    counters: bit-only runs ship exactly zero payload bytes, payload runs
+    ship both planes, and the mixed run's schedule is whatever the lane
+    word's union needs. Results land in a ``payload_kinds`` section of
+    ``BENCH_queries.json`` for ``scripts/bench_gate.py``."""
+    from repro.serve import BFSServeEngine, Query, QueryKind, oracle_check
+
+    g = rmat_graph(scale, seed=7)
+    pg = partition_graph(g, th=th, p_rank=p_rank, p_gpu=p_gpu)
+    srcs = pick_sources(g, requests, seed=1)
+    cfg = M.MSBFSConfig(n_queries=n_queries, max_iters=48)
+
+    def serve(queries, payload, targets=False):
+        eng = BFSServeEngine(pg=pg, cfg=cfg, cache_capacity=0, refill=True,
+                             reuse_components=False)
+        eng.warmup(targets=targets, payload=payload)
+        t0 = time.perf_counter()
+        answers = eng.submit_many(queries)
+        dt = time.perf_counter() - t0
+        for q, a in zip(queries, answers):
+            oracle_check(g, q, a)
+        st = eng.stats
+        return st, {
+            "qps": len(queries) / dt,
+            "sweeps": st.sweeps,
+            "wire_delegate_bytes": st.wire_delegate_bytes,
+            "wire_nn_bytes": st.wire_nn_bytes,
+            "wire_pay_delegate_bytes": st.wire_pay_delegate_bytes,
+            "wire_pay_nn_bytes": st.wire_pay_nn_bytes,
+            "nn_overflow": st.nn_overflow,
+        }
+
+    runs = {
+        "levels": [Query(int(s)) for s in srcs],
+        "weighted_sssp": [Query(int(s), QueryKind.WEIGHTED_SSSP)
+                          for s in srcs],
+        "components": [Query(int(s), QueryKind.COMPONENTS) for s in srcs],
+        "khop_sample": [Query(int(s), QueryKind.KHOP_SAMPLE, max_depth=3)
+                        for s in srcs],
+    }
+    tpool = tuple(int(s) for s in srcs[:2])
+    kinds = [lambda s: Query(s),
+             lambda s: Query(s, QueryKind.REACHABILITY),
+             lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=3),
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tpool),
+             lambda s: Query(s, QueryKind.WEIGHTED_SSSP),
+             lambda s: Query(s, QueryKind.COMPONENTS),
+             lambda s: Query(s, QueryKind.KHOP_SAMPLE, max_depth=2)]
+    mixed_q = [kinds[i % len(kinds)](int(s)) for i, s in enumerate(srcs)]
+
+    section: dict = {
+        "graph": {"n": int(g.n), "m": int(g.m), "scale": scale,
+                  "th": th, "seed": 7},
+        "requests": int(len(srcs)), "n_queries": n_queries,
+        "oracle_exact": True,
+    }
+    for name, queries in runs.items():
+        payload = name in ("weighted_sssp", "components")
+        _, row = serve(queries, payload)
+        emit(f"msbfs/payload_{name}", 1e6 / row["qps"],
+             f"qps={row['qps']:.2f} sweeps={row['sweeps']} "
+             f"delegate={row['wire_delegate_bytes']}B "
+             f"nn={row['wire_nn_bytes']}B "
+             f"pay_delegate={row['wire_pay_delegate_bytes']}B "
+             f"pay_nn={row['wire_pay_nn_bytes']}B")
+        section[name] = row
+
+    st_mx, row = serve(mixed_q, True, targets=True)
+    emit("msbfs/payload_mixed", 1e6 / row["qps"],
+         f"qps={row['qps']:.2f} sweeps={row['sweeps']} "
+         f"pay_delegate={row['wire_pay_delegate_bytes']}B "
+         f"pay_nn={row['wire_pay_nn_bytes']}B")
+    section["mixed"] = {**row, "kind_counts": st_mx.kind_counts,
+                        "early_stops": st_mx.early_stops}
+
+    # compile-away + plane-accounting claims, as counters (deterministic)
+    for name in ("levels", "khop_sample"):
+        assert section[name]["wire_pay_delegate_bytes"] == 0
+        assert section[name]["wire_pay_nn_bytes"] == 0
+    for name in ("weighted_sssp", "components", "mixed"):
+        assert section[name]["wire_pay_delegate_bytes"] > 0
+        assert section[name]["wire_pay_nn_bytes"] > 0
+    assert all(section[k]["nn_overflow"] == 0
+               for k in (*runs, "mixed"))
+    write_bench(out_json, "payload_kinds", section)
+    return section
+
+
 def run_mixed(scale: int = 10, edge_factor: int = 8, th: int = 64,
               p_rank: int = 2, p_gpu: int = 2, n_queries: int = 32,
               requests: int = 40, n_tails: int = 4, tail_len: int = 48,
@@ -499,12 +604,17 @@ if __name__ == "__main__":
     ap.add_argument("--chunked", action="store_true",
                     help="chunked out-of-core sweeps vs monolithic: "
                          "bit-identical counters + oracle check")
+    ap.add_argument("--payload", action="store_true",
+                    help="payload-plane query kinds (weighted SSSP, "
+                         "components, k-hop) with per-kind wire accounting")
     ap.add_argument("--edge-chunk", type=int, default=4096,
                     help="edge block size for --chunked")
     ap.add_argument("--scale", type=int, default=None)
     args = ap.parse_args()
     kw = {} if args.scale is None else {"scale": args.scale}
-    if args.chunked:
+    if args.payload:
+        print(run_payload(**kw))
+    elif args.chunked:
         print(run_chunked(edge_chunk=args.edge_chunk, **kw))
     elif args.overlap:
         print(run_overlap(**kw))

@@ -7,12 +7,14 @@ Prints throughput, batch utilization, and cache hit rate, and spot-checks
 answers against the numpy oracle.
 
 ``--mixed`` serves a typed mixed-kind stream instead: the same skewed
-sources cycled through all four query kinds (full levels, reachability,
-distance-limited, multi-target) via ``BFSServeEngine.submit_many``, with
-per-kind oracle spot-checks and the per-kind ``ServeStats`` printed
-(kind tallies with early exits, component reuse, and the comm layer's
-wire-volume counters -- delegate/nn bytes, sparse-format sweeps, and the
-overflow counter that must stay 0).
+sources cycled through all seven query kinds (full levels, reachability,
+distance-limited, multi-target, weighted SSSP, components, k-hop sample)
+via ``BFSServeEngine.submit_many``, with per-kind oracle spot-checks and
+the per-kind ``ServeStats`` printed (kind tallies with early exits,
+component reuse, and the comm layer's wire-volume counters --
+delegate/nn bytes for both the bit plane and the int32 payload plane the
+SSSP/components lanes ride, sparse-format sweeps, and the overflow
+counter that must stay 0).
 
 ``--overlap`` (with ``--refill``) serves through the overlapped
 host/device pipeline: sweeps run in fused blocks with a speculative next
@@ -119,16 +121,17 @@ def serve_stream(eng, g, stream, args):
 
 
 def serve_mixed(eng, g, stream, args):
-    from repro.core.oracle import (bfs_levels, bfs_levels_limited,
-                                   reachable_mask, target_depths)
-    from repro.serve import Query, QueryKind
+    from repro.serve import Query, QueryKind, oracle_check
 
     tpool = tuple(int(s) for s in np.unique(stream)[:2])
     kinds = [lambda s: Query(s),
              lambda s: Query(s, QueryKind.REACHABILITY),
              lambda s: Query(s, QueryKind.DISTANCE_LIMITED, max_depth=3),
-             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tpool)]
-    queries = [kinds[i % 4](int(s)) for i, s in enumerate(stream)]
+             lambda s: Query(s, QueryKind.MULTI_TARGET, targets=tpool),
+             lambda s: Query(s, QueryKind.WEIGHTED_SSSP),
+             lambda s: Query(s, QueryKind.COMPONENTS),
+             lambda s: Query(s, QueryKind.KHOP_SAMPLE, max_depth=2)]
+    queries = [kinds[i % len(kinds)](int(s)) for i, s in enumerate(stream)]
 
     t0 = time.perf_counter()
     answers = eng.submit_many(queries)
@@ -146,7 +149,10 @@ def serve_mixed(eng, g, stream, args):
           f"component_hits={st.component_hits} "
           f"reach_fast_batches={st.reach_fast_batches}")
     print(f"wire: delegate={st.wire_delegate_bytes}B "
-          f"nn={st.wire_nn_bytes}B total={st.wire_bytes_total}B "
+          f"nn={st.wire_nn_bytes}B "
+          f"payload_delegate={st.wire_pay_delegate_bytes}B "
+          f"payload_nn={st.wire_pay_nn_bytes}B "
+          f"total={st.wire_bytes_total}B "
           f"sparse_nn_sweeps={st.nn_sparse_sweeps} "
           f"nn_overflow={st.nn_overflow}")
     assert st.nn_overflow == 0, "nn exchange dropped slots (grow sparse_cap)"
@@ -155,17 +161,8 @@ def serve_mixed(eng, g, stream, args):
           + (f" refill sweeps={st.sweeps} reseeds={st.refills}"
              if args.refill else ""))
 
-    for i in range(0, len(queries), max(len(queries) // 8, 1)):
-        q, a = queries[i], answers[i]
-        if q.kind is QueryKind.LEVELS:
-            ok = np.array_equal(a, bfs_levels(g, q.source))
-        elif q.kind is QueryKind.REACHABILITY:
-            ok = np.array_equal(a, reachable_mask(g, q.source))
-        elif q.kind is QueryKind.DISTANCE_LIMITED:
-            ok = np.array_equal(a, bfs_levels_limited(g, q.source, q.max_depth))
-        else:
-            ok = a == target_depths(g, q.source, q.targets)
-        assert ok, f"mismatch for {q}"
+    for i in range(0, len(queries), max(len(queries) // 12, 1)):
+        oracle_check(g, queries[i], answers[i])
     print("spot-checked per-kind answers against the oracle: OK")
 
 
@@ -240,8 +237,8 @@ def main():
                          edge_chunk=args.edge_chunk)
     t0 = time.perf_counter()
     # a mixed stream is never homogeneously-reachability, so only the
-    # multi-target variant needs the extra compile
-    eng.warmup(targets=args.mixed)
+    # multi-target and payload-plane variants need the extra compiles
+    eng.warmup(targets=args.mixed, payload=args.mixed)
     print(f"engine ready (compile {time.perf_counter() - t0:.1f}s, "
           f"W={eng.cfg.n_queries}, p={eng.pg.p}, delegates={eng.pg.d})")
 

@@ -50,7 +50,8 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
     bit-identicality, wire-volume orderings -- stay armed). Returns
     {basename: error-or-None}."""
     from benchmarks import (comm_model, memory_model, msbfs_throughput,
-                            serving_frontend, strong_scaling, weak_scaling)
+                            options_ablation, serving_frontend,
+                            strong_scaling, th_perf, th_sweep, weak_scaling)
 
     os.makedirs(workdir, exist_ok=True)
     qpath = os.path.join(workdir, "BENCH_queries.json")
@@ -68,8 +69,17 @@ def run_fresh(workdir: str, scale_override: int | None = None) -> dict:
             out_json=qpath, min_reach_speedup=0.0, min_raw_reach=0.0, **kw)),
         ("overlap", lambda: msbfs_throughput.run_overlap(
             out_json=qpath, min_speedup=0.0, **kw)),
+        ("payload_kinds", lambda: msbfs_throughput.run_payload(
+            out_json=qpath, **kw)),
         ("comm_strategies", lambda: comm_model.run_strategies(
             out_path=cpath, **kw)),
+        # partition/workload counters: deterministic schedule facts, their
+        # in-benchmark asserts stay armed (they are paper invariants, not
+        # perf claims)
+        ("options_ablation", lambda: options_ablation.run(
+            out_json=cpath, **kw)),
+        ("th_sweep", lambda: th_sweep.run(out_json=cpath, **kw)),
+        ("th_perf", lambda: th_perf.run(out_json=cpath, **kw)),
         ("frontend", lambda: serving_frontend.run_frontend(
             out_json=spath, min_speedup=0.0, **kw)),
         ("memory_model", lambda: memory_model.run(out_json=scpath, **kw)),

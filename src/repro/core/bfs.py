@@ -38,6 +38,18 @@ from repro import compat
 from . import comm
 from .types import CSR, INF_LEVEL, PartitionedGraph, PartitionLayout
 
+# The single-source sweep's combine monoids, stated once through the comm
+# layer's typed registry (``core/comm/base.py``) instead of ad-hoc
+# constants: the delegate level reduction is the ``"min"`` spec -- its
+# identity *is* INF_LEVEL, so unvisited candidates ride the reduction as
+# the identity and can never win -- and the u8 visited-mask path is the
+# bit-OR monoid over {0, 1} (max == OR there). The lane-word msBFS sibling
+# (``msbfs.py``) threads the same registry through its payload plane.
+_MIN_SPEC = comm.COMBINE_SPECS["min"]
+assert int(_MIN_SPEC.identity) == int(INF_LEVEL), (
+    "INF_LEVEL must equal the min-combine identity: unvisited level "
+    "candidates enter delegate reductions as the identity element")
+
 # -----------------------------------------------------------------------------
 # Config / state
 
@@ -428,7 +440,8 @@ def bfs_step(
         new_level_d = jnp.where(newly, it + 1, state.level_d)
         new_d_any = jnp.any(newly)
     else:
-        cand_levels = jnp.where(cand_d & unvisited_d, it + 1, INF_LEVEL).astype(jnp.int32)
+        cand_levels = jnp.where(cand_d & unvisited_d, it + 1,
+                                _MIN_SPEC.identity).astype(_MIN_SPEC.wire_dtype)
         reduced, d_bytes = comm.delegate_combine(cplan, cand_levels, "min")
         new_level_d = jnp.minimum(state.level_d, reduced)
         new_d_any = jnp.any(new_level_d < state.level_d)

@@ -36,9 +36,11 @@ equivalence and wire accounting are pinned by
 per-strategy wire-format table.
 """
 from .base import (
+    COMBINE_SPECS,
     DELEGATE_STRATEGIES,
     NN_FORMATS,
     AxisNames,
+    CombineSpec,
     CommConfig,
     CommPlan,
     as_axes,
@@ -60,6 +62,7 @@ from .exchange import (
     exchange_payload,
     exchange_words,
     nn_exchange_bits,
+    nn_exchange_payload,
     nn_exchange_words,
 )
 from .reduce import (
@@ -69,17 +72,19 @@ from .reduce import (
     delegate_allreduce_sum,
     delegate_combine,
     lane_any_reduce,
+    lane_fold_reduce,
 )
 from .wire import n_words, pack_lanes, unpack_lanes
 
 __all__ = [
-    "DELEGATE_STRATEGIES", "NN_FORMATS", "AxisNames", "CommConfig",
-    "CommPlan", "any_reduce", "as_axes", "axis_size", "bin_by_owner",
-    "compressed_wire_bytes", "delegate_allreduce_min",
-    "delegate_allreduce_or", "delegate_allreduce_sum", "delegate_combine",
-    "delta_decode_ids", "delta_encode_ids", "delta_stream_bytes",
-    "exchange_normal", "exchange_payload", "exchange_words",
-    "lane_any_reduce", "n_words", "nn_exchange_bits", "nn_exchange_words",
-    "pack_lanes", "plan_for", "rle_decode", "rle_encode",
-    "rle_stream_bytes", "unpack_lanes",
+    "COMBINE_SPECS", "DELEGATE_STRATEGIES", "NN_FORMATS", "AxisNames",
+    "CombineSpec", "CommConfig", "CommPlan", "any_reduce", "as_axes",
+    "axis_size", "bin_by_owner", "compressed_wire_bytes",
+    "delegate_allreduce_min", "delegate_allreduce_or",
+    "delegate_allreduce_sum", "delegate_combine", "delta_decode_ids",
+    "delta_encode_ids", "delta_stream_bytes", "exchange_normal",
+    "exchange_payload", "exchange_words", "lane_any_reduce",
+    "lane_fold_reduce", "n_words", "nn_exchange_bits",
+    "nn_exchange_payload", "nn_exchange_words", "pack_lanes", "plan_for",
+    "rle_decode", "rle_encode", "rle_stream_bytes", "unpack_lanes",
 ]

@@ -44,6 +44,39 @@ DELEGATE_STRATEGIES = ("auto", "allgather", "ring", "hier")
 NN_FORMATS = ("dense", "sparse", "adaptive", "compressed")
 
 
+@dataclass(frozen=True)
+class CombineSpec:
+    """A typed per-lane combine: the monoid one traversal payload reduces
+    under, threaded through every layer that used to hardwire bitwise OR.
+
+    ``op`` names the :mod:`.reduce` fold (and thereby the matching native
+    collective -- ``pmin``/``pmax``/``psum`` where one exists); ``identity``
+    is the scatter/exchange neutral element (what empty slots and
+    non-participating lanes carry); ``wire_dtype`` the dtype whose itemsize
+    the byte formulas count.
+    """
+
+    op: str
+    identity: int
+    wire_dtype: str
+
+    @property
+    def itemsize(self) -> int:
+        return 4        # uint32 lane words and int32 payloads alike
+
+
+#: the combine specs the traversal substrate serves: ``or`` is the BFS
+#: bit-word monoid (identity 0, packed uint32 words on the wire);
+#: ``min_plus`` the weighted-distance semiring's additive combine
+#: (min with +inf identity, edge weights added on the push side);
+#: ``min`` plain label minimization (components: min_plus with 0 weights).
+COMBINE_SPECS = {
+    "or": CombineSpec(op="or", identity=0, wire_dtype="uint32"),
+    "min_plus": CombineSpec(op="min", identity=2 ** 30, wire_dtype="int32"),
+    "min": CombineSpec(op="min", identity=2 ** 30, wire_dtype="int32"),
+}
+
+
 def as_axes(axis_names: AxisNames) -> tuple:
     return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
 
@@ -181,6 +214,14 @@ class CommPlan:
 
     def nn_sparse_words_bytes(self, cap_sparse: int, nw: int) -> int:
         return (self.p - 1) * cap_sparse * (4 + nw * 4)   # slot id + words
+
+    def nn_dense_payload_bytes(self, cap_peer: int, w: int) -> int:
+        """Dense per-lane payload plane: one int32 per (slot, lane)."""
+        return (self.p - 1) * cap_peer * w * 4
+
+    def nn_sparse_payload_bytes(self, cap_sparse: int, w: int) -> int:
+        """Sparse (slot id, payload row) records: 4 B id + W int32."""
+        return (self.p - 1) * cap_sparse * (4 + w * 4)
 
     def nn_dense_bits_bytes(self, cap_peer: int) -> int:
         return (self.p - 1) * -(-cap_peer // 32) * 4

@@ -36,7 +36,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from .base import AxisNames, CommPlan
+from .base import COMBINE_SPECS, AxisNames, CommPlan
 from .codec import compressed_wire_bytes
 from .wire import n_words, pack_lanes, unpack_lanes
 
@@ -207,6 +207,91 @@ def nn_exchange_words(plan: CommPlan, dense: jnp.ndarray,
         wire, delta_used = compressed_wire_bytes(plan, act, nw)
         if sparse_bytes >= dense_bytes:
             recv, _, ovf = dense_path(dense)
+        else:
+            recv, _, _, ovf = adaptive_transport()
+        return recv, wire, delta_used, ovf
+    recv, bts, feasible, ovf = adaptive_transport()
+    return recv, bts, feasible.astype(jnp.int32), ovf
+
+
+def _scatter_recv_payload(rvals, loc, nl, identity):
+    """Scatter-min received payload rows onto local normal ids (-1 loc =
+    dead slot; the identity value is a no-op under ``.min``)."""
+    w = rvals.shape[-1]
+    vals = jnp.where((loc >= 0)[..., None], rvals, identity)
+    return jnp.full((nl, w), identity, jnp.int32).at[
+        jnp.clip(loc.reshape(-1), 0, nl - 1)
+    ].min(vals.reshape(-1, w), mode="drop")
+
+
+def nn_exchange_payload(plan: CommPlan, dense_pay: jnp.ndarray,
+                        recv_local: jnp.ndarray, nl: int):
+    """Frontier-adaptive per-lane *payload* nn exchange (min combine).
+
+    The payload sibling of :func:`nn_exchange_words` for the ``min_plus``
+    combine spec: ``dense_pay [p, cap_peer, W] int32`` carries each slot's
+    per-lane distance/label candidates (the spec's identity = +inf for
+    lanes with nothing to ship), receivers fold with elementwise min
+    instead of OR. A slot is *active* when any lane carries a value below
+    the identity; the same four wire formats apply with the byte formulas
+    swapped to the payload record shapes -- dense ``cap_peer * W`` int32
+    per peer, sparse ``(slot id, W int32)`` records capped at
+    ``sparse_cap_words``, adaptive the globally-agreed switch between
+    them, compressed the exact codec stream for the id set plus ``W``
+    int32 per active slot (``nw=W`` in the codec formula). Returns
+    ``(recv [nl, W] int32 -- identity where nothing arrived, wire_bytes
+    int32, sparse_used int32, overflow int32)``.
+    """
+    p, cap, w = dense_pay.shape
+    identity = jnp.int32(COMBINE_SPECS["min_plus"].identity)
+    axes = plan.axes if len(plan.axes) > 1 else plan.axes[0]
+    dense_bytes = plan.nn_dense_payload_bytes(cap, w)
+    cap_sparse = plan.sparse_cap_words(cap)
+    sparse_bytes = plan.nn_sparse_payload_bytes(cap_sparse, w)
+
+    def dense_path(dense_pay):
+        recv = _scatter_recv_payload(_a2a(dense_pay, axes), recv_local, nl,
+                                     identity)
+        return recv, jnp.int32(dense_bytes), jnp.int32(0)
+
+    mode = plan.cfg.nn
+    if mode == "adaptive" and sparse_bytes >= dense_bytes:
+        mode = "dense"                      # sparse can never win: skip it
+    if mode == "dense":
+        recv, bts, ovf = dense_path(dense_pay)
+        return recv, bts, jnp.int32(0), ovf
+
+    act = jnp.any(dense_pay < identity, axis=-1)                # [p, cap]
+
+    def sparse_path(dense_pay):
+        ids, valid, overflow = _compact_active(act, cap_sparse)
+        sv = jnp.where(valid[..., None], jnp.take_along_axis(
+            dense_pay, jnp.maximum(ids, 0)[..., None], axis=1), identity)
+        r_ids = _a2a(ids, axes)                                 # [p, S]
+        rvals = _a2a(sv, axes)                                  # [p, S, W]
+        loc = jnp.take_along_axis(recv_local, jnp.clip(r_ids, 0, cap - 1),
+                                  axis=1)
+        loc = jnp.where(r_ids >= 0, loc, -1)
+        return (_scatter_recv_payload(rvals, loc, nl, identity),
+                jnp.int32(sparse_bytes), overflow.astype(jnp.int32))
+
+    if mode == "sparse":
+        recv, bts, ovf = sparse_path(dense_pay)
+        return recv, bts, jnp.int32(1), ovf
+
+    def adaptive_transport():
+        local_max = jnp.max(jnp.sum(act.astype(jnp.int32), axis=-1))
+        feasible = lax.pmax(local_max, axes) <= cap_sparse
+        recv, bts, ovf = lax.cond(feasible, sparse_path, dense_path,
+                                  dense_pay)
+        return recv, bts, feasible, ovf
+
+    if mode == "compressed":
+        # exact codec accounting: id stream + W int32 per active slot;
+        # transport reuses the adaptive switch (never drops)
+        wire, delta_used = compressed_wire_bytes(plan, act, w)
+        if sparse_bytes >= dense_bytes:
+            recv, _, ovf = dense_path(dense_pay)
         else:
             recv, _, _, ovf = adaptive_transport()
         return recv, wire, delta_used, ovf

@@ -67,6 +67,21 @@ def _allgather_fold(x, axes, op: str, local_fold: str | None):
             flat, jnp.zeros(flat.shape[1:], jnp.uint32),
             force=force, with_count=False)
         return or_mask.reshape(x.shape)
+    if op == "min" and local_fold is not None and gathered.dtype == jnp.int32:
+        # the payload analog of the lane-word OR fold: K-way elementwise
+        # min through the payload_min_fold kernel (min_plus combine spec)
+        from repro.kernels import ops as _kops
+
+        k = gathered.shape[0]
+        flat = gathered.reshape(k, -1)
+        force = None if local_fold == "auto" else local_fold
+        from .base import COMBINE_SPECS
+
+        ident = jnp.full(flat.shape[1:], COMBINE_SPECS["min"].identity,
+                         jnp.int32)
+        combined, _ = _kops.payload_min_fold(flat, ident, force=force,
+                                             with_count=False)
+        return combined.reshape(x.shape)
     return _FOLD[op](gathered)
 
 
@@ -168,4 +183,14 @@ def lane_any_reduce(lane_flags: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarr
     are untouched by refill (a reseeded lane is just a fresh bit pattern in
     the same words).
     """
-    return lax.pmax(lane_flags.astype(jnp.int32), axis_names) > 0
+    return lane_fold_reduce(lane_flags.astype(jnp.int32), axis_names) > 0
+
+
+def lane_fold_reduce(lane_vals: jnp.ndarray, axis_names: AxisNames) -> jnp.ndarray:
+    """Global per-lane int32 max (elementwise pmax) of stacked ``[k, W]``
+    convergence rows. :func:`lane_any_reduce` is this with a >0 threshold;
+    the payload step stacks its extra rows (pending-any, under-bucket-any,
+    and the *negated* minimum pending distance, so one pmax also yields a
+    global min) into the same single reduction rather than adding
+    collectives per payload feature."""
+    return lax.pmax(lane_vals, axis_names)

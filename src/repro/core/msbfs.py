@@ -73,10 +73,16 @@ from repro import compat
 from . import comm
 from .bfs import _decide_direction, _row_degrees
 from .types import CSR, INF_LEVEL, PartitionedGraph, PartitionLayout
+from .weights import edge_weights
 
 # Sentinel per-lane depth cap meaning "unlimited" (any reachable depth is
 # < max_iters << NO_DEPTH_CAP, so the gate `depth < cap` never fires).
 NO_DEPTH_CAP = np.int32(INF_LEVEL)
+
+# The per-lane payload combine identity (min/min_plus specs): +inf in the
+# min semiring. Equal to INF_LEVEL by construction, so "unreached" means
+# the same thing in the level and payload planes.
+PAY_IDENT = np.int32(comm.COMBINE_SPECS["min_plus"].identity)
 
 # Lane-word packing lives with the wire formats in the comm package;
 # re-exported here because every msBFS caller packs/unpacks through this
@@ -138,6 +144,19 @@ class MSBFSConfig:
     # zero-size dummies in the carry, so the disabled path compiles the
     # telemetry away entirely.
     telemetry: bool = False
+    # True carries the per-lane small-int *payload plane* through the state
+    # ([n_local, W] / [d, W] int32 + pending words) and runs the min-combine
+    # sweep branch alongside the bit-word one: weighted SSSP (min_plus over
+    # synthetic edge weights, delta-stepping buckets folded into the sweep
+    # loop) and connected components (min-label propagation, an INF-bucket
+    # degenerate of the same branch). Per-lane dynamic flags
+    # (``pay_weighted`` / ``pay_delta`` / seed-all at reseed) pick the kind,
+    # so one compiled variant serves both, mixed freely with bit lanes in
+    # the same W-word. False (the default) keeps zero-width ``[.., 0]``
+    # payload dummies in the carry -- the same compile-away contract as
+    # ``telemetry``: the bit-only schedule and every counter stay
+    # bit-identical to the pre-payload substrate.
+    payload: bool = False
 
 
 @dataclass
@@ -197,6 +216,26 @@ class MSBFSState:
                          # popcount (content replicated across shards)
     tm_backward: Any     # [p, max_iters, 3, n_words(W)] uint32 -- the
                          # per-lane (dd, dn, nd) pull decisions, packed
+    # per-lane payload plane (cfg.payload; zero-width [.., 0] dummies
+    # otherwise -- the telemetry compile-away contract). Values are
+    # absolute small ints under the min combine (SSSP distances /
+    # component labels), PAY_IDENT = +inf = "unreached"; ``pending`` marks
+    # vertices whose payload improved and has not been expanded yet
+    # (label-correcting worklist); ``pay_bucket`` is the delta-stepping
+    # threshold gating expansion (INF for components = plain min-label
+    # propagation), ``pay_delta`` the per-lane bucket width, ``pay_weighted``
+    # whether pushes add the synthetic edge weight (SSSP) or 0 (labels):
+    payload_n: Any       # [p, n_local, Wp] int32
+    payload_d: Any       # [p, d, Wp] int32 (replicated content)
+    pay_pending_n: Any   # [p, n_local, Wp] bool
+    pay_pending_d: Any   # [p, d, Wp] bool
+    pay_bucket: Any      # [p, Wp] int32
+    pay_delta: Any       # [p, Wp] int32
+    pay_weighted: Any    # [p, Wp] bool
+    # payload wire accounting [p, max_iters] int32 ([p, 0] when disabled),
+    # same .add convention as wire_delegate / wire_nn:
+    wire_pay_delegate: Any   # payload delegate-combine bytes per sweep
+    wire_pay_nn: Any         # payload nn-exchange bytes per sweep
 
 
 jax.tree_util.register_dataclass(
@@ -207,7 +246,10 @@ jax.tree_util.register_dataclass(
                  "target_n", "target_d", "frontier_n", "frontier_d",
                  "work_fwd", "work_bwd", "nn_sent", "delegate_round",
                  "wire_delegate", "wire_nn", "nn_sparse", "nn_overflow",
-                 "tm_frontier_n", "tm_frontier_d", "tm_backward"),
+                 "tm_frontier_n", "tm_frontier_d", "tm_backward",
+                 "payload_n", "payload_d", "pay_pending_n", "pay_pending_d",
+                 "pay_bucket", "pay_delta", "pay_weighted",
+                 "wire_pay_delegate", "wire_pay_nn"),
     meta_fields=(),
 )
 
@@ -242,6 +284,7 @@ def locate_source(pg: PartitionedGraph, layout: PartitionLayout,
 def init_multi_state(
     pg: PartitionedGraph, sources: Sequence[int], cfg: MSBFSConfig,
     *, depth_caps: Sequence | None = None, targets: Sequence | None = None,
+    payload_modes: Sequence | None = None,
 ) -> MSBFSState:
     """Seed one lane per source. Fewer than ``n_queries`` sources leaves the
     tail lanes unseeded (a partial batch): they stay at INF_LEVEL and never
@@ -250,7 +293,15 @@ def init_multi_state(
     ``depth_caps`` (aligned with ``sources``) gives lane ``q`` a max hop
     depth (``None`` entries = unlimited); ``targets`` gives lane ``q`` a
     sequence of target vertex ids (``None`` / empty = none) -- the lane
-    retires the sweep all of its targets are visited."""
+    retires the sweep all of its targets are visited.
+
+    ``payload_modes`` (aligned with ``sources``; requires ``cfg.payload``)
+    turns lane ``q`` into a payload lane instead of a bit lane: ``"sssp"``
+    seeds payload 0 at the source with delta-stepping buckets over the
+    synthetic edge weights; ``"components"`` seeds every valid vertex with
+    its own global id under plain min-label propagation (INF bucket). A
+    payload lane's bit columns stay empty (inert in the bit machinery);
+    ``None`` entries are ordinary bit lanes."""
     w = cfg.n_queries
     sources = validate_sources(pg, sources)
     if sources.size > w:
@@ -273,8 +324,47 @@ def init_multi_state(
         level_d = np.zeros((p, d, w), dtype=bool)
         frontier_n = np.zeros((p, nl, w), dtype=bool)
         frontier_d = np.zeros((p, d, w), dtype=bool)
+    # per-lane payload plane (zero-width when cfg.payload is off)
+    wp = w if cfg.payload else 0
+    payload_n = np.full((p, nl, wp), PAY_IDENT, dtype=np.int32)
+    payload_d = np.full((p, d, wp), PAY_IDENT, dtype=np.int32)
+    pay_pending_n = np.zeros((p, nl, wp), dtype=bool)
+    pay_pending_d = np.zeros((p, d, wp), dtype=bool)
+    pay_bucket = np.full((p, wp), PAY_IDENT, dtype=np.int32)
+    pay_delta = np.full((p, wp), PAY_IDENT, dtype=np.int32)
+    pay_weighted = np.zeros((p, wp), dtype=bool)
+    modes = list(payload_modes) if payload_modes is not None else []
+    modes += [None] * (len(sources) - len(modes))
+    if any(m is not None for m in modes) and not cfg.payload:
+        raise ValueError("payload_modes given but cfg.payload is False")
     for q, src in enumerate(sources):
         isd, part, local, dpos = locate_source(pg, layout, dvids, int(src))
+        mode = modes[q]
+        if mode is not None:
+            # payload lane: bit columns stay empty; seed the payload plane
+            from .weights import SSSP_DELTA
+            if mode == "sssp":
+                if isd:
+                    payload_d[:, dpos, q] = 0
+                    pay_pending_d[:, dpos, q] = True
+                else:
+                    payload_n[part, local, q] = 0
+                    pay_pending_n[part, local, q] = True
+                pay_bucket[:, q] = np.int32(SSSP_DELTA)
+                pay_delta[:, q] = np.int32(SSSP_DELTA)
+                pay_weighted[:, q] = True
+            elif mode == "components":
+                valid = np.asarray(pg.normal_valid)              # [p, nl]
+                for k in range(p):
+                    gids = layout.global_of(np.full(nl, k), np.arange(nl))
+                    payload_n[k, valid[k], q] = gids[valid[k]].astype(np.int32)
+                pay_pending_n[:, :, q] = valid
+                if pg.d:
+                    payload_d[:, : pg.d, q] = dvids.astype(np.int32)[None, :]
+                    pay_pending_d[:, : pg.d, q] = True
+            else:
+                raise ValueError(f"unknown payload mode {mode!r}")
+            continue
         if isd:
             level_d[:, dpos, q] = 0 if cfg.track_levels else True
             if not cfg.track_levels:
@@ -332,6 +422,12 @@ def init_multi_state(
         wire_delegate=z(), wire_nn=z(), nn_sparse=z(), nn_overflow=z(),
         tm_frontier_n=tm_frontier_n, tm_frontier_d=tm_frontier_d,
         tm_backward=tm_backward,
+        payload_n=payload_n, payload_d=payload_d,
+        pay_pending_n=pay_pending_n, pay_pending_d=pay_pending_d,
+        pay_bucket=pay_bucket, pay_delta=pay_delta,
+        pay_weighted=pay_weighted,
+        wire_pay_delegate=np.zeros((p, mi if cfg.payload else 0), np.int32),
+        wire_pay_nn=np.zeros((p, mi if cfg.payload else 0), np.int32),
     )
 
 
@@ -422,6 +518,94 @@ def _nn_slots_multi(csr: CSR, frontier_rows: jnp.ndarray, plan,
         (jnp.zeros((plan.cap_total + 1, w), jnp.bool_), jnp.int32(0)),
         (rid, seg))
     return sa[: plan.cap_total], tot
+
+
+def _push_payload(csr: CSR, front: jnp.ndarray, pay_rows: jnp.ndarray,
+                  gid_rows: jnp.ndarray, gid_cols: jnp.ndarray, n_dst: int,
+                  wsel: jnp.ndarray, edge_chunk: int = 0) -> jnp.ndarray:
+    """Min-plus push: scatter-min of ``payload[src] + weight`` onto the
+    destination domain -- the payload sibling of :func:`_push_multi` under
+    the ``min_plus`` combine spec.
+
+    ``front [R, W]`` gates which (row, lane) pairs relax; ``gid_rows [R]`` /
+    ``gid_cols [n_dst]`` are the global ids the synthetic edge weight is
+    hashed from; ``wsel [W]`` picks which lanes add the weight (SSSP) vs 0
+    (min-label components). Non-participating pairs carry the identity, and
+    identity + weight >= identity, so padding edges and gated lanes are
+    scatter no-ops by construction. ``edge_chunk > 0`` streams fixed-size
+    edge blocks exactly like the bit push (scatter-min is
+    order-independent: memory only, never values)."""
+    w = front.shape[-1]
+    ident = jnp.int32(PAY_IDENT)
+    vals_rows = jnp.where(front, pay_rows, ident)
+    v_ext = jnp.concatenate([vals_rows, jnp.full((1, w), ident, jnp.int32)])
+    g_ext = jnp.concatenate(
+        [gid_rows.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    gid_cols = gid_cols.astype(jnp.int32)
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        we = edge_weights(g_ext[csr.rowids],
+                          gid_cols[jnp.clip(csr.cols, 0, n_dst - 1)])
+        vals = v_ext[csr.rowids] + jnp.where(wsel[None, :], we[:, None], 0)
+        out = jnp.full((n_dst, w), ident, jnp.int32)
+        return out.at[csr.cols].min(vals, mode="drop")
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids, (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    col = jnp.pad(csr.cols, (0, pad)).reshape(nblk, edge_chunk)
+
+    def body(out, blk):
+        r, c = blk
+        we = edge_weights(g_ext[r], gid_cols[jnp.clip(c, 0, n_dst - 1)])
+        vals = v_ext[r] + jnp.where(wsel[None, :], we[:, None], 0)
+        return out.at[c].min(vals, mode="drop"), None
+
+    out, _ = lax.scan(body, jnp.full((n_dst, w), ident, jnp.int32),
+                      (rid, col))
+    return out
+
+
+def _nn_slots_payload(csr: CSR, front_n: jnp.ndarray, pay_n: jnp.ndarray,
+                      gid_rows: jnp.ndarray, dst_gid_e: jnp.ndarray, plan,
+                      wsel: jnp.ndarray, edge_chunk: int = 0) -> jnp.ndarray:
+    """Sender-side per-slot payload minimums for the nn payload exchange:
+    the min-combine sibling of :func:`_nn_slots_multi`. Edges sharing a
+    unique (owner, local) slot pre-fold with min *after* adding each edge's
+    own weight (weights differ per source even at a shared destination,
+    so the fold cannot happen receiver-side). ``dst_gid_e [E]`` is the
+    per-edge destination global id in original edge order
+    (``global_of(nn_owner, nn.cols)``); padding edges land in the trash
+    segment the slice drops. Returns ``[cap_total, W] int32``."""
+    w = front_n.shape[-1]
+    ident = jnp.int32(PAY_IDENT)
+    vals_rows = jnp.where(front_n, pay_n, ident)
+    v_ext = jnp.concatenate([vals_rows, jnp.full((1, w), ident, jnp.int32)])
+    g_ext = jnp.concatenate(
+        [gid_rows.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    if edge_chunk <= 0 or edge_chunk >= csr.e_max:
+        rid_p = csr.rowids[plan.perm]
+        we = edge_weights(g_ext[rid_p], dst_gid_e[plan.perm])
+        vals = v_ext[rid_p] + jnp.where(wsel[None, :], we[:, None], 0)
+        return jnp.full((plan.cap_total + 1, w), ident, jnp.int32).at[
+            plan.seg_ids].min(vals)[: plan.cap_total]
+    nblk = -(-csr.e_max // edge_chunk)
+    pad = nblk * edge_chunk - csr.e_max
+    rid = jnp.pad(csr.rowids[plan.perm], (0, pad),
+                  constant_values=csr.n_rows).reshape(nblk, edge_chunk)
+    dg = jnp.pad(dst_gid_e[plan.perm], (0, pad)).reshape(nblk, edge_chunk)
+    seg = jnp.pad(plan.seg_ids, (0, pad),
+                  constant_values=plan.cap_total).reshape(nblk, edge_chunk)
+
+    def body(sa, blk):
+        r, g, s = blk
+        vals = v_ext[r] + jnp.where(wsel[None, :],
+                                    edge_weights(g_ext[r], g)[:, None], 0)
+        return sa.at[s].min(vals), None
+
+    sa, _ = lax.scan(
+        body, jnp.full((plan.cap_total + 1, w), ident, jnp.int32),
+        (rid, dg, seg))
+    return sa[: plan.cap_total]
 
 
 def _pull_rows_multi(cols_table, e_max, starts, ends, rows_need, col_frontier,
@@ -670,6 +854,72 @@ def msbfs_step(
     newly_d = unpack_lanes(reduced, w) & unvis_d
     new_d_any = jnp.any(newly_d)
 
+    # ---- payload plane sweep (static branch: compiled away entirely when
+    # cfg.payload is off, like telemetry) -----------------------------------
+    if cfg.payload:
+        ident = jnp.int32(PAY_IDENT)
+        wsel = state.pay_weighted                             # [W]
+        # global-id vectors for the synthetic edge weights: this
+        # partition's normal rows (layout formula on the in-trace flat
+        # partition index) and the replicated delegate vids
+        me = comm.codec.self_flat_index(cplan.axes, cplan.sizes)
+        part_base = (me // pgv.p_gpu) + pgv.p_rank * (me % pgv.p_gpu)
+        gid_n = part_base + p * jnp.arange(nl, dtype=jnp.int32)
+        dv = pgv.delegate_vids.reshape(-1).astype(jnp.int32)
+        kd = min(int(dv.shape[0]), d)
+        gid_d = jnp.zeros((d,), jnp.int32)
+        if kd:
+            gid_d = gid_d.at[:kd].set(dv[:kd])
+        # frontier: worklist vertices under the lane's current bucket
+        pfront_n = (state.pay_pending_n & nv
+                    & (state.payload_n < state.pay_bucket[None, :]))
+        pfront_d = (state.pay_pending_d
+                    & (state.payload_d < state.pay_bucket[None, :]))
+        ppush_dd = _push_payload(pgv.dd, pfront_d, state.payload_d,
+                                 gid_d, gid_d, d, wsel, ec)
+        ppush_nd = _push_payload(pgv.nd, pfront_n, state.payload_n,
+                                 gid_n, gid_d, d, wsel, ec)
+        ppush_dn = _push_payload(pgv.dn, pfront_d, state.payload_d,
+                                 gid_d, gid_n, nl, wsel, ec)
+        # nn: per-edge dst gid from the pre-split (owner, local) pair
+        nn_dst_gid = ((pgv.nn_owner // pgv.p_gpu)
+                      + pgv.p_rank * (pgv.nn_owner % pgv.p_gpu)
+                      + p * pgv.nn.cols.astype(jnp.int32)).astype(jnp.int32)
+        sa_pay = _nn_slots_payload(pgv.nn, pfront_n, state.payload_n, gid_n,
+                                   nn_dst_gid, plan, wsel, ec)
+        dense_pay = jnp.full((p, plan.cap_peer, w), ident, jnp.int32).at[
+            rows, plan.seg_pos].min(
+                jnp.where(ok[:, None], sa_pay, ident), mode="drop")
+        recv_pay, pay_nn_bytes, _pay_sparse, pay_nn_ovf = \
+            comm.nn_exchange_payload(cplan, dense_pay, plan.recv_local, nl)
+        # delegate payload combine: native fused pmin under "auto"
+        red_pd, pay_d_bytes = comm.delegate_combine(
+            cplan, jnp.minimum(ppush_dd, ppush_nd), "min")
+        new_pay_d = jnp.minimum(state.payload_d, red_pd)
+        imp_d = new_pay_d < state.payload_d
+        new_pay_n = jnp.where(
+            nv, jnp.minimum(state.payload_n,
+                            jnp.minimum(ppush_dn, recv_pay)), ident)
+        imp_n = new_pay_n < state.payload_n
+        # expanded vertices leave the worklist; improved ones (re)enter it
+        new_pend_n = (state.pay_pending_n & ~pfront_n) | imp_n
+        new_pend_d = (state.pay_pending_d & ~pfront_d) | imp_d
+        # local per-lane convergence rows, folded into the one lane
+        # reduction below instead of adding a collective: pending-any,
+        # under-bucket-any, and the *negated* pending minimum (one pmax
+        # yields a global min for the bucket advance)
+        l_pend = jnp.any(new_pend_n, axis=0) | jnp.any(new_pend_d, axis=0)
+        l_under = (
+            jnp.any(new_pend_n & (new_pay_n < state.pay_bucket[None, :]),
+                    axis=0)
+            | jnp.any(new_pend_d & (new_pay_d < state.pay_bucket[None, :]),
+                      axis=0))
+        minpend = jnp.minimum(
+            jnp.min(jnp.where(new_pend_n, new_pay_n, ident), axis=0),
+            jnp.min(jnp.where(new_pend_d, new_pay_d, ident), axis=0))
+        pay_rows = jnp.stack([l_pend.astype(jnp.int32),
+                              l_under.astype(jnp.int32), -minpend])
+
     # ---- level / visited updates ------------------------------------------
     newly_n = (cand_dn | recv) & unvis_n
     if cfg.track_levels:
@@ -688,19 +938,48 @@ def msbfs_step(
     if cfg.enable_targets:
         unhit_n = jnp.any(state.target_n & unvis_n & ~newly_n, axis=0)
         flags = jnp.stack([jnp.any(newly_n, axis=0), unhit_n])   # [2, W]
-        red = comm.lane_any_reduce(flags, axis_names)
+        if cfg.payload:
+            red_all = comm.lane_fold_reduce(
+                jnp.concatenate([flags.astype(jnp.int32), pay_rows]),
+                axis_names)
+            red = red_all[:2] > 0
+        else:
+            red = comm.lane_any_reduce(flags, axis_names)
         unhit = red[1] | jnp.any(state.target_d & unvis_d & ~newly_d, axis=0)
         upd_global = red[0]
         stop_targets = state.has_targets & ~unhit
     else:
-        upd_global = comm.lane_any_reduce(jnp.any(newly_n, axis=0),
-                                          axis_names)
+        if cfg.payload:
+            red_all = comm.lane_fold_reduce(jnp.concatenate(
+                [jnp.any(newly_n, axis=0).astype(jnp.int32)[None],
+                 pay_rows]), axis_names)
+            upd_global = red_all[0] > 0
+        else:
+            upd_global = comm.lane_any_reduce(jnp.any(newly_n, axis=0),
+                                              axis_names)
         stop_targets = jnp.zeros_like(state.lane_stop)
     # latch the stop: every target covered, or the next sweep would exceed
     # the lane's depth cap
     new_stop = (state.lane_stop | stop_targets
                 | (depth + 1 >= state.depth_cap))
     lane_upd = (upd_global | jnp.any(newly_d, axis=0)) & ~new_stop
+    if cfg.payload:
+        # payload lanes stay live while pending work remains anywhere (their
+        # bit planes are empty, so the bit rows never fire for them). The
+        # same fold resolves the delta-stepping bucket advance: pending
+        # exists but none under the current bucket -> jump the bucket to the
+        # global pending minimum's next bucket boundary. Components lanes
+        # (delta = bucket = +inf) never advance: every finite pending value
+        # is already under the bucket.
+        g_pend = red_all[-3] > 0
+        g_under = red_all[-2] > 0
+        g_minpend = -red_all[-1]
+        lane_upd = lane_upd | g_pend
+        dstep = jnp.maximum(state.pay_delta, 1)
+        nb = (jnp.clip(g_minpend, 0, PAY_IDENT) // dstep + 1) * dstep
+        new_bucket = jnp.where(g_pend & ~g_under,
+                               jnp.minimum(nb, jnp.int32(PAY_IDENT)),
+                               state.pay_bucket)
     updated = jnp.any(lane_upd)
 
     # ---- statistics --------------------------------------------------------
@@ -730,6 +1009,17 @@ def msbfs_step(
         tm_frontier_n = state.tm_frontier_n
         tm_frontier_d = state.tm_frontier_d
         tm_backward = state.tm_backward
+    if cfg.payload:
+        wire_pay_delegate = state.wire_pay_delegate.at[slot].add(
+            jnp.int32(pay_d_bytes))
+        wire_pay_nn = state.wire_pay_nn.at[slot].add(pay_nn_bytes)
+        nn_ovf = nn_ovf + pay_nn_ovf       # overflow guard covers both planes
+    else:
+        new_pay_n, new_pay_d = state.payload_n, state.payload_d
+        new_pend_n, new_pend_d = state.pay_pending_n, state.pay_pending_d
+        new_bucket = state.pay_bucket
+        wire_pay_delegate = state.wire_pay_delegate
+        wire_pay_nn = state.wire_pay_nn
     return MSBFSState(
         level_n=new_level_n,
         level_d=new_level_d,
@@ -756,6 +1046,15 @@ def msbfs_step(
         tm_frontier_n=tm_frontier_n,
         tm_frontier_d=tm_frontier_d,
         tm_backward=tm_backward,
+        payload_n=new_pay_n,
+        payload_d=new_pay_d,
+        pay_pending_n=new_pend_n,
+        pay_pending_d=new_pend_d,
+        pay_bucket=new_bucket,
+        pay_delta=state.pay_delta,
+        pay_weighted=state.pay_weighted,
+        wire_pay_delegate=wire_pay_delegate,
+        wire_pay_nn=wire_pay_nn,
     )
 
 
@@ -776,6 +1075,16 @@ def _reseed_lanes_impl(
     tgt_dpos: jnp.ndarray | None = None,        # [W, T] int32
     tgt_is_delegate: jnp.ndarray | None = None,  # [W, T] bool
     tgt_valid: jnp.ndarray | None = None,       # [W, T] bool
+    # payload-lane reseed parameters (all-or-none; only legal on a
+    # cfg.payload state -- the planes must have real lane width):
+    pay_lane: jnp.ndarray | None = None,        # [W] bool: reseed as payload
+    pay_seed_all: jnp.ndarray | None = None,    # [W] bool: components seeding
+    pay_weighted: jnp.ndarray | None = None,    # [W] bool: add edge weights
+    pay_delta: jnp.ndarray | None = None,       # [W] int32: bucket width
+    gid_n: jnp.ndarray | None = None,           # [p, nl] int32 global ids,
+                                                # PAY_IDENT at invalid slots
+    gid_d: jnp.ndarray | None = None,           # [d] int32 delegate gids,
+                                                # PAY_IDENT at padding
 ) -> MSBFSState:
     """Retire converged lanes and reseed them with fresh queries in place.
 
@@ -799,6 +1108,10 @@ def _reseed_lanes_impl(
     clear = lane_mask[None, None, :]
     seed_n = lane_mask & ~src_is_delegate
     seed_d = lane_mask & src_is_delegate
+    if pay_lane is not None:
+        # payload lanes keep their bit columns empty: suppress bit seeding
+        seed_n = seed_n & ~pay_lane
+        seed_d = seed_d & ~pay_lane
     idx_n = (jnp.where(seed_n, src_part, 0), jnp.where(seed_n, src_local, 0),
              lanes)
     idx_d = jnp.where(seed_d, src_dpos, 0)
@@ -839,6 +1152,48 @@ def _reseed_lanes_impl(
                                 jnp.any(tgt_valid, axis=1)[None, :],
                                 state.has_targets)
 
+    extra = {}
+    if pay_lane is not None:
+        # payload-plane reseed: clear the retired lanes' columns to the
+        # identity (covers bit lanes reusing a former payload lane too),
+        # then seed per kind. The reseeded bucket starts at the lane's
+        # delta (INF for components = plain min-label propagation).
+        ident = jnp.int32(PAY_IDENT)
+        pay_n = jnp.where(clear, ident, state.payload_n)
+        pay_d = jnp.where(clear, ident, state.payload_d)
+        pend_n = state.pay_pending_n & ~clear
+        pend_d = state.pay_pending_d & ~clear
+        # seed-all lanes (components): own gid everywhere valid (the gid
+        # planes carry the identity at invalid/padded slots, which also
+        # keeps those slots out of the worklist)
+        sa = lane_mask & pay_lane & pay_seed_all
+        pay_n = jnp.where(sa[None, None, :], gid_n[..., None], pay_n)
+        pend_n = pend_n | (sa[None, None, :] & (gid_n[..., None] < ident))
+        pay_d = jnp.where(sa[None, None, :], gid_d[None, :, None], pay_d)
+        pend_d = pend_d | (sa[None, None, :] & (gid_d[None, :, None] < ident))
+        # single-source lanes (sssp): payload 0 at the source
+        ss = lane_mask & pay_lane & ~pay_seed_all
+        ss_n = ss & ~src_is_delegate
+        ss_d = ss & src_is_delegate
+        idx_pn = (jnp.where(ss_n, src_part, 0),
+                  jnp.where(ss_n, src_local, 0), lanes)
+        pay_n = pay_n.at[idx_pn].min(jnp.where(ss_n, 0, ident))
+        pend_n = pend_n.at[idx_pn].max(ss_n)
+        idx_pd = jnp.where(ss_d, src_dpos, 0)
+        pay_d = pay_d.at[:, idx_pd, lanes].min(
+            jnp.where(ss_d, 0, ident)[None, :])
+        pend_d = pend_d.at[:, idx_pd, lanes].max(ss_d[None, :])
+        extra = dict(
+            payload_n=pay_n, payload_d=pay_d,
+            pay_pending_n=pend_n, pay_pending_d=pend_d,
+            pay_bucket=jnp.where(lane_mask[None, :], pay_delta,
+                                 state.pay_bucket),
+            pay_delta=jnp.where(lane_mask[None, :], pay_delta,
+                                state.pay_delta),
+            pay_weighted=jnp.where(lane_mask[None, :], pay_weighted,
+                                   state.pay_weighted),
+        )
+
     return dataclasses.replace(
         state,
         level_n=level_n,
@@ -854,6 +1209,7 @@ def _reseed_lanes_impl(
         target_n=target_n,
         target_d=target_d,
         done=state.done & ~jnp.any(lane_mask),
+        **extra,
     )
 
 
@@ -1065,4 +1421,29 @@ def gather_reachable_multi(
     :func:`gather_levels_multi`: the state's bool visited words unpack
     directly, with no base-iteration arithmetic."""
     out, _ = _gather_lane_columns(pg, state, lanes)
+    return out
+
+
+def gather_payload_multi(
+    pg: PartitionedGraph, state: MSBFSState, lanes=None
+) -> np.ndarray:
+    """Assemble per-lane global payload columns: [k, n] int32.
+
+    The payload-plane sibling of :func:`gather_levels_multi`. Payload
+    values are already absolute (SSSP distances from the seed's 0,
+    component labels = global ids), so unlike levels there is no
+    base-iteration subtraction; PAY_IDENT marks unreached vertices."""
+    layout = PartitionLayout(pg.n, pg.p_rank, pg.p_gpu)
+    pay_n = np.asarray(state.payload_n)           # [p, nl, Wp]
+    pay_d = np.asarray(state.payload_d)[0]        # [d, Wp]
+    if lanes is not None:
+        lanes = np.asarray(lanes)
+        pay_n = pay_n[..., lanes]
+        pay_d = pay_d[..., lanes]
+    vids = np.arange(pg.n, dtype=np.int64)
+    out = pay_n[layout.part_of(vids), layout.local_of(vids)]     # [n, k]
+    out = np.ascontiguousarray(out.T)                            # [k, n]
+    if pg.d:
+        dvids = np.asarray(pg.delegate_vids).reshape(-1)[: pg.d]
+        out[:, dvids] = pay_d[: pg.d].T
     return out

@@ -65,3 +65,68 @@ def traversed_edges(g: COOGraph, levels: np.ndarray) -> int:
     the undirected graph as m_component / 2)."""
     reached = levels[g.src] != INF_LEVEL
     return int(reached.sum()) // 2
+
+
+def dijkstra_levels(g: COOGraph, source: int) -> np.ndarray:
+    """Weighted-SSSP reference: Dijkstra over the synthetic symmetric
+    edge-weight hash (:mod:`repro.core.weights`), so the numpy oracle and
+    the compiled min-plus sweep share one weight definition. Returns int32
+    distances with INF_LEVEL for unreached (the WEIGHTED_SSSP oracle)."""
+    import heapq
+
+    from .weights import edge_weights
+
+    offsets, dst = csr_from_coo(g)
+    src_ids = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(offsets))
+    wts = edge_weights(src_ids, dst)
+    dist = np.full(g.n, INF_LEVEL, dtype=np.int32)
+    dist[source] = 0
+    heap = [(0, int(source))]
+    while heap:
+        d, v = heapq.heappop(heap)
+        if d > dist[v]:
+            continue
+        for e in range(offsets[v], offsets[v + 1]):
+            u, nd = int(dst[e]), d + int(wts[e])
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(heap, (nd, u))
+    return dist
+
+
+def component_labels(g: COOGraph) -> np.ndarray:
+    """Connected-components reference via union-find: int32 [n] where each
+    vertex carries the *minimum vertex id* of its component -- the same
+    canonical label min-label propagation converges to (the COMPONENTS
+    oracle)."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(v):
+        root = v
+        while parent[root] != root:
+            root = parent[root]
+        while parent[v] != root:            # path compression
+            parent[v], v = root, parent[v]
+        return root
+
+    for a, b in zip(g.src, g.dst):
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            if ra < rb:                      # union by min id keeps the
+                parent[rb] = ra              # root the canonical label
+            else:
+                parent[ra] = rb
+    return np.array([find(v) for v in range(g.n)], dtype=np.int32)
+
+
+def component_mask(g: COOGraph, source: int) -> np.ndarray:
+    """Bool [n]: the source's connected component (COMPONENTS answer)."""
+    labels = component_labels(g)
+    return labels == labels[int(source)]
+
+
+def khop_nodes(g: COOGraph, source: int, k: int) -> np.ndarray:
+    """Sorted node ids within ``k`` hops of ``source`` (the KHOP_SAMPLE
+    oracle; the set the neighbor sampler's seed batch is drawn from)."""
+    levels = bfs_levels(g, source)
+    return np.nonzero(levels <= min(int(k), int(INF_LEVEL) - 1))[0].astype(np.int64)

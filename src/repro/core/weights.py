@@ -1,0 +1,50 @@
+"""Synthetic integer edge weights for the weighted-traversal query kinds.
+
+The weighted-SSSP lane payload needs per-edge weights, but the partitioned
+graph deliberately carries none (the paper's layout is topology-only and
+adding an [e_max] weight plane to every CSR would double the edge
+footprint). Instead weights are a *deterministic symmetric hash of the
+endpoint global ids*, computed on the fly:
+
+* inside the compiled sweep (``jnp`` -- the traced step hashes the edge's
+  endpoint gids right where the min-plus push needs the weight), and
+* inside the host-side Dijkstra oracle (``numpy``) -- bit-identical, so
+  oracle exactness pins the whole weighted pipeline including the hash.
+
+Symmetry (w(u,v) == w(v,u)) makes the weighted graph undirected like the
+symmetrized topology; the function below only combines the endpoints
+through symmetric reductions (sum and xor), so no min/max branch is
+needed. Weights are in ``[1, SSSP_WMAX]`` -- small positive integers, the
+regime delta-stepping (Buluc & Madduri, arXiv:1104.4518) targets.
+
+Everything here works on both numpy and jax arrays: only ndarray methods,
+operators, and ``np.uint32`` weak scalars are used, which trace cleanly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# weight range and the delta-stepping bucket width used by the serving
+# layer; delta divides the range so each bucket holds a few weight steps
+SSSP_WMAX = 15
+SSSP_DELTA = 4
+
+
+def edge_weights(u, v):
+    """Symmetric deterministic weight in ``[1, SSSP_WMAX]`` per edge.
+
+    ``u`` / ``v`` are integer arrays (numpy or traced jax) of endpoint
+    *global* vertex ids; returns int32 of the broadcast shape.
+    """
+    a = u.astype(np.uint32)
+    b = v.astype(np.uint32)
+    with np.errstate(over="ignore"):   # uint32 wraparound is the hash
+        s = a + b                      # symmetric combiners: order-free hash
+        x = a ^ b
+        h = s * np.uint32(0x9E3779B1) ^ x * np.uint32(0x85EBCA77)
+        h = h ^ (h >> 15)
+        h = h * np.uint32(0x2C1B3C6D)
+        h = h ^ (h >> 12)
+        h = h * np.uint32(0x297A2D39)
+        h = h ^ (h >> 15)
+        return (h % np.uint32(SSSP_WMAX)).astype(np.int32) + 1

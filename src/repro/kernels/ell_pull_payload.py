@@ -1,0 +1,77 @@
+"""Per-lane payload (min-plus) pull kernel over ELL-padded parent lists.
+
+The payload sibling of :mod:`repro.kernels.ell_pull_multi` for the
+``min_plus`` combine spec: instead of OR-ing the parents' uint32 lane
+words, each row takes the elementwise *minimum* over its parents of
+``payload[parent] + weight(edge)`` -- the weighted-SSSP relaxation (and,
+with zero weights, min-label propagation for components):
+
+    out[r, q] = min_{k: parents[r,k] >= 0} (payload[parents[r,k], q] + w[r,k])
+
+masked to the identity (+inf) where ``active[r, q] == 0``. Same tiling as
+ell_pull_multi: one program per tile of TR rows, the payload table
+resident in VMEM, the min across the static row width an unrolled
+min-chain on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.comm import COMBINE_SPECS
+
+DEFAULT_TILE_ROWS = 256
+_IDENT = COMBINE_SPECS["min_plus"].identity
+
+
+def _kernel(parents_ref, payload_ref, weights_ref, active_ref, out_ref):
+    cols = parents_ref[...]                     # [TR, K] int32, -1 padded
+    table = payload_ref[...]                    # [N, W] int32 payloads
+    wts = weights_ref[...]                      # [TR, K] int32 edge weights
+    active = active_ref[...]                    # [TR, W] int32 lane mask
+    valid = cols >= 0
+    safe = jnp.where(valid, cols, 0)
+    vals = jnp.take(table, safe, axis=0) + wts[..., None]   # [TR, K, W]
+    vals = jnp.where(valid[..., None], vals, jnp.int32(_IDENT))
+    acc = jnp.full(active.shape, _IDENT, jnp.int32)
+    for k in range(vals.shape[1]):              # unrolled min-plus chain
+        acc = jnp.minimum(acc, vals[:, k])
+    out_ref[...] = jnp.where(active != 0, acc, jnp.int32(_IDENT))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def ell_pull_payload(
+    parents: jnp.ndarray,        # [R, K] int32, -1 padded
+    payload: jnp.ndarray,        # [N, W] int32: per-vertex lane payloads
+    weights: jnp.ndarray,        # [R, K] int32: per-parent edge weights
+    active: jnp.ndarray,         # [R, W] int32: lanes each row still wants
+    *,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r, k = parents.shape
+    w = payload.shape[-1]
+    if k == 0:  # no parent columns: pallas rejects zero-width blocks
+        return jnp.full((r, w), _IDENT, jnp.int32)
+    r_pad = -(-r // tile_rows) * tile_rows
+    parents = jnp.pad(parents, ((0, r_pad - r), (0, 0)), constant_values=-1)
+    weights = jnp.pad(weights, ((0, r_pad - r), (0, 0)))
+    active = jnp.pad(active, ((0, r_pad - r), (0, 0)))
+    grid = (r_pad // tile_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec(payload.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, w), jnp.int32),
+        interpret=interpret,
+    )(parents, payload, weights, active)
+    return out[:r]

@@ -43,6 +43,27 @@ def _kernel_fold(parts_ref, prev_ref, or_ref):
     or_ref[...] = combined
 
 
+def _kernel_min(parts_ref, prev_ref, min_ref, impcnt_ref):
+    """Payload (min-combine) variant: elementwise min of K partial payload
+    planes + a 0/1 improved flag per element (the payload analog of the
+    popcount of newly set bits)."""
+    parts = parts_ref[...]          # [K, TW] int32
+    prev = prev_ref[...]            # [TW] int32
+    combined = prev
+    for k in range(parts.shape[0]):
+        combined = jnp.minimum(combined, parts[k])
+    min_ref[...] = combined
+    impcnt_ref[...] = (combined < prev).astype(jnp.int32)
+
+
+def _kernel_min_fold(parts_ref, prev_ref, min_ref):
+    parts = parts_ref[...]
+    combined = prev_ref[...]
+    for k in range(parts.shape[0]):
+        combined = jnp.minimum(combined, parts[k])
+    min_ref[...] = combined
+
+
 @functools.partial(jax.jit,
                    static_argnames=("tile_words", "interpret", "with_count"))
 def mask_reduce(
@@ -92,3 +113,56 @@ def mask_reduce(
         interpret=interpret,
     )(partials, prev)
     return or_mask[:nw], newcnt[:nw]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_words", "interpret", "with_count"))
+def payload_min_fold(
+    partials: jnp.ndarray,   # [K, NW] int32 -- per-peer payload partials
+    prev: jnp.ndarray,       # [NW] int32 -- payload plane being folded into
+    *,
+    tile_words: int = 512,
+    interpret: bool = True,
+    with_count: bool = True,
+):
+    """Returns (min_combined [NW] int32, improved [NW] int32 0/1).
+
+    The min-combine (payload) sibling of :func:`mask_reduce`: the local
+    fold of a gathered delegate *payload* combine (``min_plus`` spec) is a
+    K-way elementwise min instead of an OR, and "newly set bits" becomes
+    "payload improved here". ``with_count=False`` skips the improved-flag
+    pass (second element ``None``) -- the comm-layer local-fold shape."""
+    k, nw = partials.shape
+    nw_pad = -(-nw // tile_words) * tile_words
+    partials = jnp.pad(partials, ((0, 0), (0, nw_pad - nw)))
+    prev = jnp.pad(prev, (0, nw_pad - nw))
+    grid = (nw_pad // tile_words,)
+    in_specs = [
+        pl.BlockSpec((k, tile_words), lambda i: (0, i)),
+        pl.BlockSpec((tile_words,), lambda i: (i,)),
+    ]
+    if not with_count:
+        combined = pl.pallas_call(
+            _kernel_min_fold,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((tile_words,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((nw_pad,), jnp.int32),
+            interpret=interpret,
+        )(partials, prev)
+        return combined[:nw], None
+    combined, improved = pl.pallas_call(
+        _kernel_min,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tile_words,), lambda i: (i,)),
+            pl.BlockSpec((tile_words,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nw_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((nw_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(partials, prev)
+    return combined[:nw], improved[:nw]

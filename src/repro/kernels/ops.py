@@ -13,7 +13,9 @@ from . import ref
 from .cin_fused import cin_fused as _cin_pallas
 from .ell_pull import ell_pull as _ell_pallas
 from .ell_pull_multi import ell_pull_multi as _ell_multi_pallas
+from .ell_pull_payload import ell_pull_payload as _ell_payload_pallas
 from .mask_reduce import mask_reduce as _mask_pallas
+from .mask_reduce import payload_min_fold as _payfold_pallas
 from .segment_bag import segment_bag as _bag_pallas
 
 
@@ -59,3 +61,20 @@ def mask_reduce(partials, prev, *, force: str | None = None,
         return _mask_pallas(partials, prev, with_count=with_count,
                             interpret=jax.default_backend() != "tpu", **kw)
     return ref.mask_reduce_ref(partials, prev, with_count=with_count)
+
+
+def ell_pull_payload(parents, payload, weights, active, *,
+                     force: str | None = None, **kw):
+    if _use_pallas(force):
+        return _ell_payload_pallas(parents, payload, weights, active,
+                                   interpret=jax.default_backend() != "tpu",
+                                   **kw)
+    return ref.ell_pull_payload_ref(parents, payload, weights, active)
+
+
+def payload_min_fold(partials, prev, *, force: str | None = None,
+                     with_count: bool = True, **kw):
+    if _use_pallas(force):
+        return _payfold_pallas(partials, prev, with_count=with_count,
+                               interpret=jax.default_backend() != "tpu", **kw)
+    return ref.payload_min_fold_ref(partials, prev, with_count=with_count)

@@ -26,6 +26,20 @@ def ell_pull_multi_ref(parents, frontier_words, active_words):
     return acc & active_words
 
 
+def ell_pull_payload_ref(parents, payload, weights, active):
+    """Min-plus pull: per row, min over parents of payload + edge weight,
+    masked to the combine identity (+inf) where ``active == 0``."""
+    ident = jnp.int32(2 ** 30)       # COMBINE_SPECS["min_plus"].identity
+    valid = parents >= 0
+    safe = jnp.where(valid, parents, 0)
+    vals = payload[safe] + weights[..., None]             # [R, K, W]
+    vals = jnp.where(valid[..., None], vals, ident)
+    acc = jnp.full(active.shape, ident, jnp.int32)
+    for k in range(vals.shape[1]):
+        acc = jnp.minimum(acc, vals[:, k])
+    return jnp.where(active != 0, acc, ident)
+
+
 def segment_bag_ref(table, indices, weights=None):
     b, l = indices.shape
     if weights is None:
@@ -42,6 +56,19 @@ def cin_fused_ref(x0, xk, w):
     outer = jnp.einsum("bid,bjd->bijd", x0, xk)
     b, f0, fk, d = outer.shape
     return jnp.einsum("hf,bfd->bhd", w, outer.reshape(b, f0 * fk, d))
+
+
+def payload_min_fold_ref(partials, prev, with_count: bool = True):
+    """Traceable oracle of the payload (min-combine) fold: K-way
+    elementwise min into ``prev`` + a 0/1 improved flag per element. Also
+    runs inside jitted traversal steps as the local min fold of the
+    payload delegate combine (``CommConfig(local_fold="ref")``)."""
+    combined = prev
+    for k in range(partials.shape[0]):
+        combined = jnp.minimum(combined, partials[k])
+    if not with_count:
+        return combined, None
+    return combined, (combined < prev).astype(jnp.int32)
 
 
 def mask_reduce_ref(partials, prev, with_count: bool = True):

@@ -18,14 +18,15 @@ from .engine import BFSServeEngine, ServeStats, default_graph_id
 from .frontend import (SLO_CLASSES, SLO_LATENCY, SLO_THROUGHPUT,
                        QuotaExceeded, ServeFrontend, StreamSession,
                        TenantStats)
-from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
-                      oracle_check, unpack_result, warm_queries)
+from .queries import (MAX_TARGETS, PAYLOAD_KINDS, Query, QueryKind,
+                      QueryValidationError, as_query, dedupe, oracle_check,
+                      unpack_result, warm_queries)
 
 __all__ = [
     "BFSServeEngine", "LRUCache", "LaneAssignment", "LaneScheduler",
-    "MAX_TARGETS", "Query", "QueryBatcher", "QueryKind", "QuotaExceeded",
-    "SLO_CLASSES", "SLO_LATENCY", "SLO_THROUGHPUT", "ServeFrontend",
-    "ServeStats", "StreamSession", "TenantStats", "as_query",
-    "default_graph_id", "dedupe", "oracle_check", "pack_sources",
-    "unpack_result", "warm_queries",
+    "MAX_TARGETS", "PAYLOAD_KINDS", "Query", "QueryBatcher", "QueryKind",
+    "QueryValidationError", "QuotaExceeded", "SLO_CLASSES", "SLO_LATENCY",
+    "SLO_THROUGHPUT", "ServeFrontend", "ServeStats", "StreamSession",
+    "TenantStats", "as_query", "default_graph_id", "dedupe", "oracle_check",
+    "pack_sources", "unpack_result", "warm_queries",
 ]

@@ -52,13 +52,20 @@ import numpy as np
 from repro.core import bfs as B, comm as C, engine as E, msbfs as M
 from repro.core.partition import partition_graph
 from repro.core.types import COOGraph, PartitionLayout, PartitionedGraph
+from repro.core.weights import SSSP_DELTA
 from repro.obs import (BYTES_BUCKETS, NULL_OBS, RATIO_BUCKETS, Observability,
                        as_profiler, export_shard_metrics, harvest_telemetry)
 
 from .batcher import LaneScheduler
 from .cache import LRUCache
-from .queries import (MAX_TARGETS, Query, QueryKind, as_query, dedupe,
-                      unpack_result)
+from .queries import (MAX_TARGETS, PAYLOAD_KINDS, Query, QueryKind, as_query,
+                      dedupe, unpack_result)
+
+# max_iters stretch factor for payload sessions: weighted distances run up
+# to SSSP_WMAX x the hop depth, and delta-stepping revisits a vertex once
+# per improving bucket, so the sweep budget scales well past the bit
+# diameter bound.
+PAYLOAD_ITERS_FACTOR = 6
 
 
 def default_graph_id(pg: PartitionedGraph) -> str:
@@ -157,6 +164,8 @@ class ServeStats:
     early_stops_by_kind: dict = field(default_factory=dict)
     wire_delegate_bytes: int = 0
     wire_nn_bytes: int = 0
+    wire_pay_delegate_bytes: int = 0   # payload-plane delegate combine
+    wire_pay_nn_bytes: int = 0         # payload-plane nn exchange
     nn_sparse_sweeps: int = 0
     nn_overflow: int = 0
 
@@ -166,7 +175,8 @@ class ServeStats:
 
     @property
     def wire_bytes_total(self) -> int:
-        return self.wire_delegate_bytes + self.wire_nn_bytes
+        return (self.wire_delegate_bytes + self.wire_nn_bytes
+                + self.wire_pay_delegate_bytes + self.wire_pay_nn_bytes)
 
     def note_kind(self, kind: QueryKind) -> None:
         self.kind_counts[kind.value] = self.kind_counts.get(kind.value, 0) + 1
@@ -181,6 +191,11 @@ class ServeStats:
         runs and refill drain sessions alike)."""
         self.wire_delegate_bytes += int(np.asarray(state.wire_delegate).sum())
         self.wire_nn_bytes += int(np.asarray(state.wire_nn).sum())
+        # zero-width [p, 0] buffers on bit-only states sum to exactly 0, so
+        # these counters stay untouched outside payload sessions
+        self.wire_pay_delegate_bytes += int(
+            np.asarray(state.wire_pay_delegate).sum())
+        self.wire_pay_nn_bytes += int(np.asarray(state.wire_pay_nn).sum())
         # the format flag is a global decision (replicated): row 0 only;
         # overflow is per-device send-side drops: sum every partition
         self.nn_sparse_sweeps += int(np.asarray(state.nn_sparse)[0].sum())
@@ -403,6 +418,13 @@ class BFSServeEngine:
         self.reuse_components = bool(reuse_components)
         self._comp_id = np.full(pg.n, -1, dtype=np.int32)
         self._comp_masks: dict[int, np.ndarray] = {}
+        # full component-label map ([n] int32, min vertex id per component)
+        # once any COMPONENTS traversal finishes: every later COMPONENTS
+        # query -- and every reachability mask -- derives from it without a
+        # traversal (the component memo the new kind reuses and feeds)
+        self._comp_labels: np.ndarray | None = None
+        # lazily built per-partition global-id planes for payload reseeds
+        self._gid_planes: tuple | None = None
         self.pgv = B.device_view(pg)
         self.plan = E.build_exchange_plan(pg)
         if graph_id is None:
@@ -498,14 +520,25 @@ class BFSServeEngine:
         step = lambda pgv, plan, st: M.msbfs_step_emulated(pgv, plan, st, cfg)
         return run, step
 
+    def _payload_cfg(self, cfg: M.MSBFSConfig) -> M.MSBFSConfig:
+        """The payload=True sibling of ``cfg``: carries the [n_local, W]
+        int32 payload plane and stretches the sweep budget (weighted
+        distances and bucket revisits outrun the bit diameter bound)."""
+        return _dc_replace(cfg, payload=True,
+                           max_iters=cfg.max_iters * PAYLOAD_ITERS_FACTOR)
+
     def _session_cfg(self, queries) -> M.MSBFSConfig:
         """The static msBFS variant this batch/session compiles to."""
         if self._reach_fast(queries):
             return _dc_replace(self.cfg, track_levels=False,
                                enable_targets=False)
         if any(q.kind is QueryKind.MULTI_TARGET for q in queries):
-            return self.cfg
-        return _dc_replace(self.cfg, enable_targets=False)
+            cfg = self.cfg
+        else:
+            cfg = _dc_replace(self.cfg, enable_targets=False)
+        if any(q.kind in PAYLOAD_KINDS for q in queries):
+            cfg = self._payload_cfg(cfg)
+        return cfg
 
     def _runner_pair(self, cfg: M.MSBFSConfig) -> tuple:
         key = ("run", self._shape_key, cfg)
@@ -534,6 +567,22 @@ class BFSServeEngine:
     def _reach_fast(self, queries) -> bool:
         return (self.specialize_reachability
                 and all(q.kind is QueryKind.REACHABILITY for q in queries))
+
+    def _gather_rows(self, cfg: M.MSBFSConfig, reach_fast: bool, state,
+                     lanes, items) -> list:
+        """Kind-aware per-lane result rows for ``lanes`` (aligned with the
+        typed ``items``): payload kinds read their payload-plane column,
+        everything else the level (or packed-reach) columns -- at most one
+        gather per plane leaves the device."""
+        if reach_fast:
+            return list(M.gather_reachable_multi(self.pg, state, lanes=lanes))
+        pay = [cfg.payload and as_query(it).kind in PAYLOAD_KINDS
+               for it in items]
+        rows = (M.gather_levels_multi(self.pg, state, lanes=lanes)
+                if not all(pay) else None)
+        prows = (M.gather_payload_multi(self.pg, state, lanes=lanes)
+                 if any(pay) else None)
+        return [prows[i] if pp else rows[i] for i, pp in enumerate(pay)]
 
     # -- observability hooks ------------------------------------------------
     def _record_latency(self, kind: QueryKind, dt: float) -> None:
@@ -586,18 +635,41 @@ class BFSServeEngine:
             ids.extend(q.targets or ())
         M.validate_sources(self.pg, ids)
 
-    # -- per-component reachability reuse -----------------------------------
+    # -- per-component reuse (reachability masks + COMPONENTS labels) -------
     def _component_of(self, q: Query):
-        """The memoized reachable mask covering ``q``, or None."""
-        if not (self.reuse_components
-                and q.kind is QueryKind.REACHABILITY):
+        """The memoized component answer covering ``q``, or None.
+
+        REACHABILITY: the source's reachable mask, from a previously
+        registered mask or materialized (and registered) from the full
+        label map a COMPONENTS traversal left behind. COMPONENTS: the full
+        ``[n]`` label map itself, once any traversal computed it -- the one
+        answer every COMPONENTS query shares."""
+        if not self.reuse_components:
+            return None
+        if q.kind is QueryKind.COMPONENTS:
+            return self._comp_labels
+        if q.kind is not QueryKind.REACHABILITY:
             return None
         cid = self._comp_id[q.source]
-        return None if cid < 0 else self._comp_masks[cid]
+        if cid >= 0:
+            return self._comp_masks[cid]
+        if self._comp_labels is not None:
+            mask = self._comp_labels == self._comp_labels[q.source]
+            cid = len(self._comp_masks)
+            self._comp_masks[cid] = mask
+            self._comp_id[mask] = cid
+            return mask
+        return None
 
     def _register_component(self, q: Query, result) -> None:
-        """Record a served reachability mask as its source's component."""
-        if (self.reuse_components and q.kind is QueryKind.REACHABILITY
+        """Record a served reachability mask as its source's component, or
+        a served COMPONENTS label map as the whole-graph component memo."""
+        if not self.reuse_components:
+            return
+        if q.kind is QueryKind.COMPONENTS:
+            if self._comp_labels is None:
+                self._comp_labels = np.array(result)
+        elif (q.kind is QueryKind.REACHABILITY
                 and self._comp_id[q.source] < 0):
             cid = len(self._comp_masks)
             self._comp_masks[cid] = np.array(result)
@@ -629,14 +701,13 @@ class BFSServeEngine:
             st = self._put(M.init_multi_state(
                 self.pg, [q.source for q in queries], cfg,
                 depth_caps=[q.depth_cap for q in queries],
-                targets=[q.targets for q in queries]))
+                targets=[q.targets for q in queries],
+                payload_modes=[q.payload_mode for q in queries]))
             out = self.profiler.timed("batch", run_full,
                                       self.pgv, self.plan, st)
             with self.obs.trace.span("serve.gather", lanes=len(queries)):
-                if reach_fast:
-                    rows = M.gather_reachable_multi(self.pg, out)
-                else:
-                    rows = M.gather_levels_multi(self.pg, out)
+                rows = self._gather_rows(cfg, reach_fast, out,
+                                         np.arange(len(queries)), queries)
             if self.obs.enabled:
                 # host-side introspection only (the run already finished):
                 # never changes the traversal schedule or any counter
@@ -656,9 +727,30 @@ class BFSServeEngine:
                 for i, q in enumerate(queries)}
 
     # -- refill path --------------------------------------------------------
-    def _seed_descriptors(self, assignments):
+    def _pay_gids(self) -> tuple:
+        """Per-partition global-id planes for payload reseeds: ``gid_n``
+        [p, n_local] int32 with the combine identity at invalid slots and
+        ``gid_d`` [max(d, 1)] int32 with the identity at padding -- the
+        host-side constants ``msbfs.reseed_lanes`` seeds components lanes
+        from (identity slots stay out of the worklist)."""
+        if self._gid_planes is None:
+            pg = self.pg
+            p, nl = pg.p, pg.n_local
+            gid_n = np.full((p, nl), M.PAY_IDENT, dtype=np.int32)
+            valid = np.asarray(pg.normal_valid)
+            for k in range(p):
+                gids = self._layout.global_of(np.full(nl, k), np.arange(nl))
+                gid_n[k, valid[k]] = gids[valid[k]].astype(np.int32)
+            gid_d = np.full((max(pg.d, 1),), M.PAY_IDENT, dtype=np.int32)
+            gid_d[: pg.d] = self._dvids.astype(np.int32)
+            self._gid_planes = (gid_n, gid_d)
+        return self._gid_planes
+
+    def _seed_descriptors(self, assignments, payload: bool = False):
         """Host-side lane seed coordinates + typed-query parameters for
-        ``msbfs.reseed_lanes``."""
+        ``msbfs.reseed_lanes``. ``payload=True`` (payload sessions only --
+        the reseed scatters need real-width payload planes) appends the
+        per-lane payload descriptors and the global-id seed planes."""
         w, t = self.cfg.n_queries, MAX_TARGETS
         mask = np.zeros(w, dtype=bool)
         part = np.zeros(w, dtype=np.int32)
@@ -671,6 +763,10 @@ class BFSServeEngine:
         tdpos = np.zeros((w, t), dtype=np.int32)
         tisd = np.zeros((w, t), dtype=bool)
         tvalid = np.zeros((w, t), dtype=bool)
+        play = np.zeros(w, dtype=bool)
+        pseed_all = np.zeros(w, dtype=bool)
+        pweighted = np.zeros(w, dtype=bool)
+        pdelta = np.full(w, M.PAY_IDENT, dtype=np.int32)
         for a in assignments:
             mask[a.lane] = True
             (isd[a.lane], part[a.lane], local[a.lane],
@@ -684,8 +780,20 @@ class BFSServeEngine:
                  tdpos[a.lane, j]) = M.locate_source(
                      self.pg, self._layout, self._dvids, int(tgt))
                 tvalid[a.lane, j] = True
-        return (mask, part, local, dpos, isd, cap,
+            mode = q.payload_mode
+            if mode is not None:
+                play[a.lane] = True
+                if mode == "sssp":
+                    pweighted[a.lane] = True
+                    pdelta[a.lane] = np.int32(SSSP_DELTA)
+                else:                       # components: INF bucket = plain
+                    pseed_all[a.lane] = True  # min-label propagation
+        base = (mask, part, local, dpos, isd, cap,
                 tpart, tlocal, tdpos, tisd, tvalid)
+        if not payload:
+            return base
+        gid_n, gid_d = self._pay_gids()
+        return base + (play, pseed_all, pweighted, pdelta, gid_n, gid_d)
 
     def run_refill(self, sources: np.ndarray) -> dict:
         """Classic full-levels drain (kept for direct callers): dedups
@@ -747,7 +855,15 @@ class BFSServeEngine:
         w = self.cfg.n_queries
         reach_fast = self._reach_fast(queries)
         if stream and not reach_fast:
+            # open-ended feed: compile the fully-general variant so later
+            # MULTI_TARGET submissions never retrace. The payload plane is
+            # opt-in at open time (it changes the compiled state shape):
+            # an opening set with a payload kind carries it for the whole
+            # session, a bit-only opening keeps the bit-identical schedule
+            # (later payload submissions raise; drain_stream first).
             cfg = self.cfg
+            if any(q.kind in PAYLOAD_KINDS for q in queries):
+                cfg = self._payload_cfg(cfg)
         else:
             cfg = self._session_cfg(queries)
         with self.obs.trace.span("serve.session.open", n=len(queries),
@@ -774,7 +890,7 @@ class BFSServeEngine:
         return sess
 
     def _reseed(self, sess: _Session, assignments):
-        desc = self._seed_descriptors(assignments)
+        desc = self._seed_descriptors(assignments, payload=sess.cfg.payload)
         reseed = (M.reseed_lanes_donated if self._donate and sess.exclusive
                   else M.reseed_lanes)
         return reseed(sess.state, *map(jnp.asarray, desc))
@@ -821,6 +937,7 @@ class BFSServeEngine:
         if not finished.any():
             return False, None
         fin_lanes = np.nonzero(finished)[0]
+        fin_items = [sched.lane_item[int(q)] for q in fin_lanes]
         pre_state = sess.state
         with self.obs.trace.span("serve.boundary", retired=len(fin_lanes),
                                  defer=defer):
@@ -828,12 +945,8 @@ class BFSServeEngine:
                 # only the retired lanes' columns leave the device: [k, n]
                 with self.obs.trace.span("serve.gather",
                                          lanes=len(fin_lanes)):
-                    if sess.reach_fast:
-                        rows = M.gather_reachable_multi(self.pg, pre_state,
-                                                        lanes=fin_lanes)
-                    else:
-                        rows = M.gather_levels_multi(self.pg, pre_state,
-                                                     lanes=fin_lanes)
+                    rows = self._gather_rows(sess.cfg, sess.reach_fast,
+                                             pre_state, fin_lanes, fin_items)
             stops = np.asarray(pre_state.lane_stop)[0]
             fins = []
             for i, q in enumerate(fin_lanes):
@@ -886,12 +999,8 @@ class BFSServeEngine:
         pre_state, fin_lanes, fins = deferred
         with self.obs.trace.span("serve.gather.deferred",
                                  lanes=len(fin_lanes)):
-            if sess.reach_fast:
-                rows = M.gather_reachable_multi(self.pg, pre_state,
-                                                lanes=fin_lanes)
-            else:
-                rows = M.gather_levels_multi(self.pg, pre_state,
-                                             lanes=fin_lanes)
+            rows = self._gather_rows(sess.cfg, sess.reach_fast,
+                                     pre_state, fin_lanes, fins)
             for i, item in enumerate(fins):
                 sess.complete(item, unpack_result(
                     item, rows[i], packed_reach=sess.reach_fast))
@@ -1106,6 +1215,12 @@ class BFSServeEngine:
                 raise ValueError(
                     "stream session was compiled without target support; "
                     "drain_stream() before submitting MULTI_TARGET queries")
+            if not sess.cfg.payload and any(
+                    q.kind in PAYLOAD_KINDS for q in qs):
+                raise ValueError(
+                    "stream session was compiled without the payload "
+                    "plane; drain_stream() before submitting WEIGHTED_SSSP "
+                    "or COMPONENTS queries")
         else:
             self._stream = self._open_session(qs, stream=True)
             sess = self._stream
@@ -1280,15 +1395,14 @@ class BFSServeEngine:
                                       kind=q.kind.value)
                 results[q] = hit
                 continue
-            if self.reuse_components and q.kind is QueryKind.REACHABILITY:
-                cid = self._comp_id[q.source]
-                if cid >= 0:   # component already mapped: mask is the answer
-                    self.stats.component_hits += 1
-                    if obs.enabled:
-                        obs.trace.instant("serve.component.hit",
-                                          source=q.source)
-                    results[q] = np.array(self._comp_masks[cid])
-                    continue
+            memo = self._component_of(q)
+            if memo is not None:   # mapped component (or label map known)
+                self.stats.component_hits += 1
+                if obs.enabled:
+                    obs.trace.instant("serve.component.hit",
+                                      source=q.source)
+                results[q] = np.array(memo)
+                continue
             misses.append(q)
         if obs.enabled:
             obs.trace.instant("serve.submit_many", n=len(qs),
@@ -1349,28 +1463,46 @@ class BFSServeEngine:
     def query_one(self, source: int) -> np.ndarray:
         return self.query([source])[0]
 
-    def warmup(self, reachability: bool = False, targets: bool = False) -> None:
+    def sample_khop(self, source: int, k: int, sampler):
+        """Serve a ``KHOP_SAMPLE`` query and feed its node pool straight
+        into a :class:`repro.graphs.sampler.NeighborSampler`: the traversal
+        engine finds the k-hop seed pool (cached under the typed key like
+        any other query), the sampler draws the fanout-capped minibatch --
+        one traversal substrate under both the serving and GNN stacks."""
+        pool = self.submit(Query(int(source), kind=QueryKind.KHOP_SAMPLE,
+                                 max_depth=int(k)))
+        return sampler.sample(pool)
+
+    def warmup(self, reachability: bool = False, targets: bool = False,
+               payload: bool = False) -> None:
         """Compile the runners for the configured scheduling mode (vertex 0
         as a throwaway source). Refill engines only drive the single-step
         runner, so the fused while-loop compile is skipped there (it still
         compiles lazily if ``run_batch`` is called directly).
 
         By default only the target-free levels variant (the common serving
-        case) is compiled; ``targets=True`` adds the multi-target variant
-        and ``reachability=True`` the levels-free reachability one."""
+        case) is compiled; ``targets=True`` adds the multi-target variant,
+        ``reachability=True`` the levels-free reachability one, and
+        ``payload=True`` the payload-plane (WEIGHTED_SSSP / COMPONENTS)
+        one."""
         cfgs = [_dc_replace(self.cfg, enable_targets=False)]
         if targets:
             cfgs.append(self.cfg)
         if reachability and self.specialize_reachability:
             cfgs.append(_dc_replace(self.cfg, track_levels=False,
                                     enable_targets=False))
+        if payload:
+            cfgs.append(self._payload_cfg(
+                _dc_replace(self.cfg, enable_targets=False)))
+            if targets:        # mixed sessions carrying both planes
+                cfgs.append(self._payload_cfg(self.cfg))
         with self.obs.trace.span("serve.warmup", variants=len(cfgs)):
             for cfg in cfgs:
                 run_full, step_once = self._runner_pair(cfg)
                 st = self._put(M.init_multi_state(self.pg, [0], cfg))
                 if self.refill:
                     step_once(self.pgv, self.plan, st)
-                    desc = self._seed_descriptors([])
+                    desc = self._seed_descriptors([], payload=cfg.payload)
                     M.reseed_lanes(st, *map(jnp.asarray, desc))
                     if self.overlap:
                         # all-ones watch with only lane 0 active: the

@@ -15,10 +15,24 @@ within one lane batch, including mid-flight refill generations.
 | ``REACHABILITY``   | --              | frontier empties         | ``[n] bool`` reachable mask |
 | ``DISTANCE_LIMITED``| ``max_depth``  | depth cap folded into the lane_active word | ``[n] int32``, ``INF_LEVEL`` beyond the cap |
 | ``MULTI_TARGET``   | ``targets``     | retires the sweep the last target is hit | ``{target: depth}`` (``INF_LEVEL`` if unreached) |
+| ``WEIGHTED_SSSP``  | --              | payload worklist empties | ``[n] int32`` weighted distances (synthetic weights) |
+| ``COMPONENTS``     | --              | payload worklist empties | ``[n] int32`` component labels (min vertex id) |
+| ``KHOP_SAMPLE``    | ``k``           | depth cap folded into the lane_active word | ``[m] int64`` node ids within k hops (sampler seed pool) |
 
 A batch that is *homogeneously* ``REACHABILITY`` additionally compiles to
 the levels-free msBFS variant (``MSBFSConfig(track_levels=False)``): pure
 lane words end to end, no level scatter, no per-edge work counters.
+
+``WEIGHTED_SSSP`` and ``COMPONENTS`` are *payload* kinds: their lane
+carries the ``[n_local]`` int32 payload column of the min-plus / min
+combine spec (``core/comm`` ``COMBINE_SPECS``) instead of frontier bits --
+delta-stepping relaxation over the synthetic integer edge weights
+(``core/weights.py``) for SSSP, min-label propagation for components. A
+batch or refill session containing one compiles the ``payload=True`` msBFS
+variant; bit-only batches keep the byte-identical bit schedule.
+``KHOP_SAMPLE`` rides an ordinary bit lane with the depth cap set to
+``k``; its unpack emits the sorted node-id pool that seeds
+``graphs/sampler.py``'s :class:`NeighborSampler` batches.
 
 Cache identity is the full query descriptor: ``(graph_id, kind, params,
 source)`` -- a distance-limited answer can never shadow a full-levels
@@ -34,9 +48,12 @@ import numpy as np
 from repro.core.msbfs import NO_DEPTH_CAP  # noqa: F401  (re-exported)
 from repro.core.types import INF_LEVEL
 
-# Per-query target budget: pads the jitted reseed scatter to one static
-# [W, MAX_TARGETS] shape so mid-flight refill never retraces.
-MAX_TARGETS = 8
+
+class QueryValidationError(ValueError):
+    """A query descriptor violates a static serving limit (e.g. more
+    targets than ``Query.MAX_TARGETS``). Subclasses ``ValueError`` so
+    pre-existing callers catching that keep working; the message always
+    names the limit so a frontend can surface it to tenants verbatim."""
 
 
 class QueryKind(enum.Enum):
@@ -44,6 +61,15 @@ class QueryKind(enum.Enum):
     REACHABILITY = "reachability"
     DISTANCE_LIMITED = "distance_limited"
     MULTI_TARGET = "multi_target"
+    WEIGHTED_SSSP = "weighted_sssp"
+    COMPONENTS = "components"
+    KHOP_SAMPLE = "khop_sample"
+
+
+# The payload kinds ride the [n_local, W] int32 payload plane (min / min-
+# plus combine specs) instead of frontier bits; a batch containing one
+# compiles the payload=True msBFS variant.
+PAYLOAD_KINDS = frozenset({QueryKind.WEIGHTED_SSSP, QueryKind.COMPONENTS})
 
 
 @dataclass(frozen=True)
@@ -51,16 +77,22 @@ class Query:
     """One typed traversal query (hashable: doubles as its own dedup and
     cache identity, see :meth:`key`)."""
 
+    # Per-query target budget: pads the jitted reseed scatter to one static
+    # [W, MAX_TARGETS] shape so mid-flight refill never retraces. A class-
+    # level constant so frontends can surface the limit to tenants without
+    # importing serving internals (``Query.MAX_TARGETS``).
+    MAX_TARGETS = 8
+
     source: int
     kind: QueryKind = QueryKind.LEVELS
-    max_depth: int | None = None      # DISTANCE_LIMITED only
+    max_depth: int | None = None      # DISTANCE_LIMITED / KHOP_SAMPLE (= k)
     targets: tuple | None = None      # MULTI_TARGET only (canonicalized)
 
     def __post_init__(self):
         object.__setattr__(self, "source", int(self.source))
-        if self.kind is QueryKind.DISTANCE_LIMITED:
+        if self.kind in (QueryKind.DISTANCE_LIMITED, QueryKind.KHOP_SAMPLE):
             if self.max_depth is None or int(self.max_depth) < 0:
-                raise ValueError("DISTANCE_LIMITED needs max_depth >= 0")
+                raise ValueError(f"{self.kind.name} needs max_depth >= 0")
             object.__setattr__(self, "max_depth", int(self.max_depth))
         elif self.max_depth is not None:
             raise ValueError(f"{self.kind.name} takes no max_depth")
@@ -68,9 +100,10 @@ class Query:
             if not self.targets:
                 raise ValueError("MULTI_TARGET needs >= 1 target")
             tgts = tuple(sorted({int(t) for t in self.targets}))
-            if len(tgts) > MAX_TARGETS:
-                raise ValueError(
-                    f"{len(tgts)} targets > MAX_TARGETS={MAX_TARGETS}")
+            if len(tgts) > Query.MAX_TARGETS:
+                raise QueryValidationError(
+                    f"{len(tgts)} targets exceed the per-query limit "
+                    f"Query.MAX_TARGETS={Query.MAX_TARGETS}")
             object.__setattr__(self, "targets", tgts)
         elif self.targets is not None:
             raise ValueError(f"{self.kind.name} takes no targets")
@@ -80,6 +113,8 @@ class Query:
         """Canonical hashable parameter tuple (part of the cache key)."""
         if self.kind is QueryKind.DISTANCE_LIMITED:
             return ("max_depth", self.max_depth)
+        if self.kind is QueryKind.KHOP_SAMPLE:
+            return ("k", self.max_depth)
         if self.kind is QueryKind.MULTI_TARGET:
             return ("targets",) + self.targets
         return ()
@@ -87,12 +122,27 @@ class Query:
     @property
     def depth_cap(self):
         """Per-lane depth cap for the msBFS state (None = unlimited)."""
-        return self.max_depth if self.kind is QueryKind.DISTANCE_LIMITED else None
+        if self.kind in (QueryKind.DISTANCE_LIMITED, QueryKind.KHOP_SAMPLE):
+            return self.max_depth
+        return None
+
+    @property
+    def payload_mode(self):
+        """msBFS payload-lane seeding mode (None = ordinary bit lane)."""
+        if self.kind is QueryKind.WEIGHTED_SSSP:
+            return "sssp"
+        if self.kind is QueryKind.COMPONENTS:
+            return "components"
+        return None
 
     def key(self, graph_id: str) -> tuple:
         """Cache key: ``(graph_id, kind, params, source)`` -- kinds and
         parameterizations can never collide."""
         return (graph_id, self.kind.value, self.params, self.source)
+
+
+# Backwards-compatible module-level alias of the Query-level constant.
+MAX_TARGETS = Query.MAX_TARGETS
 
 
 def as_query(q) -> Query:
@@ -128,7 +178,8 @@ def warm_queries(sources, kinds=(QueryKind.LEVELS,
     """
     kinds = tuple(kinds)
     for k in kinds:
-        if k in (QueryKind.DISTANCE_LIMITED, QueryKind.MULTI_TARGET):
+        if k in (QueryKind.DISTANCE_LIMITED, QueryKind.MULTI_TARGET,
+                 QueryKind.KHOP_SAMPLE):
             raise ValueError(
                 f"{k.value} queries are parameterized and cannot be "
                 "pre-warmed; warm LEVELS/REACHABILITY instead")
@@ -154,6 +205,13 @@ def oracle_check(g, q: Query, answer) -> None:
     elif q.kind is QueryKind.MULTI_TARGET:
         assert answer == O.target_depths(g, q.source, q.targets), (
             q, answer)
+    elif q.kind is QueryKind.WEIGHTED_SSSP:
+        np.testing.assert_array_equal(answer, O.dijkstra_levels(g, q.source))
+    elif q.kind is QueryKind.COMPONENTS:
+        np.testing.assert_array_equal(answer, O.component_labels(g))
+    elif q.kind is QueryKind.KHOP_SAMPLE:
+        np.testing.assert_array_equal(
+            answer, O.khop_nodes(g, q.source, q.max_depth))
     else:  # pragma: no cover - new kinds must extend this dispatch
         raise NotImplementedError(q.kind)
 
@@ -169,4 +227,10 @@ def unpack_result(q: Query, row: np.ndarray, *, packed_reach: bool = False):
         return np.array(row if packed_reach else row != INF_LEVEL)
     if q.kind is QueryKind.MULTI_TARGET:
         return {t: int(row[t]) for t in q.targets}
-    return np.array(row)   # LEVELS / DISTANCE_LIMITED (already capped)
+    if q.kind is QueryKind.KHOP_SAMPLE:
+        # the k-hop seed pool: sorted node ids the depth-capped lane
+        # reached (the set NeighborSampler.sample draws its batch from)
+        return np.nonzero(row != INF_LEVEL)[0].astype(np.int64)
+    # LEVELS / DISTANCE_LIMITED (already capped) / WEIGHTED_SSSP distances
+    # / COMPONENTS labels -- all already-absolute [n] int32 columns
+    return np.array(row)

@@ -1,0 +1,354 @@
+"""Payload-plane query kinds vs their numpy oracles.
+
+Property tests (``tests/_hypo``) pin WEIGHTED_SSSP against Dijkstra over
+the synthetic edge-weight hash and COMPONENTS against union-find labels,
+emulated and (behind the >= 4 host-device gate) under a real shard_map
+mesh; a mixed session interleaves all seven query kinds through one refill
+lane word with bit-identical ServeStats across the sync and overlapped
+drivers; and the compile-away contract of ``MSBFSConfig(payload=False)``
+is pinned (zero-width planes, zero payload wire counters).
+"""
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, "tests")
+from _hypo import given, settings, st
+
+from repro.core import bfs as B, comm, engine as E, msbfs as M
+from repro.core.oracle import (bfs_levels, component_labels, component_mask,
+                               dijkstra_levels, khop_nodes, reachable_mask)
+from repro.core.weights import SSSP_WMAX, edge_weights
+from repro.graphs.rmat import pick_sources, rmat_graph
+from repro.graphs.sampler import NeighborSampler
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_test_mesh
+from repro.serve import BFSServeEngine, Query, QueryKind, QueryValidationError
+from repro.serve.queries import PAYLOAD_KINDS, oracle_check
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 host devices (run under the multi-device CI job)")
+
+
+# Property tests can't take pytest fixtures under the _hypo fallback
+# (the runner hides the signature), so the shared graph + engine are
+# module-level lazies -- same pattern as tests/test_msbfs_properties.py.
+GRAPH = rmat_graph(8, seed=11)
+_PROP_ENGINE = None
+
+
+def prop_engine():
+    global _PROP_ENGINE
+    if _PROP_ENGINE is None:
+        _PROP_ENGINE = BFSServeEngine(
+            GRAPH, th=32, p_rank=2, p_gpu=2,
+            cfg=M.MSBFSConfig(n_queries=4, max_iters=80),
+            cache_capacity=0, reuse_components=False)
+    return _PROP_ENGINE
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return GRAPH
+
+
+# ----------------------------------------------------------- oracle props
+@settings(max_examples=8, deadline=None)
+@given(src=st.integers(min_value=0, max_value=255))
+def test_sssp_matches_dijkstra(src):
+    """WEIGHTED_SSSP is exact against Dijkstra over the shared synthetic
+    weight hash for arbitrary sources (unreached stays INF_LEVEL)."""
+    ans = prop_engine().submit(Query(src, kind=QueryKind.WEIGHTED_SSSP))
+    np.testing.assert_array_equal(ans, dijkstra_levels(GRAPH, src))
+
+
+@settings(max_examples=8, deadline=None)
+@given(src=st.integers(min_value=0, max_value=255))
+def test_components_match_union_find(src):
+    """COMPONENTS labels are exact against union-find min-id labels from
+    any source lane (min-label propagation is source-independent)."""
+    ans = prop_engine().submit(Query(src, kind=QueryKind.COMPONENTS))
+    labels = component_labels(GRAPH)
+    np.testing.assert_array_equal(ans, labels)
+    np.testing.assert_array_equal(ans == ans[src], component_mask(GRAPH, src))
+
+
+@settings(max_examples=6, deadline=None)
+@given(src=st.integers(min_value=0, max_value=255),
+       k=st.integers(min_value=0, max_value=4))
+def test_khop_matches_oracle(src, k):
+    pool = prop_engine().submit(
+        Query(src, kind=QueryKind.KHOP_SAMPLE, max_depth=k))
+    np.testing.assert_array_equal(pool, khop_nodes(GRAPH, src, k))
+
+
+@settings(max_examples=6, deadline=None)
+@given(u=st.integers(min_value=0, max_value=10_000),
+       v=st.integers(min_value=0, max_value=10_000))
+def test_edge_weights_symmetric_bounded(u, v):
+    w = int(edge_weights(np.int64(u), np.int64(v)))
+    assert w == int(edge_weights(np.int64(v), np.int64(u)))
+    assert 1 <= w <= SSSP_WMAX
+
+
+# ------------------------------------------------- core-level mixed lanes
+def test_mixed_payload_and_bit_lanes_core(graph):
+    """One lane word mixing sssp / bit / components lanes straight on the
+    msBFS substrate (delegate source included): every lane oracle-exact,
+    payload wire counters live, bit lanes untouched."""
+    from repro.core.partition import partition_graph
+    pg = partition_graph(graph, th=16, p_rank=2, p_gpu=2)
+    plan = E.build_exchange_plan(pg)
+    pgv = B.device_view(pg)
+    srcs = list(map(int, pick_sources(graph, 3, seed=1)))
+    if pg.d:
+        srcs.append(int(np.asarray(pg.delegate_vids).reshape(-1)[0]))
+    else:  # pragma: no cover - th=16 on rmat8 always yields delegates
+        srcs.append(srcs[0])
+    cfg = M.MSBFSConfig(max_iters=240, n_queries=4, payload=True)
+    st_ = M.init_multi_state(pg, srcs, cfg,
+                             payload_modes=["sssp", None, "components",
+                                            "sssp"])
+    out = M.run_msbfs_emulated(pgv, plan, st_, cfg)
+    pay = M.gather_payload_multi(pg, out)
+    lev = M.gather_levels_multi(pg, out)
+    np.testing.assert_array_equal(pay[0], dijkstra_levels(graph, srcs[0]))
+    np.testing.assert_array_equal(lev[1], bfs_levels(graph, srcs[1]))
+    np.testing.assert_array_equal(pay[2], component_labels(graph))
+    np.testing.assert_array_equal(pay[3], dijkstra_levels(graph, srcs[3]))
+    assert int(np.asarray(out.nn_overflow).sum()) == 0
+    assert int(np.asarray(out.wire_pay_nn).sum()) > 0
+    assert int(np.asarray(out.wire_pay_delegate).sum()) > 0
+
+
+# ------------------------------------------------- serve-level seven kinds
+def seven_kinds(g, srcs):
+    return [
+        Query(srcs[0]),
+        Query(srcs[1], kind=QueryKind.REACHABILITY),
+        Query(srcs[2], kind=QueryKind.DISTANCE_LIMITED, max_depth=2),
+        Query(srcs[3], kind=QueryKind.MULTI_TARGET,
+              targets=(srcs[0], srcs[1])),
+        Query(srcs[4], kind=QueryKind.WEIGHTED_SSSP),
+        Query(srcs[5], kind=QueryKind.COMPONENTS),
+        Query(srcs[0], kind=QueryKind.KHOP_SAMPLE, max_depth=2),
+        Query(srcs[2], kind=QueryKind.WEIGHTED_SSSP),
+    ]
+
+
+def make_engine(g, **kw):
+    kw.setdefault("cfg", M.MSBFSConfig(n_queries=4, max_iters=80))
+    kw.setdefault("cache_capacity", 0)
+    kw.setdefault("refill", True)
+    return BFSServeEngine(g, th=32, p_rank=2, p_gpu=2, **kw)
+
+
+def test_mixed_seven_kind_refill_session(graph):
+    """All seven kinds interleaved through one refill drain: oracle-exact,
+    per-kind stats accounted, payload wire counters live."""
+    srcs = list(map(int, pick_sources(graph, 6, seed=3)))
+    qs = seven_kinds(graph, srcs)
+    eng = make_engine(graph)
+    for q, a in zip(qs, eng.submit_many(qs)):
+        oracle_check(graph, q, a)
+    assert set(eng.stats.kind_counts) == {k.value for k in QueryKind}
+    assert eng.stats.wire_pay_nn_bytes > 0
+    assert eng.stats.wire_pay_delegate_bytes > 0
+    assert eng.stats.refills > 0
+
+
+@pytest.mark.parametrize("sweep_block", [1, 4])
+def test_mixed_kind_stats_bit_identical_across_drivers(graph, sweep_block):
+    """The same seven-kind stream through the sync per-sweep driver and
+    the overlapped pipeline: identical answers, bit-identical ServeStats
+    (every counter except the fusion bookkeeping)."""
+    srcs = list(map(int, pick_sources(graph, 6, seed=3)))
+    qs = seven_kinds(graph, srcs)
+    eng_s = make_engine(graph)
+    eng_o = make_engine(graph, overlap=True, sweep_block=sweep_block)
+    for q, a in zip(qs, eng_s.submit_many(qs)):
+        oracle_check(graph, q, a)
+    for q, a in zip(qs, eng_o.submit_many(qs)):
+        oracle_check(graph, q, a)
+    ds, do = eng_s.stats.as_dict(), eng_o.stats.as_dict()
+    for key in ds:
+        if key == "sweep_blocks":
+            continue
+        assert ds[key] == do[key], f"{key}: sync {ds[key]} != overlap {do[key]}"
+    assert do["sweep_blocks"] > 0
+
+
+def test_batch_mode_mixed_kinds(graph):
+    """Batch scheduling (refill=False) serves payload kinds in the same
+    mixed lane word, cacheable under the typed keys."""
+    srcs = list(map(int, pick_sources(graph, 6, seed=3)))
+    qs = seven_kinds(graph, srcs)
+    eng = make_engine(graph, refill=False, cache_capacity=64)
+    for q, a in zip(qs, eng.submit_many(qs)):
+        oracle_check(graph, q, a)
+    pre = eng.stats.batches
+    for q, a in zip(qs, eng.submit_many(qs)):   # all hits now
+        oracle_check(graph, q, a)
+    assert eng.stats.batches == pre
+    assert eng.stats.cache_hits >= len(set(qs))
+
+
+def test_component_memo_reuse(graph):
+    """A COMPONENTS answer populates the component memo: later COMPONENTS
+    *and* REACHABILITY queries are served without a traversal."""
+    srcs = list(map(int, pick_sources(graph, 3, seed=5)))
+    eng = make_engine(graph, refill=False, reuse_components=True)
+    labels = eng.submit(Query(srcs[0], kind=QueryKind.COMPONENTS))
+    np.testing.assert_array_equal(labels, component_labels(graph))
+    pre = eng.stats.batches
+    r = eng.submit(Query(srcs[1], kind=QueryKind.REACHABILITY))
+    np.testing.assert_array_equal(r, reachable_mask(graph, srcs[1]))
+    lab2 = eng.submit(Query(srcs[2], kind=QueryKind.COMPONENTS))
+    np.testing.assert_array_equal(lab2, labels)
+    assert eng.stats.batches == pre          # no further traversals
+    assert eng.stats.component_hits >= 2
+
+
+def test_khop_feeds_neighbor_sampler(graph):
+    """KHOP_SAMPLE's node pool seeds NeighborSampler: the sampled batch's
+    seed layer is exactly the k-hop pool."""
+    src = int(pick_sources(graph, 1, seed=7)[0])
+    eng = make_engine(graph, refill=False)
+    sampler = NeighborSampler(graph, fanouts=(3, 2), seed=0)
+    batch, node_ids = eng.sample_khop(src, 2, sampler)
+    pool = khop_nodes(graph, src, 2)
+    np.testing.assert_array_equal(node_ids[: len(pool)], pool)
+    assert batch.nodes.shape[0] >= len(pool)
+
+
+# ------------------------------------------------- compile-away contract
+def test_bit_only_config_compiles_payload_away(graph):
+    """payload=False states carry zero-width payload planes and zero
+    payload wire counters -- the telemetry=False compile-away contract."""
+    from repro.core.partition import partition_graph
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    cfg = M.MSBFSConfig(n_queries=4, max_iters=40)
+    st_ = M.init_multi_state(pg, [0, 5], cfg)
+    assert st_.payload_n.shape[-1] == 0
+    assert st_.payload_d.shape[-1] == 0
+    assert st_.pay_bucket.shape[-1] == 0
+    assert st_.wire_pay_delegate.shape[-1] == 0
+    out = M.run_msbfs_emulated(B.device_view(pg), E.build_exchange_plan(pg),
+                               st_, cfg)
+    assert np.asarray(out.wire_pay_nn).size == 0
+    eng = make_engine(graph)
+    qs = [Query(int(s)) for s in pick_sources(graph, 4, seed=1)]
+    for q, a in zip(qs, eng.submit_many(qs)):
+        oracle_check(graph, q, a)
+    assert eng.stats.wire_pay_delegate_bytes == 0
+    assert eng.stats.wire_pay_nn_bytes == 0
+
+
+def test_payload_modes_require_payload_cfg(graph):
+    from repro.core.partition import partition_graph
+    pg = partition_graph(graph, th=32, p_rank=2, p_gpu=2)
+    cfg = M.MSBFSConfig(n_queries=4)
+    with pytest.raises(ValueError, match="payload"):
+        M.init_multi_state(pg, [0], cfg, payload_modes=["sssp"])
+
+
+# ----------------------------------------------------- typed validation
+def test_query_validation_error_names_limit():
+    with pytest.raises(QueryValidationError, match="MAX_TARGETS=8"):
+        Query(0, kind=QueryKind.MULTI_TARGET, targets=tuple(range(9)))
+    assert Query.MAX_TARGETS == 8
+    from repro.serve.queries import MAX_TARGETS
+    assert MAX_TARGETS == Query.MAX_TARGETS
+    assert issubclass(QueryValidationError, ValueError)
+
+
+def test_payload_kind_descriptors():
+    q = Query(3, kind=QueryKind.WEIGHTED_SSSP)
+    assert q.payload_mode == "sssp" and q.depth_cap is None
+    c = Query(3, kind=QueryKind.COMPONENTS)
+    assert c.payload_mode == "components"
+    k = Query(3, kind=QueryKind.KHOP_SAMPLE, max_depth=2)
+    assert k.payload_mode is None and k.depth_cap == 2
+    assert q.key("g") != c.key("g") != k.key("g")
+    assert PAYLOAD_KINDS == {QueryKind.WEIGHTED_SSSP, QueryKind.COMPONENTS}
+    with pytest.raises(ValueError):
+        Query(3, kind=QueryKind.KHOP_SAMPLE)       # k is required
+
+
+def test_stream_payload_guard(graph):
+    """A bit-only stream session rejects late payload submissions with a
+    drain-first error; a payload-opened stream serves all seven kinds."""
+    srcs = list(map(int, pick_sources(graph, 6, seed=3)))
+    eng = make_engine(graph, overlap=True)
+    eng.submit_stream([Query(srcs[0])])
+    with pytest.raises(ValueError, match="payload"):
+        eng.submit_stream([Query(srcs[1], kind=QueryKind.WEIGHTED_SSSP)])
+    eng.drain_stream()
+    eng.submit_stream(seven_kinds(graph, srcs))
+    for q, a in eng.drain_stream().items():
+        oracle_check(graph, q, a)
+
+
+# ------------------------------------------------------- kernel parity
+def test_payload_kernel_parity():
+    rng = np.random.default_rng(5)
+    ident = int(comm.COMBINE_SPECS["min_plus"].identity)
+    parents = rng.integers(-1, 40, size=(64, 5)).astype(np.int32)
+    payload = rng.integers(0, 50, size=(40, 8)).astype(np.int32)
+    payload[rng.random((40, 8)) < 0.3] = ident
+    weights = rng.integers(1, 16, size=(64, 5)).astype(np.int32)
+    active = (rng.random((64, 8)) < 0.7).astype(np.int32)
+    a = ops.ell_pull_payload(parents, payload, weights, active, force="ref")
+    b = ops.ell_pull_payload(parents, payload, weights, active,
+                             force="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    partials = rng.integers(0, 100, size=(3, 128)).astype(np.int32)
+    prev = rng.integers(0, 100, size=(128,)).astype(np.int32)
+    for wc in (True, False):
+        ra, ca = ops.payload_min_fold(partials, prev, force="ref",
+                                      with_count=wc)
+        rb, cb = ops.payload_min_fold(partials, prev, force="pallas",
+                                      with_count=wc)
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+        if wc:
+            np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+        else:
+            assert ca is None and cb is None
+
+
+# ------------------------------------------------------- sharded parity
+@needs4
+def test_sharded_payload_kinds_multidevice(graph):
+    """WEIGHTED_SSSP + COMPONENTS under a real 4-device shard_map mesh:
+    the payload nn exchange, the delegate pmin combine, and the fused lane
+    fold all run as true collectives and stay oracle-exact."""
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    srcs = list(map(int, pick_sources(graph, 4, seed=9)))
+    eng = make_engine(graph, mesh=mesh, refill=False)
+    assert eng.sharded
+    qs = [Query(srcs[0], kind=QueryKind.WEIGHTED_SSSP),
+          Query(srcs[1], kind=QueryKind.COMPONENTS),
+          Query(srcs[2]),
+          Query(srcs[3], kind=QueryKind.WEIGHTED_SSSP)]
+    for q, a in zip(qs, eng.submit_many(qs)):
+        oracle_check(graph, q, a)
+    assert eng.stats.wire_pay_delegate_bytes > 0
+
+
+@needs4
+def test_sharded_mixed_seven_kind_refill_multidevice(graph):
+    """All seven kinds through one sharded refill session (mid-flight
+    payload-lane reseeds under shard_map)."""
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    srcs = list(map(int, pick_sources(graph, 6, seed=3)))
+    eng = make_engine(graph, mesh=mesh)
+    assert eng.sharded
+    qs = seven_kinds(graph, srcs)
+    for q, a in zip(qs, eng.submit_many(qs)):
+        oracle_check(graph, q, a)
+    assert eng.stats.refills > 0
+    assert eng.stats.wire_pay_nn_bytes > 0
